@@ -1,0 +1,74 @@
+"""Shared benchmark utilities: datasets, fit wrapper, timing, CSV output."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.core import OuterConfig, fit
+from repro.data.synthetic import load_dataset, pad_to_block_multiple
+from repro.solvers import SolverConfig
+
+
+def bench_dataset(name="pol", max_n=800):
+    return load_dataset(name, max_n=max_n)
+
+
+def run_variant(
+    ds,
+    solver: str,
+    pathwise: bool,
+    warm: bool,
+    steps: int = 20,
+    probes: int = 32,
+    budget: float = 0.0,
+    block_size: int = 100,
+    batch_size: int = 100,
+    sgd_lr: float = 2.0,
+    precond_rank: int = 20,
+    tolerance: float = 0.01,
+    seed: int = 0,
+    eval_at_end: bool = True,
+):
+    """One (solver x estimator x warm-start [x budget]) cell. Returns dict."""
+    x, y = ds.x_train, ds.y_train
+    if solver in ("ap", "sgd"):
+        blk = block_size if solver == "ap" else batch_size
+        x, y, _ = pad_to_block_multiple(x, y, blk)
+    scfg = SolverConfig(
+        name=solver, tolerance=tolerance,
+        max_epochs=budget if budget > 0 else 1e9,
+        precond_rank=precond_rank, block_size=block_size,
+        batch_size=batch_size, learning_rate=sgd_lr,
+    )
+    cfg = OuterConfig(
+        estimator="pathwise" if pathwise else "standard",
+        warm_start=warm, num_probes=probes, num_rff_pairs=500,
+        solver=scfg, num_steps=steps, bm=256, bn=256,
+    )
+    res = fit(x, y, cfg, key=jax.random.PRNGKey(seed),
+              x_test=ds.x_test, y_test=ds.y_test,
+              eval_every=steps if eval_at_end else 0)
+    out = {
+        "solver": solver, "pathwise": pathwise, "warm": warm,
+        "budget": budget,
+        "total_time_s": res.wall_time_s,
+        "total_epochs": float(res.history["epochs"].sum()),
+        "total_iters": int(res.history["iters"].sum()),
+        "final_res_y": float(res.history["res_y"][-1]),
+        "final_res_z": float(res.history["res_z"][-1]),
+        "mean_res_z": float(res.history["res_z"].mean()),
+        "hypers": res.history["hypers"],
+        "res_z_per_step": res.history["res_z"],
+        "iters_per_step": res.history["iters"],
+    }
+    if eval_at_end and len(res.history["eval_llh"]):
+        out["test_llh"] = float(res.history["eval_llh"][-1])
+        out["test_rmse"] = float(res.history["eval_rmse"][-1])
+    return out
+
+
+def csv_line(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,28 @@
+"""Fig. 4: probe-count scaling. Using 4x more probes costs ~10% more time
+because kernel-matrix evaluations are shared across the batched systems.
+Measures wall time and epochs for s in {8, 16, 32, 64}.
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench_dataset, csv_line, run_variant
+
+
+def main(small: bool = True):
+    ds = bench_dataset("pol", max_n=512 if small else 2000)
+    steps = 8 if small else 25
+    base = None
+    for s in (8, 16, 32, 64):
+        r = run_variant(ds, "cg", pathwise=True, warm=True, steps=steps,
+                        probes=s, eval_at_end=False)
+        if base is None:
+            base = r["total_time_s"]
+        csv_line(
+            f"fig4/probes{s}",
+            r["total_time_s"] * 1e6 / steps,
+            f"epochs={r['total_epochs']:.1f};"
+            f"time_vs_s8={r['total_time_s']/base:.2f}x",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Matérn MVM backend microbenchmark + Pallas kernel working-set report.
+
+Wall-clock on CPU covers the jnp backends (dense vs streamed). The Pallas
+kernel runs in interpret mode here (correctness only — interpret wall time
+is meaningless), so its entry reports the STRUCTURAL roofline quantities of
+the BlockSpec tiling for TPU v5e instead: VMEM working set, per-tile
+arithmetic intensity, and the bound it implies.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_line
+from repro.gp.hyperparams import HyperParams
+from repro.gp.kernels_math import h_mvm_dense, h_mvm_streamed
+from repro.launch.mesh import HBM_BW, PEAK_BF16_FLOPS
+
+
+def _time(f, *args, reps=3):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def main(small: bool = True):
+    n, d, s = (2048, 8, 16) if small else (16384, 8, 65)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, d))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (n, s))
+    p = HyperParams.create(d, noise=0.3)
+
+    dense = jax.jit(lambda x, v: h_mvm_dense(x, v, p))
+    streamed = jax.jit(lambda x, v: h_mvm_streamed(x, v, p, block_rows=512))
+    t_dense = _time(dense, x, v)
+    t_streamed = _time(streamed, x, v)
+    flops = 2 * n * n * (d + s) + 10 * n * n  # distances + profile + MVM
+    csv_line("kernel/dense", t_dense * 1e6,
+             f"gflops={flops/t_dense/1e9:.1f}")
+    csv_line("kernel/streamed", t_streamed * 1e6,
+             f"gflops={flops/t_streamed/1e9:.1f};mem=O(block*n)")
+
+    # Pallas kernel structural report (TPU target; interpret-validated)
+    bm = bn = 256
+    s_pad = 128
+    vmem = (bm * d + bn * d + bn * s_pad + bm * bn + bm * s_pad) * 4
+    tile_flops = 2 * bm * bn * d + 10 * bm * bn + 2 * bm * bn * s_pad
+    tile_bytes = (bm * d + bn * d + bn * s_pad + bm * s_pad) * 4
+    intensity = tile_flops / tile_bytes
+    ridge = PEAK_BF16_FLOPS / HBM_BW
+    bound = "compute" if intensity > ridge else "memory"
+    csv_line(
+        "kernel/pallas_matern_mvm_structural", 0.0,
+        f"vmem_tile_bytes={vmem};intensity={intensity:.1f}flops/B;"
+        f"v5e_ridge={ridge:.0f};bound={bound};"
+        f"tile={bm}x{bn}xd{d}xs{s_pad}",
+    )
+
+
+if __name__ == "__main__":
+    main()

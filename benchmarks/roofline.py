@@ -1,0 +1,75 @@
+"""Aggregate artifacts/dryrun/*.json into the EXPERIMENTS.md roofline table.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
+prints a markdown table; ``--csv`` prints CSV instead.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_reports(dir: str, include_variants: bool = False):
+    out = []
+    for path in sorted(glob.glob(os.path.join(dir, "*.json"))):
+        if os.path.basename(path).startswith("_"):
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("variant") and not include_variants:
+            continue  # hillclimb variants live in EXPERIMENTS.md §Perf
+        out.append(r)
+    return out
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.2f}"
+
+
+def markdown_table(reports, mesh="single"):
+    rows = [r for r in reports if r["mesh"] == mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = ("| arch | shape | t_compute (ms) | t_memory (ms) | t_coll (ms) | "
+           "bottleneck | GiB/chip | MODEL_FLOPS/HLO | roofline frac |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(r['t_compute'])} | "
+            f"{fmt_ms(r['t_memory'])} | {fmt_ms(r['t_collective'])} | "
+            f"{r['bottleneck']} | {r['peak_bytes']/2**30:.2f} | "
+            f"{r['useful_fraction']:.3f} | {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args(argv)
+    reports = load_reports(args.dir)
+    if not reports:
+        print(f"(no dry-run reports under {args.dir})")
+        return
+    if args.csv:
+        for r in reports:
+            if r["mesh"] != args.mesh:
+                continue
+            print(f"roofline/{r['arch']}/{r['shape']},0.0,"
+                  f"bottleneck={r['bottleneck']};"
+                  f"t_comp_ms={r['t_compute']*1e3:.3f};"
+                  f"t_mem_ms={r['t_memory']*1e3:.3f};"
+                  f"t_coll_ms={r['t_collective']*1e3:.3f};"
+                  f"gib={r['peak_bytes']/2**30:.2f};"
+                  f"useful={r['useful_fraction']:.3f};"
+                  f"roofline={r['roofline_fraction']:.3f}")
+    else:
+        print(markdown_table(reports, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Benchmark entry point: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,...]
+
+Prints ``name,us_per_call,derived`` CSV lines (plus the roofline table from
+any dry-run artifacts present).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    "table1",
+    "fig3_initial_distance",
+    "fig4_probe_scaling",
+    "fig5_trajectories",
+    "fig6_warmstart_distance",
+    "fig9_budget",
+    "kernel_microbench",
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale runs (hours); default is CPU-quick")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+    failures = []
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.main(small=not args.full)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+        print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+
+    # roofline table (reads artifacts/dryrun if present)
+    try:
+        from benchmarks import roofline
+
+        print("# --- roofline (from dry-run artifacts) ---")
+        roofline.main(["--csv"])
+    except Exception:
+        failures.append("roofline")
+        traceback.print_exc()
+
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

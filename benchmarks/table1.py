@@ -1,0 +1,57 @@
+"""Table 1 (and Tables 2-6): solver x estimator x warm-start grid,
+solving to tolerance. Reports test LLH/RMSE, total time, solver epochs,
+and speed-ups relative to the standard/cold baseline per solver.
+
+CPU-feasible n; the paper's structural claims are scale-free:
+  * pathwise+warm is the fastest AP/SGD variant (up to 72x in the paper),
+  * CG gains less from warm starts (~2x) than AP/SGD,
+  * predictive metrics are indistinguishable across variants.
+"""
+from __future__ import annotations
+
+import json
+
+from benchmarks.common import bench_dataset, csv_line, run_variant
+
+VARIANTS = [(False, False), (True, False), (False, True), (True, True)]
+
+
+def main(small: bool = True, datasets=("pol",), out_json=None):
+    max_n = 800 if small else 4000
+    steps = 20 if small else 60
+    rows = []
+    for ds_name in datasets:
+        ds = bench_dataset(ds_name, max_n=max_n)
+        for solver in ("cg", "ap", "sgd"):
+            base_epochs = None
+            for pathwise, warm in VARIANTS:
+                r = run_variant(ds, solver, pathwise, warm, steps=steps)
+                r["dataset"] = ds_name
+                if (pathwise, warm) == (False, False):
+                    base_epochs = r["total_epochs"]
+                    base_time = r["total_time_s"]
+                r["speedup_epochs"] = base_epochs / max(r["total_epochs"], 1e-9)
+                r["speedup_time"] = base_time / max(r["total_time_s"], 1e-9)
+                rows.append(r)
+                name = (f"table1/{ds_name}/{solver}"
+                        f"/{'path' if pathwise else 'std'}"
+                        f"{'+warm' if warm else ''}")
+                csv_line(
+                    name,
+                    r["total_time_s"] * 1e6 / steps,
+                    f"epochs={r['total_epochs']:.1f};"
+                    f"speedup_epochs={r['speedup_epochs']:.2f}x;"
+                    f"llh={r.get('test_llh', float('nan')):.3f};"
+                    f"rmse={r.get('test_rmse', float('nan')):.4f}",
+                )
+    if out_json:
+        slim = [{k: v for k, v in r.items()
+                 if k not in ("hypers", "res_z_per_step", "iters_per_step")}
+                for r in rows]
+        with open(out_json, "w") as f:
+            json.dump(slim, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

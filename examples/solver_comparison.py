@@ -1,0 +1,29 @@
+"""Solver comparison (paper Table 1, one dataset): CG vs AP vs SGD under
+the four estimator/warm-start variants, solving to tolerance.
+
+    PYTHONPATH=src python examples/solver_comparison.py
+"""
+import sys
+
+sys.path.insert(0, ".")  # for benchmarks.common when run from repo root
+
+from benchmarks.common import bench_dataset, run_variant  # noqa: E402
+
+
+def main():
+    ds = bench_dataset("elevators", max_n=1500)
+    print(f"{'solver':6s} {'estimator':10s} {'warm':5s} "
+          f"{'epochs':>8s} {'time(s)':>8s} {'LLH':>8s}")
+    for solver in ("cg", "ap", "sgd"):
+        for pathwise in (False, True):
+            for warm in (False, True):
+                r = run_variant(ds, solver, pathwise, warm, steps=15,
+                                sgd_lr=2.0)
+                print(f"{solver:6s} {'pathwise' if pathwise else 'standard':10s} "
+                      f"{str(warm):5s} {r['total_epochs']:8.1f} "
+                      f"{r['total_time_s']:8.1f} "
+                      f"{r.get('test_llh', float('nan')):8.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""repro: iterative-GP linear-system solvers (NeurIPS 2024) at pod scale.
+
+Subpackages:
+  core        the paper's contribution (estimators, warm starts, budgets)
+  gp          kernel maths, RFF priors, exact baselines
+  solvers     CG | AP | SGD on a matrix-free H operator
+  kernels     Pallas TPU kernels (fused Matern MVM + VJP)
+  models      the 10 assigned LM architectures
+  distributed sharding, ring MVM, checkpointing, elastic, compression
+  configs     architecture registry (--arch <id>)
+  launch      mesh / dryrun / sweep / train / serve entry points
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,27 @@
+"""gp-iterative — the paper's own 'architecture'.
+
+Iterative GP marginal-likelihood optimisation (pathwise estimator + warm
+starts + epoch budgets) over a Matérn-3/2 kernel. Production shapes mirror
+the paper's large-data regime and run through the same mesh / dry-run /
+roofline machinery as the LM archs (DESIGN.md §5).
+"""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class GPArchConfig:
+    name: str = "gp-iterative"
+    kind: str = "matern32"
+    num_probes: int = 64
+    num_rff_pairs: int = 1000
+    estimator: str = "pathwise"
+    warm_start: bool = True
+    solver: str = "cg"
+    solver_epochs: int = 10  # budget per outer step (paper §5)
+    precond_rank: int = 0  # preconditioner off in the distributed path
+    block_rows: int = 1024  # per-device row tile for the ring MVM
+
+
+CONFIG = GPArchConfig()
+
+SMOKE = GPArchConfig(num_probes=8, num_rff_pairs=64, solver_epochs=5)

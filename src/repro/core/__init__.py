@@ -1,0 +1,48 @@
+"""The paper's contribution as a composable system:
+
+estimators (standard | pathwise) x warm starting x compute budgets, around
+any registered linear-system solver, driving Adam on the GP marginal
+likelihood.
+"""
+from repro.core.estimators import (
+    PATHWISE,
+    STANDARD,
+    ProbeState,
+    build_system_targets,
+    expected_initial_sqdistance,
+    init_probes,
+    probe_targets,
+)
+from repro.core.gradients import exact_grad_reference, mll_grad_estimate
+from repro.core.outer import (
+    OuterConfig,
+    OuterState,
+    exact_outer_step,
+    init_outer_state,
+    outer_step,
+)
+from repro.core.predict import (
+    Predictions,
+    mean_only_predict,
+    pathwise_predict,
+    predictive_metrics,
+)
+from repro.core.driver import (
+    FitResult,
+    evaluate,
+    fit,
+    init_hypers_heuristic,
+    pick_sgd_learning_rate,
+)
+
+__all__ = [
+    "PATHWISE", "STANDARD", "ProbeState", "build_system_targets",
+    "expected_initial_sqdistance", "init_probes", "probe_targets",
+    "exact_grad_reference", "mll_grad_estimate",
+    "OuterConfig", "OuterState", "exact_outer_step", "init_outer_state",
+    "outer_step",
+    "Predictions", "mean_only_predict", "pathwise_predict",
+    "predictive_metrics",
+    "FitResult", "evaluate", "fit", "init_hypers_heuristic",
+    "pick_sgd_learning_rate",
+]

@@ -1,0 +1,108 @@
+"""Standard and pathwise gradient-estimator probe machinery (paper §2.1, §3).
+
+A *probe state* carries the base randomness behind the right-hand sides of
+the batched linear system
+
+    H [v_y, v_1..v_s] = [y, b_1..b_s].
+
+* standard  (eq. 6):  b_j = z_j                with z_j ~ N(0, I)
+* pathwise  (eq. 11): b_j = xi_j = f(x) + eps  with f ~ GP(0,k) via RFF,
+                      eps = sigma * w_eps,  so xi_j ~ N(0, H_theta)
+
+Warm-start contract (paper §4, Appendix B): with warm starting the base
+randomness is drawn ONCE and kept fixed; only the deterministic
+reparameterisation tracks theta (RFF frequencies from fixed (z, u); noise
+eps = sigma * w_eps). Without warm starting, base randomness is resampled
+every outer step (the paper's unbiased regime).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.gp.hyperparams import HyperParams
+from repro.gp.rff import RFFState, init_rff, prior_sample_at
+
+STANDARD = "standard"
+PATHWISE = "pathwise"
+
+
+class ProbeState(NamedTuple):
+    """Fixed base randomness for either estimator (a pytree).
+
+    For ``standard``: ``z`` (n, s) are the probes; rff/w_eps are None.
+    For ``pathwise``: ``rff`` holds (z, u, w) for prior samples, ``w_eps``
+    (n, s) is the base noise draw; z is None.
+
+    ``estimator`` is registered as static aux data (not a leaf) so the
+    state can flow through jit-ted outer steps.
+    """
+
+    estimator: str
+    z: Optional[jax.Array]  # (n, s) standard probes
+    rff: Optional[RFFState]  # pathwise prior-sample machinery
+    w_eps: Optional[jax.Array]  # (n, s) base noise draws
+
+
+jax.tree_util.register_pytree_node(
+    ProbeState,
+    lambda s: ((s.z, s.rff, s.w_eps), s.estimator),
+    lambda est, children: ProbeState(est, *children),
+)
+
+
+def init_probes(
+    key: jax.Array,
+    estimator: str,
+    n: int,
+    d: int,
+    num_probes: int,
+    num_rff_pairs: int = 1000,
+    kind: str = "matern32",
+    dtype=jnp.float32,
+) -> ProbeState:
+    if estimator == STANDARD:
+        z = jax.random.normal(key, (n, num_probes), dtype=dtype)
+        return ProbeState(estimator=STANDARD, z=z, rff=None, w_eps=None)
+    if estimator == PATHWISE:
+        krff, keps = jax.random.split(key)
+        rff = init_rff(krff, num_rff_pairs, d, num_probes, kind=kind, dtype=dtype)
+        w_eps = jax.random.normal(keps, (n, num_probes), dtype=dtype)
+        return ProbeState(estimator=PATHWISE, z=None, rff=rff, w_eps=w_eps)
+    raise ValueError(f"unknown estimator {estimator!r}")
+
+
+def probe_targets(
+    probes: ProbeState, x: jax.Array, params: HyperParams
+) -> jax.Array:
+    """Right-hand sides b_1..b_s (n, s) for the current hyperparameters.
+
+    standard: constant in theta. pathwise: xi = Phi_theta(x) w + sigma*w_eps,
+    re-evaluated deterministically from the fixed base draws (paper App. B).
+    """
+    if probes.estimator == STANDARD:
+        return probes.z
+    f_x = prior_sample_at(x, probes.rff, params)  # (n, s)
+    return f_x + params.noise * probes.w_eps
+
+
+def build_system_targets(
+    probes: ProbeState, x: jax.Array, y: jax.Array, params: HyperParams
+) -> jax.Array:
+    """Full batched RHS [y | b_1..b_s] of shape (n, 1+s)."""
+    b = probe_targets(probes, x, params)
+    return jnp.concatenate([y[:, None], b], axis=1)
+
+
+def expected_initial_sqdistance(probes: ProbeState, h_dense: jax.Array) -> float:
+    """Theory check (eqs. 14/15): E ||0 - u||_H^2 for a probe system.
+
+    standard -> tr(H^-1); pathwise -> n. Used by tests/benchmarks only
+    (needs a dense H).
+    """
+    n = h_dense.shape[0]
+    if probes.estimator == STANDARD:
+        return float(jnp.trace(jnp.linalg.inv(h_dense)))
+    return float(n)

@@ -1,0 +1,175 @@
+"""The outer marginal-likelihood optimisation loop (paper Fig. 2, §2.1).
+
+Three-level hierarchy:
+
+    outer   Adam ascent on theta (softplus-reparameterised)
+    middle  standard | pathwise gradient estimator
+    inner   CG | AP | SGD linear-system solver (warm-started or not)
+
+One `outer_step` = build targets -> (maybe) warm-start from carry ->
+inner solve (to tolerance and/or epoch budget) -> gradient assembly ->
+Adam update -> new carry. The whole step is a single jitted function;
+the solver's while-loop runs under `lax.while_loop`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimators import (
+    PATHWISE,
+    STANDARD,
+    ProbeState,
+    build_system_targets,
+    init_probes,
+)
+from repro.core.gradients import mll_grad_estimate
+from repro.gp.hyperparams import HyperParams
+from repro.solvers import HOperator, SolverConfig, solve
+from repro.train.adam import AdamConfig, AdamState, adam_init, adam_update
+
+
+@dataclass(frozen=True)
+class OuterConfig:
+    estimator: str = PATHWISE  # standard | pathwise
+    warm_start: bool = True
+    num_probes: int = 64  # s (paper default)
+    num_rff_pairs: int = 1000  # m sin/cos pairs (2m features)
+    kind: str = "matern32"
+    solver: SolverConfig = field(default_factory=SolverConfig)
+    adam: AdamConfig = field(default_factory=lambda: AdamConfig(learning_rate=0.1))
+    num_steps: int = 100
+    backend: str = "streamed"  # HOperator backend
+    bm: int = 1024
+    bn: int = 1024
+
+
+class OuterState(NamedTuple):
+    """Everything that evolves across outer steps (a pytree; checkpointable)."""
+
+    params: HyperParams
+    adam: AdamState
+    probes: ProbeState
+    carry_v: jax.Array  # (n, 1+s) previous solutions (warm-start carry)
+    key: jax.Array
+    step: jax.Array  # int32
+
+    # Rolling diagnostics from the last step.
+    last_res_y: jax.Array
+    last_res_z: jax.Array
+    last_iters: jax.Array
+    last_epochs: jax.Array
+
+
+def init_outer_state(
+    key: jax.Array,
+    cfg: OuterConfig,
+    x: jax.Array,
+    init_params: Optional[HyperParams] = None,
+) -> OuterState:
+    n, d = x.shape
+    kp, kprobe, krest = jax.random.split(key, 3)
+    params = init_params if init_params is not None else HyperParams.create(d)
+    probes = init_probes(
+        kprobe, cfg.estimator, n, d, cfg.num_probes, cfg.num_rff_pairs,
+        kind=cfg.kind, dtype=x.dtype,
+    )
+    carry = jnp.zeros((n, 1 + cfg.num_probes), dtype=x.dtype)
+    z = jnp.zeros((), jnp.float32)
+    return OuterState(
+        params=params,
+        adam=adam_init(params),
+        probes=probes,
+        carry_v=carry,
+        key=krest,
+        step=jnp.zeros((), jnp.int32),
+        last_res_y=z, last_res_z=z,
+        last_iters=jnp.zeros((), jnp.int32), last_epochs=z,
+    )
+
+
+def _resample_probes(key: jax.Array, probes: ProbeState, x: jax.Array) -> ProbeState:
+    """Fresh base randomness with identical shapes (non-warm-start regime)."""
+    n, d = x.shape
+    if probes.estimator == STANDARD:
+        s = probes.z.shape[1]
+        return init_probes(key, STANDARD, n, d, s, dtype=x.dtype)
+    m = probes.rff.z.shape[0]
+    s = probes.rff.w.shape[1]
+    return init_probes(
+        key, PATHWISE, n, d, s, num_rff_pairs=m, kind=probes.rff.kind, dtype=x.dtype
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def outer_step(
+    state: OuterState, x: jax.Array, y: jax.Array, cfg: OuterConfig
+) -> tuple[OuterState, dict]:
+    """One outer MLL step: solve -> gradient -> Adam -> carry."""
+    key, ksolve, kprobe = jax.random.split(state.key, 3)
+
+    probes = state.probes
+    if not cfg.warm_start:
+        probes = _resample_probes(kprobe, probes, x)
+
+    targets = build_system_targets(probes, x, y, state.params)
+    v0 = state.carry_v if cfg.warm_start else None
+
+    op = HOperator(
+        x=x, params=state.params, kind=cfg.kind,
+        backend=cfg.backend, bm=cfg.bm, bn=cfg.bn,
+    )
+    res = solve(op, targets, v0, cfg.solver, key=ksolve)
+
+    grads, aux = mll_grad_estimate(
+        x, y, state.params, res.v, targets, cfg.estimator,
+        kind=cfg.kind, bm=cfg.bm, bn=cfg.bn,
+    )
+    new_params, new_adam = adam_update(
+        grads, state.adam, state.params, cfg.adam, maximize=True
+    )
+
+    new_state = OuterState(
+        params=new_params,
+        adam=new_adam,
+        probes=probes,
+        carry_v=res.v,
+        key=key,
+        step=state.step + 1,
+        last_res_y=res.res_y.astype(jnp.float32),
+        last_res_z=res.res_z.astype(jnp.float32),
+        last_iters=res.iters,
+        last_epochs=res.epochs.astype(jnp.float32),
+    )
+    metrics = {
+        "step": state.step,
+        "res_y": res.res_y,
+        "res_z": res.res_z,
+        "iters": res.iters,
+        "epochs": res.epochs,
+        "data_fit": aux.data_fit,
+        "hypers": new_params.flat(),
+        "grad_norm": jnp.sqrt(
+            sum(jnp.sum(g**2) for g in jax.tree.leaves(grads))
+        ),
+    }
+    return new_state, metrics
+
+
+def exact_outer_step(
+    params: HyperParams, adam: AdamState, x: jax.Array, y: jax.Array,
+    adam_cfg: AdamConfig, kind: str = "matern32",
+):
+    """Reference: one Adam step on the EXACT Cholesky MLL gradient.
+
+    Produces the paper's exact-optimisation trajectories (Figs. 5/8/11-13).
+    """
+    from repro.gp.exact import exact_mll
+
+    mll, grads = jax.value_and_grad(lambda p: exact_mll(x, y, p, kind=kind))(params)
+    new_params, new_adam = adam_update(grads, adam, params, adam_cfg, maximize=True)
+    return new_params, new_adam, mll

@@ -1,0 +1,24 @@
+from repro.distributed.checkpoint import (
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.distributed.compression import EFState, compress, decompress, ef_init
+from repro.distributed.elastic import reshard, row_sharded_builder
+from repro.distributed.sharding import (
+    DP,
+    FSDP,
+    TP,
+    constrain,
+    get_global_mesh,
+    set_global_mesh,
+    valid_spec,
+)
+
+__all__ = [
+    "latest_step", "restore_checkpoint", "save_checkpoint",
+    "EFState", "compress", "decompress", "ef_init",
+    "reshard", "row_sharded_builder",
+    "DP", "FSDP", "TP", "constrain", "get_global_mesh", "set_global_mesh",
+    "valid_spec",
+]

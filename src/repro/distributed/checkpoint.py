@@ -1,0 +1,124 @@
+"""Atomic, resumable checkpointing for arbitrary JAX pytrees.
+
+Design (fault-tolerance contract, DESIGN.md §6):
+
+* **Atomic**: each checkpoint is written to ``<dir>/tmp.<step>`` and
+  ``os.rename``d to ``<dir>/step_<step>.npz`` — a crash mid-write never
+  corrupts the latest restorable state.
+* **Self-describing enough**: leaves are stored positionally; restore takes
+  a *template* pytree (same treedef) so no pickling of Python structure is
+  required. A small JSON sidecar records step, leaf count and user metadata.
+* **Warm-start synergy** (the paper's amortisation doubles as FT): for the
+  GP path the checkpoint contains the solver carry ``V``, probe base
+  randomness and Adam state — a restarted job resumes with all accumulated
+  inner-solver progress intact.
+* **Multi-host**: only process 0 writes (`jax.process_index() == 0`); arrays
+  are fetched with `jax.device_get` (addressable shards must cover the
+  arrays — fully-sharded arrays on multi-host should be gathered via
+  `multihost_utils` by the caller; single-controller dry-run/CPU paths are
+  covered directly).
+* **Retention**: keep the last ``keep`` checkpoints, delete older ones.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_STEP_RE = re.compile(r"step_(\d+)\.npz$")
+
+
+def _is_writer() -> bool:
+    return jax.process_index() == 0
+
+
+def save_checkpoint(
+    ckpt_dir: str,
+    step: int,
+    tree: Any,
+    metadata: Optional[dict] = None,
+    keep: int = 3,
+) -> str:
+    """Atomically persist ``tree`` at ``step``. Returns the final path."""
+    if not _is_writer():
+        return ""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves = jax.tree.leaves(tree)
+    arrays = {f"leaf_{i}": np.asarray(jax.device_get(l)) for i, l in enumerate(leaves)}
+    tmp = os.path.join(ckpt_dir, f"tmp.{step}.npz")
+    final = os.path.join(ckpt_dir, f"step_{step}.npz")
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.rename(tmp, final)
+
+    meta = {"step": int(step), "num_leaves": len(leaves)}
+    meta.update(metadata or {})
+    meta_tmp = os.path.join(ckpt_dir, f"tmp.meta.{step}.json")
+    with open(meta_tmp, "w") as f:
+        json.dump(meta, f)
+    os.rename(meta_tmp, os.path.join(ckpt_dir, f"step_{step}.json"))
+
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(m.group(1))
+        for name in os.listdir(ckpt_dir)
+        if (m := _STEP_RE.search(name))
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    ckpt_dir: str,
+    template: Any,
+    step: Optional[int] = None,
+) -> tuple[Any, int]:
+    """Restore the pytree saved at ``step`` (default: latest).
+
+    ``template`` supplies the treedef; leaf dtypes/shapes are taken from the
+    stored arrays (allowing e.g. restore-then-reshard via device_put).
+    Raises FileNotFoundError if no checkpoint exists.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step}.npz")
+    with np.load(path) as data:
+        leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
+    treedef = jax.tree.structure(template)
+    if treedef.num_leaves != len(leaves):
+        raise ValueError(
+            f"template has {treedef.num_leaves} leaves, checkpoint has {len(leaves)}"
+        )
+    tmpl_leaves = jax.tree.leaves(template)
+    out = [
+        jax.numpy.asarray(l, dtype=t.dtype) if hasattr(t, "dtype") else l
+        for l, t in zip(leaves, tmpl_leaves)
+    ]
+    return jax.tree.unflatten(treedef, out), step
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(
+        int(m.group(1))
+        for name in os.listdir(ckpt_dir)
+        if (m := _STEP_RE.search(name))
+    )
+    for s in steps[:-keep] if keep > 0 else []:
+        for suffix in (".npz", ".json"):
+            p = os.path.join(ckpt_dir, f"step_{s}{suffix}")
+            if os.path.exists(p):
+                os.remove(p)

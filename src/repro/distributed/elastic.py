@@ -1,0 +1,51 @@
+"""Elastic re-sharding: move a checkpointed state between meshes.
+
+Degraded-pod fallback (DESIGN.md §6): the dry-run proves the same program
+compiles on 256 and 512 chips; this module moves the live state between
+those meshes. Because every state pytree in the framework is dense arrays
+with mesh-agnostic *rules* (PartitionSpec builders take the target mesh),
+elastic re-sharding is a `jax.device_put` per leaf — no layout surgery.
+
+Typical restart-on-smaller-fleet flow:
+    state, step = restore_checkpoint(dir, template)         # host arrays
+    state = reshard(state, new_mesh, spec_builder)          # place on mesh
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import valid_spec
+
+
+def reshard(
+    tree: Any,
+    mesh: Mesh,
+    spec_builder: Optional[Callable[[tuple, Any], tuple]] = None,
+) -> Any:
+    """device_put every leaf with specs from ``spec_builder(path, leaf)``.
+
+    ``spec_builder`` returns a per-dimension axis tuple (as used by
+    ``valid_spec``); default replicates everything.
+    """
+
+    def place(path, leaf):
+        spec = spec_builder(path, leaf) if spec_builder else ()
+        sh = NamedSharding(mesh, valid_spec(mesh, getattr(leaf, "shape", ()), spec))
+        return jax.device_put(leaf, sh)
+
+    return jax.tree_util.tree_map_with_path(place, tree)
+
+
+def row_sharded_builder(axes=("pod", "data", "model")):
+    """All leaves with ndim>=1 row-sharded over every mesh axis (GP state)."""
+
+    def builder(path, leaf):
+        nd = getattr(leaf, "ndim", 0)
+        if nd == 0:
+            return ()
+        return (axes,) + (None,) * (nd - 1)
+
+    return builder

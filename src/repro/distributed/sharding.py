@@ -1,0 +1,98 @@
+"""Mesh-aware sharding policy for the LM path.
+
+Axes convention (DESIGN.md §6):
+
+  single-pod mesh  (16, 16)      -> ("data", "model")
+  multi-pod mesh   (2, 16, 16)   -> ("pod", "data", "model")
+
+* batch / tokens  : sharded over ("pod", "data")   [DP]
+* weight TP dim   : sharded over "model"           [TP: d_ff, flattened q/kv
+                    out-features, vocab, expert ffn dim]
+* weight other dim: sharded over "data"            [FSDP/ZeRO-3 storage;
+                    XLA all-gathers at use; per-pod FSDP — pods keep their
+                    own replica and sync gradients across the pod axis]
+* attention       : head-parallel over "model" when num_heads divides, else
+                    Q-sequence-parallel (train) / KV-sequence-parallel
+                    (decode) — divisibility-robust for all 10 archs.
+
+`constrain` applies `with_sharding_constraint` against the process-global
+mesh if one is active, silently dropping axes that do not divide the
+corresponding dimension (so the same model code runs on 1-device CPU smoke
+tests and 512-device dry-runs).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_GLOBAL_MESH: Optional[Mesh] = None
+
+AxisSpec = Union[None, str, tuple]
+
+
+def set_global_mesh(mesh: Optional[Mesh]) -> None:
+    global _GLOBAL_MESH
+    _GLOBAL_MESH = mesh
+
+
+def get_global_mesh() -> Optional[Mesh]:
+    return _GLOBAL_MESH
+
+
+def axis_size(mesh: Mesh, axis: AxisSpec) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    return math.prod(mesh.shape[a] for a in axis)
+
+
+def _present(mesh: Mesh, axis: AxisSpec) -> AxisSpec:
+    """Drop mesh axes that the current mesh does not have (e.g. 'pod' on the
+    single-pod mesh); preserves tuple vs str structure."""
+    if axis is None:
+        return None
+    if isinstance(axis, str):
+        return axis if axis in mesh.shape else None
+    kept = tuple(a for a in axis if a in mesh.shape)
+    return kept if kept else None
+
+
+def valid_spec(mesh: Mesh, shape: Sequence[int], spec: Sequence[AxisSpec]) -> P:
+    """PartitionSpec with non-dividing / missing axes dropped per-dimension."""
+    out = []
+    for dim, axis in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        axis = _present(mesh, axis)
+        if axis is not None and dim % axis_size(mesh, axis) != 0:
+            axis = None
+        out.append(axis)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *spec: AxisSpec) -> jax.Array:
+    """with_sharding_constraint against the global mesh (no-op without one)."""
+    mesh = _GLOBAL_MESH
+    if mesh is None or math.prod(mesh.devices.shape) == 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, valid_spec(mesh, x.shape, spec))
+    )
+
+
+def named_sharding(mesh: Mesh, shape: Sequence[int], spec: Sequence[AxisSpec]):
+    return NamedSharding(mesh, valid_spec(mesh, shape, spec))
+
+
+# Logical axis names used by the model code; resolved to mesh axes here.
+DP = ("pod", "data")  # batch / tokens
+FSDP = "data"  # weight storage sharding (gathered at use)
+TP = "model"  # tensor-parallel weight dim
+
+
+def batch_spec(ndim: int) -> tuple:
+    """Batch-leading activation spec: (DP, None, ...)."""
+    return (DP,) + (None,) * (ndim - 1)

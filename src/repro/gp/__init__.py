@@ -1,0 +1,38 @@
+from repro.gp.hyperparams import HyperParams, softplus, softplus_inverse
+from repro.gp.kernels_math import (
+    h_mvm_dense,
+    h_mvm_streamed,
+    kernel_matrix,
+    kernel_mvm_streamed,
+    regularised_kernel_matrix,
+    scaled_sqdist,
+)
+from repro.gp.rff import RFFState, init_rff, prior_sample_at, rff_features
+from repro.gp.exact import (
+    exact_mll,
+    exact_mll_grad,
+    exact_posterior,
+    gaussian_loglik,
+    rmse,
+)
+
+__all__ = [
+    "HyperParams",
+    "softplus",
+    "softplus_inverse",
+    "h_mvm_dense",
+    "h_mvm_streamed",
+    "kernel_matrix",
+    "kernel_mvm_streamed",
+    "regularised_kernel_matrix",
+    "scaled_sqdist",
+    "RFFState",
+    "init_rff",
+    "prior_sample_at",
+    "rff_features",
+    "exact_mll",
+    "exact_mll_grad",
+    "exact_posterior",
+    "gaussian_loglik",
+    "rmse",
+]

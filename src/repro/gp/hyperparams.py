@@ -1,0 +1,86 @@
+"""GP hyperparameters with softplus reparameterisation (paper Appendix B).
+
+Each positive hyperparameter ``theta_k`` is stored as an unconstrained raw
+value ``nu_k`` with ``theta_k = softplus(nu_k) = log(1 + exp(nu_k))`` so the
+outer-loop Adam optimiser operates on R^{d_theta} (paper: "to facilitate
+unconstrained optimisation").
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def softplus(nu: jax.Array) -> jax.Array:
+    """Numerically stable log(1 + exp(nu))."""
+    return jnp.logaddexp(0.0, nu)
+
+
+def softplus_inverse(theta: jax.Array) -> jax.Array:
+    """Inverse of :func:`softplus`: nu = log(exp(theta) - 1), stable form."""
+    # For large theta, expm1(theta) overflows; use theta + log1p(-exp(-theta)).
+    theta = jnp.asarray(theta)
+    small = theta < 20.0
+    safe = jnp.where(small, theta, 1.0)
+    return jnp.where(small, jnp.log(jnp.expm1(safe)), theta + jnp.log1p(-jnp.exp(-theta)))
+
+
+class HyperParams(NamedTuple):
+    """Unconstrained GP hyperparameters (a pytree; leaves are raw values).
+
+    Attributes:
+      raw_lengthscales: shape (d,), one per input dimension.
+      raw_signal: scalar signal scale (sqrt of kernel variance).
+      raw_noise: scalar observation noise scale sigma.
+    """
+
+    raw_lengthscales: jax.Array
+    raw_signal: jax.Array
+    raw_noise: jax.Array
+
+    @property
+    def lengthscales(self) -> jax.Array:
+        return softplus(self.raw_lengthscales)
+
+    @property
+    def signal(self) -> jax.Array:
+        return softplus(self.raw_signal)
+
+    @property
+    def noise(self) -> jax.Array:
+        return softplus(self.raw_noise)
+
+    @property
+    def num_params(self) -> int:
+        return int(self.raw_lengthscales.shape[0]) + 2
+
+    @staticmethod
+    def create(
+        d: int,
+        lengthscale: float = 1.0,
+        signal: float = 1.0,
+        noise: float = 1.0,
+        dtype=jnp.float32,
+    ) -> "HyperParams":
+        """Constrained-space constructor (paper initialises at 1.0)."""
+        ls = jnp.full((d,), lengthscale, dtype=dtype)
+        return HyperParams(
+            raw_lengthscales=softplus_inverse(ls),
+            raw_signal=softplus_inverse(jnp.asarray(signal, dtype=dtype)),
+            raw_noise=softplus_inverse(jnp.asarray(noise, dtype=dtype)),
+        )
+
+    def constrained(self) -> dict:
+        return {
+            "lengthscales": self.lengthscales,
+            "signal": self.signal,
+            "noise": self.noise,
+        }
+
+    def flat(self) -> jax.Array:
+        """All constrained hyperparameters as one vector (for logging)."""
+        return jnp.concatenate(
+            [self.lengthscales, self.signal[None], self.noise[None]]
+        )

@@ -1,0 +1,98 @@
+"""Random Fourier features for approximate GP prior function samples.
+
+Used by pathwise conditioning (paper eq. 3) and the pathwise gradient
+estimator (paper §3, Appendix B): a prior sample is ``f(.) = phi(.) @ w``
+with ``w ~ N(0, I_{2m})`` and ``phi`` built from ``m`` sin/cos frequency
+pairs (paper uses m=1000 pairs, 2000 features total).
+
+Matérn-3/2 spectral sampling: a standard multivariate Student-t with 3
+degrees of freedom has characteristic function ``(1 + sqrt(3)|t|)
+exp(-sqrt(3)|t|)`` — exactly the Matérn-3/2 correlation — so frequencies are
+``omega = z * sqrt(3 / u) / ell`` with ``z ~ N(0, I_d)`` and ``u ~ chi^2_3``
+(one ``u`` per frequency, shared across dimensions). RBF uses ``omega = z/ell``.
+
+Warm-start contract (paper Appendix B): the *base* draws ``(z, u, w)`` are
+sampled ONCE and fixed; each outer step re-evaluates ``omega`` from the fixed
+base draws and the CURRENT lengthscales, so the right-hand sides of the linear
+systems track theta deterministically ("selecting a particular instance of a
+prior sample").
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.gp.hyperparams import HyperParams
+
+
+class RFFState(NamedTuple):
+    """Fixed base randomness for RFF prior samples (pytree).
+
+    ``kind`` is registered as static aux data (not a leaf) so RFFState can
+    flow through jit-ted functions.
+    """
+
+    z: jax.Array  # (m, d) standard normal
+    u: jax.Array  # (m,) chi^2_3 (matern32) or ones (rbf)
+    w: jax.Array  # (2m, s) feature weights, one column per prior sample
+    kind: str = "matern32"
+
+
+jax.tree_util.register_pytree_node(
+    RFFState,
+    lambda s: ((s.z, s.u, s.w), s.kind),
+    lambda kind, children: RFFState(*children, kind=kind),
+)
+
+
+def init_rff(
+    key: jax.Array,
+    num_pairs: int,
+    d: int,
+    num_samples: int,
+    kind: str = "matern32",
+    dtype=jnp.float32,
+) -> RFFState:
+    kz, ku, kw = jax.random.split(key, 3)
+    z = jax.random.normal(kz, (num_pairs, d), dtype=dtype)
+    if kind == "matern32":
+        # chi^2 with 3 dof = 2 * Gamma(shape=1.5, scale=1)
+        u = 2.0 * jax.random.gamma(ku, 1.5, (num_pairs,), dtype=dtype)
+    elif kind == "rbf":
+        u = jnp.ones((num_pairs,), dtype=dtype)
+    else:
+        raise ValueError(f"unknown kernel kind {kind!r}")
+    w = jax.random.normal(kw, (2 * num_pairs, num_samples), dtype=dtype)
+    return RFFState(z=z, u=u, w=w, kind=kind)
+
+
+def rff_frequencies(state: RFFState, params: HyperParams) -> jax.Array:
+    """Frequencies (m, d) for the current lengthscales."""
+    if state.kind == "matern32":
+        scale = jnp.sqrt(3.0 / state.u)[:, None]
+    else:
+        scale = 1.0
+    return state.z * scale / params.lengthscales
+
+
+def rff_features(
+    x: jax.Array, state: RFFState, params: HyperParams
+) -> jax.Array:
+    """Feature matrix phi(x) of shape (n, 2m); phi @ phi.T ~= K(x, x)."""
+    omega = rff_frequencies(state, params)  # (m, d)
+    proj = x @ omega.T  # (n, m)
+    m = state.z.shape[0]
+    amp = params.signal * jnp.sqrt(1.0 / m)
+    return amp * jnp.concatenate([jnp.cos(proj), jnp.sin(proj)], axis=-1)
+
+
+def prior_sample_at(
+    x: jax.Array, state: RFFState, params: HyperParams
+) -> jax.Array:
+    """Evaluate the s fixed prior function samples at x: (n, s).
+
+    O(n * m) per call (paper: "Both of these operations are O(n)").
+    """
+    return rff_features(x, state, params) @ state.w

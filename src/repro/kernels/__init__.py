@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for compute hot spots (DESIGN.md §4).
+
+matern/ — fused Matérn-3/2 kernel MVM with custom VJP: the inner-loop hot
+spot of every GP solver. The backward tile kernel doubles as the fused
+hyper-gradient sweep (all d+2 hyperparameter gradients share its distance
+tiles via the pre/post-scaling AD contract in ops.py).
+"""
+from repro.kernels.matern import h_mvm, h_mvm_ref, matern_mvm, matern_mvm_ref
+
+__all__ = ["matern_mvm", "h_mvm", "matern_mvm_ref", "h_mvm_ref"]

@@ -1,0 +1,4 @@
+from repro.kernels.matern.ops import h_mvm, matern_mvm
+from repro.kernels.matern.ref import h_mvm_ref, matern_mvm_ref
+
+__all__ = ["matern_mvm", "h_mvm", "matern_mvm_ref", "h_mvm_ref"]

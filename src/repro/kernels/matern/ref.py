@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the Pallas Matérn MVM (dense; small n only)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.gp.hyperparams import HyperParams
+from repro.gp.kernels_math import kernel_matrix
+
+
+def matern_mvm_ref(
+    x1: jax.Array, x2: jax.Array, v: jax.Array, params: HyperParams
+) -> jax.Array:
+    """Dense K(x1, x2) @ v — the correctness oracle."""
+    squeeze = v.ndim == 1
+    if squeeze:
+        v = v[:, None]
+    out = kernel_matrix(x1, x2, params, kind="matern32") @ v
+    return out[:, 0] if squeeze else out
+
+
+def h_mvm_ref(x: jax.Array, v: jax.Array, params: HyperParams) -> jax.Array:
+    return matern_mvm_ref(x, x, v, params) + (params.noise**2) * v

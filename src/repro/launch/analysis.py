@@ -1,0 +1,414 @@
+"""Trip-count-corrected roofline cost extraction.
+
+XLA's ``cost_analysis`` counts a ``lax.scan``/``while`` body ONCE, so the
+production (scanned) programs undercount flops/bytes/collectives by the trip
+counts. This module composes per-cell costs from separately-lowered pieces:
+
+  train   total = M * (A + (P-1) * B) + C
+            A = one-microbatch value_and_grad (its period scan counted once)
+            B = one period fwd+bwd           (the scan body's true cost)
+            C = optimiser update
+            M = microbatches, P = periods
+            (+ (L_enc-1) * B_enc for the encoder stack of enc-dec archs)
+  prefill total = A + (P-1) * B_fwd          (+ encoder correction)
+  decode  total = A + (P-1) * B_dec
+  gp      analytic tile composition (see gp_analysis)
+
+Every piece is an AOT-lowered SPMD module on the production mesh, so the
+per-chip numbers include partitioning effects and collectives. Memory comes
+from the production compile (scan does not change peak-memory truth).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import GP_SHAPES, LM_SHAPES, get_config
+from repro.launch.hlo_analysis import extract_cost, parse_collectives
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+
+    def __add__(self, o):
+        return Cost(
+            self.flops + o.flops,
+            self.bytes + o.bytes,
+            self.coll_bytes + o.coll_bytes,
+            {k: self.coll_counts.get(k, 0) + o.coll_counts.get(k, 0)
+             for k in set(self.coll_counts) | set(o.coll_counts)},
+        )
+
+    def __mul__(self, k):
+        return Cost(
+            self.flops * k, self.bytes * k, self.coll_bytes * k,
+            {key: v * k for key, v in self.coll_counts.items()},
+        )
+
+    __rmul__ = __mul__
+
+
+def _cost_of(lowered, chips: int) -> Cost:
+    compiled = lowered.compile()
+    flops, byts = extract_cost(compiled)
+    coll = parse_collectives(compiled.as_text(), chips)
+    return Cost(flops, byts, coll.bytes_per_chip, dict(coll.counts))
+
+
+def _period_shardings(cfg, mesh, params_abs, serving=False):
+    """Abstract single-period params + their shardings (leading axis removed)."""
+    from repro.models import param_shardings
+
+    one = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype),
+        params_abs["layers"],
+    )
+    full_sh = param_shardings(cfg, mesh, params_abs, serving=serving)["layers"]
+    one_sh = jax.tree.map(
+        lambda l, s: NamedSharding(mesh, P(*s.spec[1:])), one, full_sh
+    )
+    return one, one_sh
+
+
+def analysis_lm_cell(arch: str, shape_name: str, mesh, opts=None) -> tuple[Cost, dict]:
+    """Composed per-chip Cost for an LM cell + piece breakdown."""
+    from repro.distributed.sharding import DP, set_global_mesh, valid_spec
+    from repro.launch.dryrun import apply_opts
+    from repro.models import (
+        abstract_params,
+        batch_pspec,
+        cache_shardings,
+        input_specs,
+        param_shardings,
+    )
+    from repro.models.steps import _forward_loss, opt_shardings
+    from repro.models.transformer import _apply_block
+    from repro.train.adam import AdamConfig, adam_init, adam_update
+
+    opts = opts or {}
+    cfg = get_config(arch)
+    shape = LM_SHAPES[shape_name]
+    cfg, shape = apply_opts(cfg, shape, opts)
+    serving = bool(opts.get("serving_resident")) and shape.step != "train"
+    set_global_mesh(mesh)
+    chips = mesh.devices.size
+    params_abs = abstract_params(cfg)
+    p_sh = param_shardings(cfg, mesh, params_abs, serving=serving)
+    period_abs, period_sh = _period_shardings(
+        cfg, mesh, params_abs, serving=serving
+    )
+    pcount = cfg.num_periods
+    pieces = {}
+
+    cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+    def lower_period(batch_rows: int, seq: int, train: bool) -> Cost:
+        x_abs = jax.ShapeDtypeStruct((batch_rows, seq, cfg.d_model), cdt)
+        x_sh = NamedSharding(
+            mesh, valid_spec(mesh, x_abs.shape, (DP, None, None))
+        )
+        positions = jnp.arange(seq)
+
+        def apply_period(pp, x):
+            h = x
+            for i, spec in enumerate(cfg.pattern):
+                h = _apply_block(pp[f"block_{i}"], h, cfg, spec, positions, None)
+            return h
+
+        repl = NamedSharding(mesh, P())
+        if train:
+            fn = lambda pp, x: jnp.sum(
+                apply_period(pp, x).astype(jnp.float32)
+            )
+            g = jax.value_and_grad(fn, argnums=(0, 1))
+            # grads must come back SHARDED like their primals — otherwise
+            # XLA replicates them and the piece's bytes/collectives are
+            # inflated by the TP x FSDP factor.
+            jitted = jax.jit(g, in_shardings=(period_sh, x_sh),
+                             out_shardings=(repl, (period_sh, x_sh)))
+        else:
+            jitted = jax.jit(apply_period, in_shardings=(period_sh, x_sh),
+                             out_shardings=x_sh)
+        return _cost_of(jitted.lower(period_abs, x_abs), chips)
+
+    if shape.step == "train":
+        from repro.launch.dryrun import _num_microbatches
+
+        m = _num_microbatches(shape, mesh)
+        specs = input_specs(cfg, shape)["batch"]
+        mb = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(
+                (l.shape[0] // m,) + l.shape[1:], l.dtype
+            ),
+            specs,
+        )
+        mb_sh = batch_pspec(mb, mesh)
+        repl = NamedSharding(mesh, P())
+        grad_fn = jax.value_and_grad(lambda p, b: _forward_loss(p, cfg, b))
+        a = _cost_of(
+            jax.jit(grad_fn, in_shardings=(p_sh, mb_sh),
+                    out_shardings=(repl, p_sh)).lower(params_abs, mb),
+            chips,
+        )
+        rows = mb["tokens"].shape[0]
+        seq = shape.seq_len if not cfg.is_encdec else cfg.decoder_len
+        b_piece = lower_period(rows, seq, train=True)
+        opt_abs = jax.eval_shape(adam_init, params_abs)
+        o_sh = opt_shardings(mesh, p_sh, opt_abs)
+        acfg = AdamConfig(learning_rate=3e-4)
+        c = _cost_of(
+            jax.jit(
+                lambda g, o, p: adam_update(g, o, p, acfg),
+                in_shardings=(p_sh, o_sh, p_sh),
+                out_shardings=(p_sh, o_sh),
+            ).lower(params_abs, opt_abs, params_abs),
+            chips,
+        )
+        total = m * (a + (pcount - 1) * b_piece) + c
+        if cfg.is_encdec:  # encoder stack correction (scanned once in A)
+            enc_piece = lower_period_encoder(
+                cfg, mesh, rows, shape.seq_len, train=True,
+                period_args=(period_abs, period_sh), chips=chips,
+            )
+            total = total + m * (cfg.encoder.num_layers - 1) * enc_piece
+            pieces["enc_body"] = dataclasses.asdict(enc_piece)
+        pieces.update(
+            mb_grad=dataclasses.asdict(a),
+            period_body=dataclasses.asdict(b_piece),
+            optimizer=dataclasses.asdict(c),
+            multipliers={"microbatches": m, "periods": pcount},
+        )
+        return total, pieces
+
+    if shape.step == "prefill":
+        from repro.models import make_prefill_step
+
+        specs = input_specs(cfg, shape)["batch"]
+        b_sh = batch_pspec(specs, mesh)
+        step_fn = make_prefill_step(cfg)
+        logits_abs = jax.eval_shape(step_fn, params_abs, specs)
+        from repro.distributed.sharding import TP
+
+        out_sh = NamedSharding(
+            mesh, valid_spec(mesh, logits_abs.shape, (DP, None, TP))
+        )
+        a = _cost_of(
+            jax.jit(
+                step_fn, in_shardings=(p_sh, b_sh), out_shardings=out_sh
+            ).lower(params_abs, specs),
+            chips,
+        )
+        rows = shape.global_batch
+        seq = shape.seq_len if not cfg.is_encdec else cfg.decoder_len
+        b_piece = lower_period(rows, seq, train=False)
+        total = a + (pcount - 1) * b_piece
+        if cfg.is_encdec:
+            enc_piece = lower_period_encoder(
+                cfg, mesh, rows, shape.seq_len, train=False,
+                period_args=(period_abs, period_sh), chips=chips,
+            )
+            total = total + (cfg.encoder.num_layers - 1) * enc_piece
+            pieces["enc_body"] = dataclasses.asdict(enc_piece)
+        pieces.update(full_once=dataclasses.asdict(a),
+                      period_body=dataclasses.asdict(b_piece),
+                      multipliers={"periods": pcount})
+        return total, pieces
+
+    # decode
+    from repro.models import make_serve_step
+    from repro.models.transformer import init_cache
+
+    specs = input_specs(cfg, shape)
+    c_sh = cache_shardings(cfg, mesh, specs["cache"])
+    tok_sh = NamedSharding(
+        mesh, valid_spec(mesh, (shape.global_batch,), (DP,))
+    )
+    repl = NamedSharding(mesh, P())
+    from repro.distributed.sharding import TP
+
+    serve_fn = make_serve_step(cfg)
+    logits_abs, _ = jax.eval_shape(
+        serve_fn, params_abs, specs["cache"], specs["tokens"], specs["pos"]
+    )
+    log_sh = NamedSharding(mesh, valid_spec(mesh, logits_abs.shape, (DP, TP)))
+    a = _cost_of(
+        jax.jit(
+            serve_fn,
+            in_shardings=(p_sh, c_sh, tok_sh, repl),
+            out_shardings=(log_sh, c_sh),
+        ).lower(params_abs, specs["cache"], specs["tokens"], specs["pos"]),
+        chips,
+    )
+
+    # one-period decode body
+    period_cache = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), specs["cache"]
+    )
+    period_cache_sh = jax.tree.map(
+        lambda l, s: NamedSharding(mesh, P(*s.spec[1:])),
+        period_cache, c_sh,
+    )
+    x_abs = jax.ShapeDtypeStruct((shape.global_batch, 1, cfg.d_model), cdt)
+    x_sh = NamedSharding(mesh, valid_spec(mesh, x_abs.shape, (DP, None, None)))
+
+    def period_decode(pp, pc, x, pos):
+        from repro.models.layers import (
+            attention_decode,
+            cross_attention_decode,
+            mlp,
+            moe_ffn,
+            rms_norm,
+        )
+        from repro.models.ssm import mamba_decode
+        from repro.models.config import MAMBA
+
+        h = x
+        for i, spec in enumerate(cfg.pattern):
+            bp, bc = pp[f"block_{i}"], pc[f"block_{i}"]
+            if spec.kind == MAMBA:
+                y, _ = mamba_decode(
+                    bp["mamba"], rms_norm(h, bp["mamba"]["ln"], cfg.norm_eps),
+                    {"conv": bc["conv"], "ssm": bc["ssm"]}, cfg,
+                )
+            else:
+                y, _ = attention_decode(
+                    bp["attn"], rms_norm(h, bp["attn"]["ln"], cfg.norm_eps),
+                    {"k": bc["k"], "v": bc["v"]}, pos, cfg, spec,
+                )
+            h = h + y
+            if cfg.is_encdec and "cross" in bp:
+                h = h + cross_attention_decode(
+                    bp["cross"], rms_norm(h, bp["cross"]["ln"], cfg.norm_eps),
+                    bc, cfg,
+                )
+            if "ffn" in bp:
+                z = rms_norm(h, bp["ffn"]["ln"], cfg.norm_eps)
+                h = h + (moe_ffn(bp["ffn"], z, cfg)
+                         if (spec.moe and cfg.moe) else mlp(bp["ffn"], z, cfg))
+        return h
+
+    b_piece = _cost_of(
+        jax.jit(
+            period_decode,
+            in_shardings=(period_sh, period_cache_sh, x_sh, repl),
+            out_shardings=x_sh,
+        ).lower(period_abs, period_cache, x_abs, specs["pos"]),
+        chips,
+    )
+    total = a + (pcount - 1) * b_piece
+    pieces.update(full_once=dataclasses.asdict(a),
+                  period_body=dataclasses.asdict(b_piece),
+                  multipliers={"periods": pcount})
+    return total, pieces
+
+
+def lower_period_encoder(cfg, mesh, rows, seq, train, period_args, chips):
+    """One encoder layer fwd(+bwd) cost (whisper stack correction)."""
+    from repro.distributed.sharding import DP, valid_spec
+    from repro.models import param_shardings
+    from repro.models.config import ATTN_BIDIR, LayerSpec
+    from repro.models.transformer import _apply_block, abstract_params
+
+    params_abs = abstract_params(cfg)
+    enc_abs = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype),
+        params_abs["encoder"]["layers"],
+    )
+    full_sh = param_shardings(cfg, mesh, params_abs)["encoder"]["layers"]
+    enc_sh = jax.tree.map(
+        lambda l, s: NamedSharding(mesh, P(*s.spec[1:])), enc_abs, full_sh
+    )
+    cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    x_abs = jax.ShapeDtypeStruct((rows, seq, cfg.d_model), cdt)
+    x_sh = NamedSharding(mesh, valid_spec(mesh, x_abs.shape, (DP, None, None)))
+    spec = LayerSpec(kind=ATTN_BIDIR)
+    positions = jnp.arange(seq)
+
+    def apply_one(pp, x):
+        return _apply_block(pp["block_0"], x, cfg, spec, positions, None)
+
+    repl = NamedSharding(mesh, P())
+    if train:
+        fn = lambda pp, x: jnp.sum(apply_one(pp, x).astype(jnp.float32))
+        jitted = jax.jit(jax.value_and_grad(fn, argnums=(0, 1)),
+                         in_shardings=(enc_sh, x_sh),
+                         out_shardings=(repl, (enc_sh, x_sh)))
+    else:
+        jitted = jax.jit(apply_one, in_shardings=(enc_sh, x_sh),
+                         out_shardings=x_sh)
+    return _cost_of(jitted.lower(enc_abs, x_abs), chips)
+
+
+def analysis_gp_cell(shape_name: str, mesh, opts=None) -> tuple[Cost, dict]:
+    """GP cell: tile-composition analysis.
+
+    ring sweeps = epochs (CG scan) + 1 (initial residual) + 1 (grad fwd);
+    the grad backward re-runs each tile (remat) + its cotangent math
+    (~2x fwd flops). Rotation traffic: (x_loc + v_loc) bytes per step,
+    chips steps per sweep, one extra sweep-equivalent for AD transposes.
+    """
+    from repro.configs.gp_iterative import CONFIG as GP_CFG
+    from repro.gp.hyperparams import HyperParams
+    from repro.gp.kernels_math import _PROFILES, scaled_sqdist
+
+    opts = opts or {}
+    tile_dtype = (jnp.bfloat16 if opts.get("gp_tile_dtype") == "bfloat16"
+                  else jnp.float32)
+    shape = GP_SHAPES[shape_name]
+    chips = mesh.devices.size
+    n_loc = shape.n // chips
+    s = shape.num_probes
+    d = shape.d
+
+    params = HyperParams.create(d)
+
+    def tile(u, w, v):
+        ut = (u / params.lengthscales).astype(tile_dtype)
+        wt = (w / params.lengthscales).astype(tile_dtype)
+        r2 = scaled_sqdist(ut, wt, jnp.ones((), tile_dtype))
+        k = _PROFILES[GP_CFG.kind](r2, params.signal.astype(tile_dtype))
+        return jax.lax.dot(k, v.astype(tile_dtype),
+                           preferred_element_type=jnp.float32)
+
+    f32 = jnp.float32
+    u_abs = jax.ShapeDtypeStruct((n_loc, d), f32)
+    v_abs = jax.ShapeDtypeStruct((n_loc, 1 + s), f32)
+    t_fwd = _cost_of(jax.jit(tile).lower(u_abs, u_abs, v_abs), 1)
+
+    g = jax.grad(lambda u, w, v: jnp.sum(tile(u, w, v)), argnums=(0, 1, 2))
+    t_bwd = _cost_of(jax.jit(g).lower(u_abs, u_abs, v_abs), 1)
+
+    sweeps_fwd = shape.solver_epochs + 2
+    tiles_fwd = sweeps_fwd * chips
+    tiles_bwd = chips
+    total = tiles_fwd * t_fwd + tiles_bwd * t_bwd
+
+    itemsize = 2 if tile_dtype == jnp.bfloat16 else 4
+    rot_bytes = (n_loc * d + n_loc * (1 + s)) * itemsize
+    sweeps_comm = sweeps_fwd + 2  # AD transpose permutes
+    # Per chip: ``chips`` rotation steps per sweep, each moving rot_bytes.
+    total.coll_bytes += rot_bytes * chips * sweeps_comm
+    total.coll_counts["collective-permute"] = (
+        total.coll_counts.get("collective-permute", 0)
+        + sweeps_comm * chips
+    )
+    # CG column dots: all-reduce of (1+s) scalars per iteration — negligible
+    # bytes, counted for completeness.
+    total.coll_counts["all-reduce"] = shape.solver_epochs * 3
+    pieces = {
+        "tile_fwd": dataclasses.asdict(t_fwd),
+        "tile_bwd": dataclasses.asdict(t_bwd),
+        "multipliers": {
+            "tiles_fwd": tiles_fwd, "tiles_bwd": tiles_bwd,
+            "rot_bytes_per_step": rot_bytes,
+        },
+    }
+    return total, pieces

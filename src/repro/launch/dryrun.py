@@ -1,0 +1,325 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+)
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count on first init); REPRO_DRYRUN_DEVICES exists for fast CI runs, the
+production default is 512 placeholder host devices.
+
+For every cell this proves, without hardware:
+  * the pjit sharding config is coherent (lower+compile succeeds),
+  * it fits (memory_analysis -> bytes per device),
+  * and yields the roofline terms (cost_analysis + HLO collective parse).
+
+Results are written to artifacts/dryrun/<arch>__<shape>__<mesh>.json and
+aggregated by benchmarks/roofline.py into EXPERIMENTS.md tables.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import (
+    GP_SHAPES,
+    LM_SHAPES,
+    get_config,
+    runnable_cells,
+)
+from repro.launch.hlo_analysis import (
+    RooflineReport,
+    extract_cost,
+    extract_memory,
+    parse_collectives,
+)
+from repro.launch.mesh import make_production_mesh
+
+
+def _model_flop_tokens(cfg, shape, n_active) -> float:
+    """N_active-weighted token count. For enc-dec archs the encoder and
+    decoder process DIFFERENT sequence lengths, so weight the two stacks'
+    parameter counts by their own token counts (whisper: 4096 frames vs 448
+    text tokens)."""
+    b = shape.global_batch
+    if not cfg.is_encdec:
+        return n_active * b * shape.seq_len
+    mults = 3 if cfg.mlp_activation == "swiglu" else 2
+    enc_per_layer = (
+        cfg.d_model * (cfg.q_dim + 2 * cfg.kv_dim)
+        + cfg.q_dim * cfg.d_model
+        + mults * cfg.d_model * cfg.d_ff
+    )
+    n_enc = enc_per_layer * cfg.encoder.num_layers
+    n_dec = n_active - n_enc
+    # cross-attention K/V projections run over the ENCODER length
+    cross_kv = cfg.num_layers * 2 * cfg.d_model * cfg.kv_dim
+    n_dec = n_dec - cross_kv
+    return b * (
+        n_enc * shape.seq_len
+        + n_dec * cfg.decoder_len
+        + cross_kv * shape.seq_len
+    )
+
+
+def _num_microbatches(shape, mesh) -> int:
+    import math
+
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    per_dev = max(1, shape.global_batch // dp)
+    m = max(1, per_dev // shape.microbatch_rows)
+    while shape.global_batch % m != 0:  # scan needs exact division
+        m -= 1
+    return m
+
+
+def apply_opts(cfg, shape, opts):
+    """Apply hillclimb variant options to (cfg, shape)."""
+    import dataclasses as dc
+
+    opts = opts or {}
+    if opts.get("param_dtype"):
+        cfg = dc.replace(cfg, param_dtype=opts["param_dtype"])
+    if opts.get("remat") is not None:
+        cfg = dc.replace(cfg, remat=opts["remat"])
+    if opts.get("moe_per_expert_scatter"):
+        cfg = dc.replace(cfg, moe_single_scatter=False)
+    if opts.get("remat_policy"):
+        cfg = dc.replace(cfg, remat_policy=opts["remat_policy"])
+    if shape is not None and opts.get("microbatch_rows"):
+        shape = dc.replace(shape, microbatch_rows=opts["microbatch_rows"])
+    return cfg, shape
+
+
+def lower_lm_cell(arch: str, shape_name: str, mesh, opts=None) -> tuple:
+    """Returns (lowered, model_flops, notes)."""
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.distributed.sharding import set_global_mesh
+    from repro.models import (
+        abstract_params,
+        batch_pspec,
+        cache_shardings,
+        input_specs,
+        make_prefill_step,
+        make_serve_step,
+        make_train_step,
+        param_shardings,
+    )
+    from repro.models.steps import opt_shardings
+    from repro.train.adam import adam_init
+
+    opts = opts or {}
+    cfg = get_config(arch)
+    shape = LM_SHAPES[shape_name]
+    cfg, shape = apply_opts(cfg, shape, opts)
+    serving = bool(opts.get("serving_resident")) and shape.step != "train"
+    set_global_mesh(mesh)
+    params_abs = abstract_params(cfg)
+    p_sh = param_shardings(cfg, mesh, params_abs, serving=serving)
+    specs = input_specs(cfg, shape)
+    repl = NamedSharding(mesh, P())
+
+    n_active = cfg.active_params_per_token_layers()
+    notes = ""
+
+    if shape.step == "train":
+        m = _num_microbatches(shape, mesh)
+        notes = f"microbatches={m}"
+        step = make_train_step(cfg, num_microbatches=m)
+        opt_abs = jax.eval_shape(adam_init, params_abs)
+        o_sh = opt_shardings(mesh, p_sh, opt_abs)
+        b_sh = batch_pspec(specs["batch"], mesh)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, repl),
+            donate_argnums=(0, 1),
+        )
+        lowered = jitted.lower(params_abs, opt_abs, specs["batch"])
+        model_flops = 6.0 * _model_flop_tokens(cfg, shape, n_active)
+    elif shape.step == "prefill":
+        step = make_prefill_step(cfg)
+        b_sh = batch_pspec(specs["batch"], mesh)
+        from repro.distributed.sharding import DP, TP, valid_spec
+
+        logits_shape = jax.eval_shape(step, params_abs, specs["batch"])
+        out_sh = NamedSharding(
+            mesh, valid_spec(mesh, logits_shape.shape, (DP, None, TP))
+        )
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh), out_shardings=out_sh)
+        lowered = jitted.lower(params_abs, specs["batch"])
+        model_flops = 2.0 * _model_flop_tokens(cfg, shape, n_active)
+    else:  # decode
+        step = make_serve_step(cfg)
+        c_sh = cache_shardings(cfg, mesh, specs["cache"])
+        from repro.distributed.sharding import DP, TP, valid_spec
+
+        tok_sh = NamedSharding(mesh, valid_spec(mesh, (shape.global_batch,), (DP,)))
+        logits_abs, cache_abs2 = jax.eval_shape(
+            step, params_abs, specs["cache"], specs["tokens"], specs["pos"]
+        )
+        log_sh = NamedSharding(
+            mesh, valid_spec(mesh, logits_abs.shape, (DP, TP))
+        )
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, c_sh, tok_sh, repl),
+            out_shardings=(log_sh, c_sh),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(
+            params_abs, specs["cache"], specs["tokens"], specs["pos"]
+        )
+        tokens = shape.global_batch  # one token per sequence
+        model_flops = 2.0 * n_active * tokens
+    return lowered, model_flops, notes
+
+
+def lower_gp_cell(shape_name: str, mesh, opts=None) -> tuple:
+    import jax.numpy as jnp
+
+    from repro.distributed.gp_step import lower_gp_outer_step
+
+    opts = opts or {}
+    tile_dtype = (jnp.bfloat16 if opts.get("gp_tile_dtype") == "bfloat16"
+                  else jnp.float32)
+    shape = GP_SHAPES[shape_name]
+    lowered, model_flops, notes = lower_gp_outer_step(
+        shape, mesh, tile_dtype=tile_dtype
+    )
+    return lowered, model_flops, notes
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             analyze: bool = True, opts=None, variant: str = "") -> dict:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.devices.size
+    t0 = time.time()
+    if arch == "gp-iterative":
+        lowered, model_flops, notes = lower_gp_cell(shape_name, mesh, opts)
+    else:
+        lowered, model_flops, notes = lower_lm_cell(arch, shape_name, mesh, opts)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    # Raw (scan-bodies-counted-once) numbers from the production program.
+    flops, byts = extract_cost(compiled)
+    memory = extract_memory(compiled)
+    coll = parse_collectives(compiled.as_text(), chips)
+    pieces = {"raw_production": {
+        "flops": flops, "bytes": byts, "coll_bytes": coll.bytes_per_chip,
+    }}
+
+    # Trip-count-corrected composition (roofline truth); single-pod is the
+    # roofline mesh per spec, but the correction is mesh-agnostic.
+    if analyze:
+        from repro.launch.analysis import analysis_gp_cell, analysis_lm_cell
+
+        t0 = time.time()
+        if arch == "gp-iterative":
+            total, piece_detail = analysis_gp_cell(shape_name, mesh, opts)
+        else:
+            total, piece_detail = analysis_lm_cell(arch, shape_name, mesh, opts)
+        pieces.update(piece_detail)
+        flops, byts = total.flops, total.bytes
+        coll_bytes, coll_counts = total.coll_bytes, total.coll_counts
+        notes += f"; analysis={time.time()-t0:.1f}s"
+    else:
+        coll_bytes, coll_counts = coll.bytes_per_chip, coll.counts
+
+    report = RooflineReport(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_kind,
+        chips=chips,
+        flops_per_chip=flops,
+        bytes_per_chip=byts,
+        collective_bytes_per_chip=coll_bytes,
+        collective_counts=coll_counts,
+        collective_by_op=coll.by_op_bytes,
+        model_flops=model_flops,
+        notes=f"{notes}; lower={t_lower:.1f}s compile={t_compile:.1f}s",
+        **memory,
+    ).finalise()
+    report_dict = dataclasses.asdict(report)
+    report_dict["pieces"] = pieces
+    report_dict["variant"] = variant
+    report_dict["opts"] = opts or {}
+
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{variant}" if variant else ""
+    path = os.path.join(
+        out_dir, f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+    )
+    with open(path, "w") as f:
+        json.dump(report_dict, f, indent=2)
+    print(
+        f"[dryrun] {arch} x {shape_name} x {mesh_kind}: OK "
+        f"(chips={chips} peak={report.peak_bytes/2**30:.2f}GiB/chip "
+        f"t_comp={report.t_compute*1e3:.2f}ms t_mem={report.t_memory*1e3:.2f}ms "
+        f"t_coll={report.t_collective*1e3:.2f}ms bottleneck={report.bottleneck} "
+        f"useful={report.useful_fraction:.2f} roofline={report.roofline_fraction:.2f})"
+    )
+    print("memory_analysis:", json.dumps(memory))
+    print("cost_analysis: flops/chip=%.3e bytes/chip=%.3e" % (flops, byts))
+    print("collectives:", json.dumps(coll.counts))
+    return dataclasses.asdict(report)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    # Hillclimb variant knobs (EXPERIMENTS.md §Perf):
+    ap.add_argument("--variant", default="", help="suffix for the report file")
+    ap.add_argument("--param-dtype", default=None, choices=[None, "bfloat16"])
+    ap.add_argument("--serving-resident", action="store_true",
+                    help="decode/prefill: TP-resident weights (no FSDP)")
+    ap.add_argument("--microbatch-rows", type=int, default=None)
+    ap.add_argument("--gp-tile-dtype", default=None, choices=[None, "bfloat16"])
+    ap.add_argument("--moe-per-expert-scatter", action="store_true",
+                    help="naive per-expert MoE combine (A/B baseline)")
+    ap.add_argument("--remat-policy", default=None, choices=[None, "full", "dots"])
+    args = ap.parse_args(argv)
+    opts = {
+        "param_dtype": args.param_dtype,
+        "serving_resident": args.serving_resident,
+        "microbatch_rows": args.microbatch_rows,
+        "gp_tile_dtype": args.gp_tile_dtype,
+        "moe_per_expert_scatter": args.moe_per_expert_scatter,
+        "remat_policy": args.remat_policy,
+    }
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    ok = True
+    for mk in meshes:
+        try:
+            # Roofline analysis pieces are derived on the single-pod mesh
+            # (spec: the roofline table is single-pod; multi-pod proves the
+            # "pod" axis shards).
+            run_cell(args.arch, args.shape, mk, args.out,
+                     analyze=(mk == "single"), opts=opts,
+                     variant=args.variant)
+        except Exception:
+            ok = False
+            print(f"[dryrun] {args.arch} x {args.shape} x {mk}: FAILED",
+                  file=sys.stderr)
+            traceback.print_exc()
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

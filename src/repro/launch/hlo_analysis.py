@@ -1,0 +1,168 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute / memory terms come from ``compiled.cost_analysis()`` (per-device
+SPMD module: flops and bytes are PER CHIP). The collective term is parsed
+from the post-partitioning HLO text (``compiled.as_text()``): cost_analysis
+does not cover communication.
+
+Per-collective per-chip transmitted-byte model (bidirectional ring):
+  all-reduce       2 * out_bytes * (G-1)/G
+  all-gather       out_bytes * (G-1)/G
+  reduce-scatter   out_bytes * (G-1)        (= in_bytes * (G-1)/G)
+  all-to-all       out_bytes * (G-1)/G
+  collective-permute  out_bytes             (one hop)
+
+Terms (seconds, per spec §ROOFLINE):
+  compute    = flops_per_chip / peak_flops          [chips cancel]
+  memory     = bytes_per_chip / hbm_bw
+  collective = coll_bytes_per_chip / link_bw
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_BF16_FLOPS
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format [num_groups, group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return total_devices
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)
+    bytes_per_chip: float = 0.0
+    by_op_bytes: dict = field(default_factory=dict)
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, op = m.groups()
+        out_bytes = _shape_bytes(dtype, dims)
+        g = max(2, _group_size(line, total_devices))
+        if op == "all-reduce":
+            b = 2.0 * out_bytes * (g - 1) / g
+        elif op == "all-gather":
+            b = out_bytes * (g - 1) / g
+        elif op == "reduce-scatter":
+            b = out_bytes * (g - 1)
+        elif op == "all-to-all":
+            b = out_bytes * (g - 1) / g
+        else:  # collective-permute
+            b = float(out_bytes)
+        stats.counts[op] = stats.counts.get(op, 0) + 1
+        stats.by_op_bytes[op] = stats.by_op_bytes.get(op, 0.0) + b
+        stats.bytes_per_chip += b
+    return stats
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collective_counts: dict
+    collective_by_op: dict
+    # memory analysis (per chip, bytes)
+    argument_bytes: int = 0
+    output_bytes: int = 0
+    temp_bytes: int = 0
+    peak_bytes: int = 0
+    # derived terms (seconds)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    model_flops: float = 0.0  # 6 * N_active * D (global)
+    useful_fraction: float = 0.0  # model_flops / (flops_per_chip * chips)
+    roofline_fraction: float = 0.0  # t_compute_model / max(terms)
+    notes: str = ""
+
+    def finalise(self):
+        self.t_compute = self.flops_per_chip / PEAK_BF16_FLOPS
+        self.t_memory = self.bytes_per_chip / HBM_BW
+        self.t_collective = self.collective_bytes_per_chip / ICI_BW
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        self.bottleneck = max(terms, key=terms.get)
+        total_flops = self.flops_per_chip * self.chips
+        if total_flops > 0 and self.model_flops > 0:
+            self.useful_fraction = self.model_flops / total_flops
+            ideal = self.model_flops / (self.chips * PEAK_BF16_FLOPS)
+            self.roofline_fraction = ideal / max(
+                max(terms.values()), 1e-30
+            )
+        return self
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=2)
+
+
+def extract_cost(compiled) -> tuple[float, float]:
+    """(flops, bytes_accessed) per chip from compiled.cost_analysis()."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    return flops, byts
+
+
+def extract_memory(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    if isinstance(ma, (list, tuple)):
+        ma = ma[0]
+    get = lambda name: int(getattr(ma, name, 0) or 0)
+    arg = get("argument_size_in_bytes")
+    out = get("output_size_in_bytes")
+    tmp = get("temp_size_in_bytes")
+    alias = get("alias_size_in_bytes")
+    return {
+        "argument_bytes": arg,
+        "output_bytes": out,
+        "temp_bytes": tmp,
+        "peak_bytes": arg + out + tmp - alias,
+    }

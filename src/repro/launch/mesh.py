@@ -1,0 +1,27 @@
+"""Production mesh builders (spec: MULTI-POD DRY-RUN step 1).
+
+Functions, not module-level constants — importing this module never touches
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) = 256 chips/pod single-pod; (2, 16, 16) = 512 chips 2-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist locally (smoke tests: 1 CPU device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+# TPU v5e hardware model for the roofline (per chip).
+PEAK_BF16_FLOPS = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link

@@ -1,0 +1,98 @@
+"""CLI serving driver (reduced configs on local devices).
+
+LM archs: autoregressive generation with the KV/SSM cache serve_step.
+GP arch: pathwise-conditioning prediction server — amortised posterior
+samples from the training carry, zero extra linear solves per request
+(the paper's §3 amortisation).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def serve_lm(args):
+    from repro.configs import get_config
+    from repro.models import init_cache, init_params, make_serve_step
+    from repro.models.transformer import prefill_cross_cache
+
+    cfg = get_config(args.arch, smoke=True)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(key, cfg)
+    b, steps = args.batch, args.tokens
+    max_len = args.max_len
+    enc_len = 32 if cfg.is_encdec else 0
+    cache = init_cache(cfg, b, max_len, enc_len=enc_len)
+    if cfg.is_encdec:
+        frames = jax.random.normal(key, (b, enc_len, cfg.d_model)) * 0.3
+        cache = prefill_cross_cache(params, cfg, frames, cache)
+    step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+    toks = jnp.zeros((b,), jnp.int32)
+    t0 = time.perf_counter()
+    out = []
+    for pos in range(steps):
+        logits, cache = step(params, cache, toks, jnp.asarray(pos, jnp.int32))
+        toks = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        out.append(toks)
+    jax.block_until_ready(toks)
+    dt = time.perf_counter() - t0
+    print(f"[serve] {args.arch}: {steps} steps x batch {b} in {dt:.2f}s "
+          f"({steps*b/dt:.1f} tok/s); sample row: "
+          f"{[int(t[0]) for t in out[:16]]}")
+
+
+def serve_gp(args):
+    from repro.core import OuterConfig, fit, pathwise_predict, predictive_metrics
+    from repro.data.synthetic import load_dataset
+    from repro.solvers import SolverConfig
+
+    ds = load_dataset(args.dataset, max_n=args.max_n)
+    cfg = OuterConfig(
+        estimator="pathwise", warm_start=True, num_probes=32,
+        solver=SolverConfig(name="cg", max_epochs=100, precond_rank=0),
+        num_steps=args.train_steps, bm=512, bn=512,
+    )
+    res = fit(ds.x_train, ds.y_train, cfg, key=jax.random.PRNGKey(args.seed))
+    state = res.state
+    # "Serving": batched posterior queries, re-using the solver carry.
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        lo = (i * 64) % max(1, ds.x_test.shape[0] - 64)
+        xq = ds.x_test[lo : lo + 64]
+        pred = pathwise_predict(ds.x_train, xq, state.carry_v, state.probes,
+                                state.params, bm=cfg.bm, bn=cfg.bn)
+        jax.block_until_ready(pred.mean)
+    dt = time.perf_counter() - t0
+    m = predictive_metrics(ds.y_test[:64],
+                           pathwise_predict(ds.x_train, ds.x_test[:64],
+                                            state.carry_v, state.probes,
+                                            state.params),
+                           state.params)
+    print(f"[serve-gp] {args.requests} batched requests in {dt:.2f}s "
+          f"({args.requests*64/dt:.1f} q/s) — ZERO solves at serve time; "
+          f"rmse={float(m['rmse']):.4f} llh={float(m['llh']):.4f}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="gp-iterative")
+    ap.add_argument("--dataset", default="pol")
+    ap.add_argument("--max-n", type=int, default=2000)
+    ap.add_argument("--train-steps", type=int, default=10)
+    ap.add_argument("--requests", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.arch == "gp-iterative":
+        serve_gp(args)
+    else:
+        serve_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Run the full dry-run sweep: every runnable (arch x shape) x both meshes.
+
+Each cell runs in a fresh subprocess (jax device-count lock + memory
+hygiene); completed cells are skipped on re-run, so the sweep is resumable.
+
+    PYTHONPATH=src python -m repro.launch.sweep --out artifacts/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import runnable_cells
+
+
+def cell_done(out_dir: str, arch: str, shape: str, mesh: str) -> bool:
+    return os.path.exists(os.path.join(out_dir, f"{arch}__{shape}__{mesh}.json"))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--only-arch", default=None)
+    args = ap.parse_args(argv)
+
+    cells = [c for c in runnable_cells() if c[2] == "run"]
+    if args.only_arch:
+        cells = [c for c in cells if c[0] == args.only_arch]
+    meshes = args.meshes.split(",")
+    failures = []
+    t_start = time.time()
+    for arch, shape, _ in cells:
+        for mesh in meshes:
+            if cell_done(args.out, arch, shape, mesh):
+                print(f"[sweep] skip (done): {arch} x {shape} x {mesh}")
+                continue
+            t0 = time.time()
+            cmd = [
+                sys.executable, "-m", "repro.launch.dryrun",
+                "--arch", arch, "--shape", shape, "--mesh", mesh,
+                "--out", args.out,
+            ]
+            print(f"[sweep] RUN {arch} x {shape} x {mesh}", flush=True)
+            try:
+                r = subprocess.run(
+                    cmd, capture_output=True, text=True, timeout=args.timeout,
+                    env={**os.environ, "PYTHONPATH": "src"},
+                )
+                ok = r.returncode == 0
+            except subprocess.TimeoutExpired:
+                ok = False
+                r = None
+            dt = time.time() - t0
+            if ok:
+                print(f"[sweep] OK  {arch} x {shape} x {mesh} ({dt:.0f}s)",
+                      flush=True)
+            else:
+                failures.append((arch, shape, mesh))
+                tail = (r.stderr or r.stdout)[-2000:] if r else "TIMEOUT"
+                print(f"[sweep] FAIL {arch} x {shape} x {mesh} ({dt:.0f}s)\n"
+                      f"{tail}", flush=True)
+    print(f"[sweep] finished in {(time.time()-t_start)/60:.1f} min; "
+          f"{len(failures)} failures: {failures}")
+    with open(os.path.join(args.out, "_sweep_status.json"), "w") as f:
+        json.dump({"failures": failures}, f)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+from repro.models.config import (
+    ATTN_BIDIR,
+    ATTN_CHUNKED,
+    ATTN_FULL,
+    ATTN_SWA,
+    MAMBA,
+    EncoderConfig,
+    FrontendConfig,
+    LayerSpec,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+)
+from repro.models.transformer import (
+    abstract_params,
+    decode_step,
+    encode,
+    forward_encdec,
+    forward_lm,
+    init_cache,
+    init_params,
+)
+from repro.models.steps import (
+    batch_pspec,
+    cache_shardings,
+    concrete_batch,
+    input_specs,
+    lm_loss,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    param_pspec_tree,
+    param_shardings,
+)
+
+__all__ = [
+    "ATTN_BIDIR", "ATTN_CHUNKED", "ATTN_FULL", "ATTN_SWA", "MAMBA",
+    "EncoderConfig", "FrontendConfig", "LayerSpec", "ModelConfig",
+    "MoEConfig", "SSMConfig",
+    "abstract_params", "decode_step", "encode", "forward_encdec",
+    "forward_lm", "init_cache", "init_params",
+    "batch_pspec", "cache_shardings", "concrete_batch", "input_specs",
+    "lm_loss", "make_prefill_step", "make_serve_step", "make_train_step",
+    "param_pspec_tree", "param_shardings",
+]

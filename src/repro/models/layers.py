@@ -1,0 +1,346 @@
+"""Transformer / SSM building blocks shared by all 10 assigned architectures.
+
+Pure functions over nested-dict parameter pytrees (fp32 storage, bf16
+compute). Every block has a *train* path (full sequence) and a *decode* path
+(one token against a cache). Sharding is expressed with
+`repro.distributed.sharding.constrain`, so the same code runs on a 1-device
+CPU smoke test and the 512-chip dry-run mesh.
+
+Attention parallelism policy (divisibility-robust across the pool):
+  * head-parallel over "model" when num_(kv_)heads % tp == 0
+  * otherwise sequence-parallel: Q-rows (train) / KV-cache rows (decode)
+    are sharded over "model"; XLA inserts the distributed-softmax
+    collectives (all-reduce of max / sum — the flash-decoding combine).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import (
+    DP,
+    TP,
+    axis_size,
+    constrain,
+    get_global_mesh,
+)
+from repro.models.config import (
+    ATTN_BIDIR,
+    ATTN_CHUNKED,
+    ATTN_FULL,
+    ATTN_SWA,
+    MAMBA,
+    LayerSpec,
+    ModelConfig,
+)
+
+NEG_INF = -1e30
+
+
+def _tp_size() -> int:
+    mesh = get_global_mesh()
+    return axis_size(mesh, TP) if mesh is not None else 1
+
+
+# --------------------------------------------------------------------------
+# Normalisation, positions
+# --------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    i = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    angles = pos / jnp.power(10_000.0, 2.0 * i / dim)
+    emb = jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], axis=-1)
+    return emb.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+def _attn_mask(
+    seq_len: int, kind: str, window: int, dtype=jnp.float32
+) -> Optional[jax.Array]:
+    """(S, S) additive mask for the train path (None = no masking)."""
+    if kind == ATTN_BIDIR:
+        return None
+    i = jnp.arange(seq_len)[:, None]
+    j = jnp.arange(seq_len)[None, :]
+    allowed = j <= i  # causal
+    if kind == ATTN_SWA and window > 0:
+        allowed &= (i - j) < window
+    elif kind == ATTN_CHUNKED and window > 0:
+        allowed &= (i // window) == (j // window)
+    return jnp.where(allowed, 0.0, NEG_INF).astype(dtype)
+
+
+def _gqa_scores_and_out(q, k, v, mask, scale):
+    """q: (B,S,H,hd); k,v: (B,T,KV,hd). Returns (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    q = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum(
+        "bskgd,btkd->bkgst", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if mask is not None:
+        scores = scores + mask  # mask broadcasts over (b, kv, g)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+def attention_train(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    positions: jax.Array,
+) -> jax.Array:
+    """Full-sequence (GQA) attention; x: (B, S, D)."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    xc = x.astype(jnp.bfloat16) if cfg.compute_dtype == "bfloat16" else x
+    w = lambda name: params[name].astype(xc.dtype)
+
+    q = xc @ w("wq")
+    k = xc @ w("wk")
+    v = xc @ w("wv")
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    tp = _tp_size()
+    if h % tp == 0 and kv % tp == 0:
+        q = constrain(q, DP, None, TP, None)
+        k = constrain(k, DP, None, TP, None)
+        v = constrain(v, DP, None, TP, None)
+    else:  # sequence-parallel fallback (gemma3 8H, whisper 20H)
+        q = constrain(q, DP, TP, None, None)
+        k = constrain(k, DP, None, None, None)
+        v = constrain(v, DP, None, None, None)
+
+    mask = _attn_mask(s, spec.kind, spec.window, dtype=jnp.float32)
+    out = _gqa_scores_and_out(q, k, v, mask, 1.0 / math.sqrt(hd))
+    out = out.reshape(b, s, h * hd)
+    return (out @ w("wo")).astype(x.dtype)
+
+
+def cross_attention_train(
+    params: dict, x: jax.Array, enc: jax.Array, cfg: ModelConfig
+) -> jax.Array:
+    """Decoder cross-attention (whisper); x: (B,S,D), enc: (B,T,D)."""
+    b, s, d = x.shape
+    t = enc.shape[1]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    xc = x.astype(jnp.bfloat16) if cfg.compute_dtype == "bfloat16" else x
+    ec = enc.astype(xc.dtype)
+    w = lambda name: params[name].astype(xc.dtype)
+    q = (xc @ w("wq")).reshape(b, s, h, hd)
+    k = (ec @ w("wk")).reshape(b, t, kv, hd)
+    v = (ec @ w("wv")).reshape(b, t, kv, hd)
+    out = _gqa_scores_and_out(q, k, v, None, 1.0 / math.sqrt(hd))
+    return (out.reshape(b, s, h * hd) @ w("wo")).astype(x.dtype)
+
+
+def attention_decode(
+    params: dict,
+    x: jax.Array,  # (B, 1, D) current token hidden
+    cache: dict,  # {"k": (B, S_max, KV, hd), "v": ...}
+    pos: jax.Array,  # scalar int32: index of the current token
+    cfg: ModelConfig,
+    spec: LayerSpec,
+) -> tuple[jax.Array, dict]:
+    b, _, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    s_max = cache["k"].shape[1]
+    xc = x.astype(jnp.bfloat16) if cfg.compute_dtype == "bfloat16" else x
+    w = lambda name: params[name].astype(xc.dtype)
+
+    q = xc @ w("wq")
+    k_new = xc @ w("wk")
+    v_new = xc @ w("wv")
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k_new = k_new + params["bk"].astype(k_new.dtype)
+        v_new = v_new + params["bv"].astype(v_new.dtype)
+    q = q.reshape(b, 1, h, hd)
+    k_new = k_new.reshape(b, 1, kv, hd)
+    v_new = v_new.reshape(b, 1, kv, hd)
+    if cfg.use_rope:
+        p1 = pos[None] if pos.ndim == 0 else pos
+        q = rope(q, p1, cfg.rope_theta)
+        k_new = rope(k_new, p1, cfg.rope_theta)
+
+    # Windowed layers use a RING-BUFFER cache of length min(window, s_max):
+    # slot j holds absolute position pos - ((pos - j) mod W), always inside
+    # the attention window. This keeps long_500k local layers at O(window)
+    # memory AND avoids dynamic-slicing a sequence-sharded cache (which the
+    # SPMD partitioner can only realise as an all-gather of the full cache).
+    windowed = (
+        spec.kind in (ATTN_SWA, ATTN_CHUNKED)
+        and spec.window > 0
+        and s_max <= spec.window
+    )
+    slot = pos % s_max if windowed else pos
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0)
+    )
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0)
+    )
+    k_use, v_use = k_cache, v_cache
+
+    j = jnp.arange(s_max)
+    if not windowed:
+        valid = j <= pos
+    elif spec.kind == ATTN_SWA:
+        # every written slot is inside the sliding window by construction
+        valid = jnp.logical_or(j <= pos, pos >= s_max)
+    else:  # chunked: only slots written in the current chunk
+        valid = j <= (pos % s_max)
+
+    tp = _tp_size()
+    if kv % tp == 0:
+        k_use = constrain(k_use, DP, None, TP, None)
+        v_use = constrain(v_use, DP, None, TP, None)
+    else:  # KV-sequence sharding: flash-decoding style distributed softmax
+        k_use = constrain(k_use, DP, TP, None, None)
+        v_use = constrain(v_use, DP, TP, None, None)
+
+    mask = jnp.where(valid[None, :], 0.0, NEG_INF)[:, None, None, None, :]
+    out = _gqa_scores_and_out(q, k_use, v_use, mask, 1.0 / math.sqrt(hd))
+    out = out.reshape(b, 1, h * hd)
+    y = (out @ w("wo")).astype(x.dtype)
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def cross_attention_decode(
+    params: dict, x: jax.Array, cache: dict, cfg: ModelConfig
+) -> jax.Array:
+    """Cross-attention against precomputed encoder K/V (whisper decode)."""
+    b = x.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    xc = x.astype(jnp.bfloat16) if cfg.compute_dtype == "bfloat16" else x
+    w = lambda name: params[name].astype(xc.dtype)
+    q = (xc @ w("wq")).reshape(b, 1, h, hd)
+    out = _gqa_scores_and_out(
+        q, cache["ck"].astype(xc.dtype), cache["cv"].astype(xc.dtype),
+        None, 1.0 / math.sqrt(hd),
+    )
+    return (out.reshape(b, 1, h * hd) @ w("wo")).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# FFN: dense + MoE
+# --------------------------------------------------------------------------
+def _ffn_apply(p: dict, x: jax.Array, activation: str) -> jax.Array:
+    """x: (..., D) -> (..., D), weights fetched from p (fp32->compute dtype)."""
+    w = lambda name: p[name].astype(x.dtype)
+    if activation == "swiglu":
+        g = jax.nn.silu(x @ w("wi_gate"))
+        u = x @ w("wi_up")
+        h = constrain(g * u, DP, None, TP)
+        return h @ w("wo")
+    h = jax.nn.gelu(x @ w("wi"))
+    h = constrain(h, DP, None, TP)
+    return h @ w("wo")
+
+
+def mlp(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xc = x.astype(jnp.bfloat16) if cfg.compute_dtype == "bfloat16" else x
+    return _ffn_apply(params, xc, cfg.mlp_activation).astype(x.dtype)
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Top-k MoE with static per-expert capacity (loop-over-experts dispatch).
+
+    Instead of the GShard (B,S,E,C) dispatch one-hot — O(B*S*E*C) memory —
+    each expert gathers its top-C tokens (lax.top_k on its gate column) and
+    scatter-adds its output. Capacity C = ceil(S * top_k * cf / E); lower-
+    weight overflow tokens are dropped (standard capacity semantics).
+    Expert FFN weights are stacked (E, D, F) with F sharded over "model".
+    """
+    moe = cfg.moe
+    b, s, d = x.shape
+    e, k = moe.num_experts, moe.top_k
+    xc = x.astype(jnp.bfloat16) if cfg.compute_dtype == "bfloat16" else x
+    # Keep the dispatch operands batch-sharded only: gathers/scatters over
+    # the token dim must not see a model-sharded feature dim (SPMD gather
+    # partitioning cannot slice a sharded operand dim).
+    xc = constrain(xc, DP, None, None)
+
+    router_logits = (
+        xc.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    )  # (B,S,E) in fp32 for a stable softmax
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, k)  # (B,S,k)
+    top_vals = top_vals / jnp.sum(top_vals, axis=-1, keepdims=True)
+
+    # Per-expert combine weight (B,S): sum of top-k weights routed to e.
+    onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)  # (B,S,k,E)
+    combine = jnp.einsum("bske,bsk->bse", onehot, top_vals)  # (B,S,E)
+
+    cap = max(1, int(math.ceil(s * k * moe.capacity_factor / e)))
+    cap = min(cap, s)
+    batch_ix = jnp.arange(b)[:, None]
+    outs, idxs = [], []
+    for ei in range(e):
+        w_e = combine[:, :, ei]  # (B,S)
+        scores, idx = jax.lax.top_k(w_e, cap)  # (B,C)
+        idx = constrain(idx, DP, None)
+        xg = jnp.take_along_axis(xc, idx[:, :, None], axis=1)  # (B,C,D)
+        xg = constrain(xg, DP, None, None)
+        pe = {
+            key: params[key][ei]
+            for key in params
+            if key.startswith("wi") or key == "wo"
+        }
+        out = _ffn_apply(pe, xg, cfg.mlp_activation)  # (B,C,D)
+        out = constrain(out, DP, None, None)
+        outs.append(out * scores[:, :, None].astype(out.dtype))
+        idxs.append(idx)
+    if cfg.moe_single_scatter:
+        # ONE combined scatter-add: scattering per expert would read+write
+        # the full (B,S,D) output E times (E x the combine HBM traffic).
+        all_out = jnp.concatenate(outs, axis=1)  # (B, E*C, D)
+        all_idx = jnp.concatenate(idxs, axis=1)  # (B, E*C)
+        y = jnp.zeros((b, s, d), dtype=xc.dtype)
+        y = y.at[batch_ix, all_idx].add(all_out)
+    else:  # naive per-expert combine (baseline for the §Perf A/B)
+        y = jnp.zeros((b, s, d), dtype=xc.dtype)
+        for out, idx in zip(outs, idxs):
+            y = y.at[batch_ix, idx].add(out)
+    y = constrain(y, DP, None, None)
+    if moe.shared_expert:
+        shared = {key[7:]: params[key] for key in params if key.startswith("shared_")}
+        y = y + _ffn_apply(shared, xc, cfg.mlp_activation)
+    return y.astype(x.dtype)

@@ -1,0 +1,200 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+TPU adaptation (DESIGN.md §3): the SSD *chunked* train path is used instead
+of the CUDA selective-scan kernel — within a chunk the recurrence becomes
+dense (masked) matmuls that map onto the MXU; across chunks a short
+`lax.scan` carries the (heads, head_dim, d_state) state. This is the
+algorithm the SSD paper itself advocates for matmul hardware.
+
+Decode is the O(1) recurrence: h' = h * exp(dt*A) + dt * (B outer x);
+y = C . h + D*x, plus a rolling depthwise-conv state.
+
+Single B/C group (n_groups=1), following mamba2-780m.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import DP, TP, constrain
+from repro.models.config import ModelConfig
+
+
+def _split_proj(proj: jax.Array, cfg: ModelConfig):
+    """in_proj output -> (z, xbc, dt) with xbc = [x | B | C]."""
+    ssm = cfg.ssm
+    d_in = ssm.d_inner(cfg.d_model)
+    nh = ssm.num_heads(cfg.d_model)
+    conv_dim = d_in + 2 * ssm.d_state
+    z, xbc, dt = jnp.split(proj, [d_in, d_in + conv_dim], axis=-1)
+    assert dt.shape[-1] == nh
+    return z, xbc, dt
+
+
+def _ssd_chunked(x, dt, a, bmat, cmat, chunk):
+    """SSD scan over chunks.
+
+    x: (B,L,H,P); dt: (B,L,H); a: (H,) negative; bmat/cmat: (B,L,N).
+    Returns y: (B,L,H,P).
+    """
+    b, l, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, l)
+    assert l % q == 0, f"seq {l} % chunk {q} != 0"
+    nc = l // q
+
+    xd = x * dt[..., None]  # fold dt into inputs (B,L,H,P)
+    la = dt * a  # (B,L,H) log-decay per step (negative)
+
+    xc = xd.reshape(b, nc, q, h, p)
+    lac = la.reshape(b, nc, q, h)
+    bc = bmat.reshape(b, nc, q, n)
+    cc = cmat.reshape(b, nc, q, n)
+
+    cum = jnp.cumsum(lac, axis=2)  # (B,NC,Q,H) inclusive
+    total = cum[:, :, -1, :]  # (B,NC,H)
+
+    # Intra-chunk: Y[t] += sum_{s<=t} C_t.B_s exp(cum_t - cum_s) xd_s
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,NC,T,S,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bctn,bcsn->bcts", cc, bc)  # (B,NC,T,S)
+    y_intra = jnp.einsum(
+        "bcts,bctsh,bcshp->bcthp", scores, decay.astype(scores.dtype),
+        xc.astype(scores.dtype),
+    )
+
+    # Chunk summary state: S_c = sum_s exp(total - cum_s) B_s (x) xd_s
+    decay_out = jnp.exp(total[:, :, None, :] - cum)  # (B,NC,Q,H)
+    s_chunk = jnp.einsum(
+        "bcsn,bcsh,bcshp->bchpn", bc, decay_out.astype(bc.dtype),
+        xc.astype(bc.dtype),
+    )  # (B,NC,H,P,N)
+
+    # Inter-chunk recurrence: H_{c+1} = H_c * exp(total_c) + S_c
+    def step(hstate, inp):
+        s_c, tot_c = inp  # (B,H,P,N), (B,H)
+        out = hstate  # state entering this chunk
+        hstate = hstate * jnp.exp(tot_c)[:, :, None, None] + s_c
+        return hstate, out
+
+    h0 = jnp.zeros((b, h, p, n), dtype=s_chunk.dtype)
+    _, h_enter = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    h_enter = jnp.moveaxis(h_enter, 0, 1)  # (B,NC,H,P,N)
+
+    # Inter-chunk output: Y[t] += C_t . (exp(cum_t) * H_enter)
+    y_inter = jnp.einsum(
+        "bctn,bcth,bchpn->bcthp", cc, jnp.exp(cum).astype(cc.dtype), h_enter
+    )
+    return (y_intra + y_inter).reshape(b, l, h, p)
+
+
+def mamba_train(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence Mamba2 block. x: (B, L, D) -> (B, L, D)."""
+    ssm = cfg.ssm
+    b, l, d = x.shape
+    d_in = ssm.d_inner(d)
+    nh = ssm.num_heads(d)
+    hd = ssm.head_dim
+    n = ssm.d_state
+    xc = x.astype(jnp.bfloat16) if cfg.compute_dtype == "bfloat16" else x
+    w = lambda name: params[name].astype(xc.dtype)
+
+    proj = xc @ w("in_proj")  # (B,L, 2*d_in + 2N + NH)
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc = constrain(xbc, DP, None, TP)
+
+    # Depthwise causal conv over the (x|B|C) streams, width W.
+    wt = params["conv_w"].astype(xc.dtype)  # (W, conv_dim)
+    width = wt.shape[0]
+    pads = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    conv = sum(
+        pads[:, i : i + l, :] * wt[i][None, None, :] for i in range(width)
+    )
+    xbc = jax.nn.silu(conv + params["conv_b"].astype(xc.dtype))
+
+    xs, bmat, cmat = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    xs = xs.reshape(b, l, nh, hd)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (B,L,NH)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))  # (NH,)
+
+    y = _ssd_chunked(
+        xs.astype(jnp.float32), dt, a,
+        bmat.astype(jnp.float32), cmat.astype(jnp.float32), ssm.chunk,
+    )
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xs.astype(
+        jnp.float32
+    )
+    y = y.reshape(b, l, d_in).astype(xc.dtype)
+    y = y * jax.nn.silu(z)  # gated
+    y = rms_norm_gated(y, params["norm"], cfg.norm_eps)
+    y = constrain(y, DP, None, TP)
+    return (y @ w("out_proj")).astype(x.dtype)
+
+
+def rms_norm_gated(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(
+        x.dtype
+    )
+
+
+def mamba_decode(
+    params: dict,
+    x: jax.Array,  # (B, 1, D)
+    cache: dict,  # {"conv": (B, W-1, conv_dim), "ssm": (B, NH, HD, N)}
+    cfg: ModelConfig,
+) -> tuple[jax.Array, dict]:
+    """O(1) per-token Mamba2 recurrence."""
+    ssm = cfg.ssm
+    b, _, d = x.shape
+    d_in = ssm.d_inner(d)
+    nh = ssm.num_heads(d)
+    hd = ssm.head_dim
+    n = ssm.d_state
+    xc = x.astype(jnp.bfloat16) if cfg.compute_dtype == "bfloat16" else x
+    w = lambda name: params[name].astype(xc.dtype)
+
+    proj = (xc @ w("in_proj"))[:, 0]  # (B, ...)
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+
+    # Rolling conv state: window = [cache | current]
+    wt = params["conv_w"].astype(xc.dtype)  # (W, conv_dim)
+    width = wt.shape[0]
+    window = jnp.concatenate(
+        [cache["conv"].astype(xc.dtype), xbc[:, None, :]], axis=1
+    )  # (B, W, conv_dim)
+    conv = jnp.einsum("bwc,wc->bc", window, wt) + params["conv_b"].astype(xc.dtype)
+    xbc_act = jax.nn.silu(conv)
+    new_conv = window[:, 1:, :]
+
+    xs, bvec, cvec = jnp.split(xbc_act, [d_in, d_in + n], axis=-1)
+    xs = xs.reshape(b, nh, hd)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )  # (B, NH)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))  # (NH,)
+
+    h = cache["ssm"].astype(jnp.float32)  # (B,NH,HD,N)
+    decay = jnp.exp(dt * a)[:, :, None, None]
+    upd = (
+        dt[:, :, None, None]
+        * xs.astype(jnp.float32)[:, :, :, None]
+        * bvec.astype(jnp.float32)[:, None, None, :]
+    )
+    h_new = h * decay + upd
+    y = jnp.einsum("bhpn,bn->bhp", h_new, cvec.astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, d_in).astype(xc.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm_gated(y, params["norm"], cfg.norm_eps)
+    out = (y @ w("out_proj"))[:, None, :].astype(x.dtype)
+    return out, {"conv": new_conv.astype(cache["conv"].dtype),
+                 "ssm": h_new.astype(cache["ssm"].dtype)}

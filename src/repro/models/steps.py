@@ -1,0 +1,318 @@
+"""Train / prefill / serve step builders + parameter sharding rules +
+abstract ``input_specs`` for every (arch x shape) dry-run cell.
+
+train_step: microbatched grad accumulation (lax.scan) -> global fp32 grads
+-> Adam. Losses use one-hot label contraction so the vocab-sharded logits
+never require a gather over a sharded dimension.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.distributed.sharding import (
+    DP,
+    FSDP,
+    TP,
+    axis_size,
+    valid_spec,
+)
+from repro.models.config import MAMBA, ModelConfig
+from repro.models.transformer import (
+    abstract_params,
+    decode_step,
+    forward_encdec,
+    forward_lm,
+    init_cache,
+    init_params,
+)
+from repro.train.adam import AdamConfig, AdamState, adam_init, adam_update
+
+
+# --------------------------------------------------------------------------
+# Loss
+# --------------------------------------------------------------------------
+def lm_loss(
+    logits: jax.Array,  # (B, S, Vp) compute dtype
+    labels: jax.Array,  # (B, S) int32 (ids < vocab_size)
+    mask: jax.Array,  # (B, S) f32
+) -> jax.Array:
+    """Mean next-token cross entropy.
+
+    The label term uses a one-hot contraction (not take_along_axis) so it
+    shards cleanly when logits are vocab-sharded over "model"; the lse term
+    reduces over the sharded vocab with XLA-inserted collectives.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)  # (B, S)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = (lse - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _forward_loss(params, cfg: ModelConfig, batch: dict) -> jax.Array:
+    if cfg.is_encdec:
+        logits = forward_encdec(params, cfg, batch["frames"], batch["tokens"])
+        return lm_loss(logits, batch["labels"], batch["mask"])
+    patch = batch.get("patch_embeds", None)
+    logits = forward_lm(params, cfg, batch["tokens"], patch_embeds=patch)
+    if patch is not None:
+        # loss on the text positions only (vision prefix is unsupervised)
+        npfx = patch.shape[1]
+        logits = logits[:, npfx:, :]
+    return lm_loss(logits, batch["labels"], batch["mask"])
+
+
+# --------------------------------------------------------------------------
+# Steps
+# --------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, adam_cfg: Optional[AdamConfig] = None,
+                    num_microbatches: int = 1):
+    adam_cfg = adam_cfg or AdamConfig(learning_rate=3e-4, grad_clip_norm=1.0)
+
+    def train_step(params, opt: AdamState, batch: dict):
+        if num_microbatches > 1:
+            def micro(g_acc, mb):
+                loss, g = jax.value_and_grad(_forward_loss)(params, cfg, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return g_acc, loss
+
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape(
+                    (num_microbatches, x.shape[0] // num_microbatches)
+                    + x.shape[1:]
+                ),
+                batch,
+            )
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            grads, losses = jax.lax.scan(micro, g0, mb_batch)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = jnp.mean(losses)
+        else:
+            loss, grads = jax.value_and_grad(_forward_loss)(params, cfg, batch)
+        new_params, new_opt = adam_update(grads, opt, params, adam_cfg)
+        return new_params, new_opt, loss
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch: dict):
+        if cfg.is_encdec:
+            return forward_encdec(params, cfg, batch["frames"], batch["tokens"])
+        return forward_lm(
+            params, cfg, batch["tokens"],
+            patch_embeds=batch.get("patch_embeds", None),
+        )
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens, pos):
+        return decode_step(params, cfg, cache, tokens, pos)
+
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# Parameter / input sharding rules
+# --------------------------------------------------------------------------
+_COL_PARALLEL = {
+    "wq", "wk", "wv", "wi", "wi_gate", "wi_up", "in_proj", "frontend_proj",
+    "lm_head", "shared_wi", "shared_wi_gate", "shared_wi_up",
+}
+_ROW_PARALLEL = {"wo", "out_proj", "shared_wo"}
+_TP_VECS = {"bq", "bk", "bv", "conv_b", "norm"}
+
+
+def _base_spec(name: str, ndim_trailing: int):
+    if name == "embed":
+        # Vocab-dim sharding: XLA partitions the token gather as
+        # local-take + mask + psum (no table all-gather, no D-sharded
+        # activation mismatch under jvp).
+        return (TP, None)
+    if name in _COL_PARALLEL:
+        return (FSDP, TP)
+    if name in _ROW_PARALLEL:
+        return (TP, FSDP)
+    if name == "conv_w":
+        return (None, TP)
+    if name in _TP_VECS:
+        return (TP,)
+    if name == "router":
+        return (None, None)
+    return ()  # replicate (ln scales, A_log, D, dt_bias, ...)
+
+
+def param_pspec_tree(cfg: ModelConfig, params_abstract, serving: bool = False) -> dict:
+    """PartitionSpec pytree mirroring the parameter pytree.
+
+    Specs are right-aligned: stacked period / expert leading axes are
+    unsharded (periods are scanned; experts looped).
+
+    ``serving=True`` drops the FSDP storage axis: a serving fleet has no
+    optimiser state, so weights stay RESIDENT per chip (TP-sharded only) and
+    every per-step FSDP all-gather disappears."""
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        base = _base_spec(name, leaf.ndim)
+        if serving:
+            base = tuple(None if a == FSDP else a for a in base)
+        pad = (None,) * (leaf.ndim - len(base))
+        return pad + tuple(base)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_abstract)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_abstract,
+                    serving: bool = False):
+    specs = param_pspec_tree(cfg, params_abstract, serving=serving)
+    return jax.tree.map(
+        lambda leaf, spec: NamedSharding(mesh, valid_spec(mesh, leaf.shape, spec)),
+        params_abstract,
+        specs,
+    )
+
+
+def opt_shardings(mesh: Mesh, param_sh, opt_abstract: AdamState):
+    return AdamState(
+        step=NamedSharding(mesh, P()),
+        mu=param_sh,
+        nu=param_sh,
+    )
+
+
+def batch_pspec(batch_abstract, mesh: Mesh):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(
+            mesh, valid_spec(mesh, leaf.shape, (DP,) + (None,) * (leaf.ndim - 1))
+        ),
+        batch_abstract,
+    )
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_abstract):
+    """KV cache: batch over DP; kv-heads over TP when divisible, else the
+    sequence dim over TP (flash-decoding layout). Leading dim = periods."""
+    tp = axis_size(mesh, TP)
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("k", "v", "ck", "cv"):  # (P, B, S, KV, hd)
+            if cfg.num_kv_heads % tp == 0:
+                spec = (None, DP, None, TP, None)
+            else:
+                spec = (None, DP, TP, None, None)
+        elif name == "ssm":  # (P, B, NH, hd, N)
+            spec = (None, DP, TP, None, None)
+        elif name == "conv":  # (P, B, W-1, conv_dim)
+            spec = (None, DP, None, TP)
+        else:
+            spec = (None, DP)
+        return NamedSharding(mesh, valid_spec(mesh, leaf.shape, spec))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_abstract)
+
+
+# --------------------------------------------------------------------------
+# Abstract input specs per (arch x shape) — dry-run inputs (no allocation)
+# --------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    if shape.step == "train":
+        if cfg.is_encdec:
+            sd = cfg.decoder_len
+            batch = {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), f32),
+                "tokens": jax.ShapeDtypeStruct((b, sd), i32),
+                "labels": jax.ShapeDtypeStruct((b, sd), i32),
+                "mask": jax.ShapeDtypeStruct((b, sd), f32),
+            }
+        elif cfg.frontend.kind == "vision":
+            npfx = cfg.frontend.num_prefix
+            st = s - npfx
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((b, st), i32),
+                "patch_embeds": jax.ShapeDtypeStruct(
+                    (b, npfx, cfg.frontend.embed_dim), f32
+                ),
+                "labels": jax.ShapeDtypeStruct((b, st), i32),
+                "mask": jax.ShapeDtypeStruct((b, st), f32),
+            }
+        else:
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+                "mask": jax.ShapeDtypeStruct((b, s), f32),
+            }
+        return {"batch": batch}
+
+    if shape.step == "prefill":
+        if cfg.is_encdec:
+            return {"batch": {
+                "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), f32),
+                "tokens": jax.ShapeDtypeStruct((b, cfg.decoder_len), i32),
+            }}
+        if cfg.frontend.kind == "vision":
+            npfx = cfg.frontend.num_prefix
+            return {"batch": {
+                "tokens": jax.ShapeDtypeStruct((b, s - npfx), i32),
+                "patch_embeds": jax.ShapeDtypeStruct(
+                    (b, npfx, cfg.frontend.embed_dim), f32
+                ),
+            }}
+        return {"batch": {"tokens": jax.ShapeDtypeStruct((b, s), i32)}}
+
+    # decode: one token against a seq_len cache
+    enc_len = min(s, cfg.encoder.max_source_len) if cfg.is_encdec else 0
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, b, s, enc_len=enc_len)
+    )
+    return {
+        "cache": cache,
+        "tokens": jax.ShapeDtypeStruct((b,), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def concrete_batch(cfg: ModelConfig, shape: ShapeSpec, key) -> dict:
+    """Materialised random batch matching input_specs (smoke tests)."""
+    specs = input_specs(cfg, shape)
+    vocab = cfg.vocab_size
+
+    def fill(leaf, k):
+        if leaf.dtype == jnp.int32 and leaf.ndim >= 1:
+            return jax.random.randint(k, leaf.shape, 0, vocab, dtype=jnp.int32)
+        if leaf.dtype == jnp.int32:
+            return jnp.zeros(leaf.shape, jnp.int32)
+        return jax.random.normal(k, leaf.shape, leaf.dtype) * 0.1
+
+    leaves, treedef = jax.tree.flatten(specs)
+    keys = jax.random.split(key, len(leaves))
+    out = [
+        fill(l, k) if not isinstance(l, jax.Array) else l
+        for l, k in zip(leaves, keys)
+    ]
+    tree = jax.tree.unflatten(treedef, out)
+    if "batch" in tree and "mask" in tree["batch"]:
+        tree["batch"]["mask"] = jnp.ones_like(tree["batch"]["mask"])
+    if "pos" in tree:
+        tree["pos"] = jnp.asarray(shape.seq_len // 2, jnp.int32)
+    return tree

@@ -1,0 +1,454 @@
+"""Model assembly for all assigned architectures.
+
+Parameters are nested dicts of fp32 arrays. Layers are grouped into the
+config's repeating *pattern period*; parameters of each period are stacked
+on a leading axis and applied with `lax.scan` (true interleaving order,
+O(period) HLO size). `jax.checkpoint` on the period body gives layer-
+granular rematerialisation.
+
+Three entry points:
+  forward_lm       decoder-only training forward (vision prefix optional)
+  forward_encdec   whisper-style encoder-decoder training forward
+  decode_step      one-token serve step against a KV/SSM cache
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import DP, TP, constrain
+from repro.models.config import (
+    ATTN_BIDIR,
+    MAMBA,
+    LayerSpec,
+    ModelConfig,
+)
+from repro.models.layers import (
+    attention_decode,
+    attention_train,
+    cross_attention_decode,
+    cross_attention_train,
+    mlp,
+    moe_ffn,
+    rms_norm,
+    sinusoidal_positions,
+)
+from repro.models.ssm import mamba_decode, mamba_train
+
+
+# --------------------------------------------------------------------------
+# Initialisation
+# --------------------------------------------------------------------------
+def _dense(key, fan_in, fan_out, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(fan_in)
+    return jax.random.normal(key, (fan_in, fan_out), dtype) * scale
+
+
+def _init_attn(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    d = cfg.d_model
+    p = {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "wq": _dense(ks[0], d, cfg.q_dim),
+        "wk": _dense(ks[1], d, cfg.kv_dim),
+        "wv": _dense(ks[2], d, cfg.kv_dim),
+        "wo": _dense(ks[3], cfg.q_dim, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), jnp.float32)
+    return p
+
+
+def _init_ffn(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"ln": jnp.zeros((d,), jnp.float32)}
+    if cfg.mlp_activation == "swiglu":
+        p["wi_gate"] = _dense(ks[0], d, f)
+        p["wi_up"] = _dense(ks[1], d, f)
+        p["wo"] = _dense(ks[2], f, d)
+    else:
+        p["wi"] = _dense(ks[0], d, f)
+        p["wo"] = _dense(ks[1], f, d)
+    return p
+
+
+def _init_moe(key, cfg: ModelConfig) -> dict:
+    moe = cfg.moe
+    d, f, e = cfg.d_model, cfg.d_ff, moe.num_experts
+    ks = jax.random.split(key, 8)
+    scale = 1.0 / math.sqrt(d)
+
+    def stack(k, fan_in, fan_out):
+        return (
+            jax.random.normal(k, (e, fan_in, fan_out), jnp.float32)
+            / math.sqrt(fan_in)
+        )
+
+    p = {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * scale,
+    }
+    if cfg.mlp_activation == "swiglu":
+        p["wi_gate"] = stack(ks[1], d, f)
+        p["wi_up"] = stack(ks[2], d, f)
+        p["wo"] = stack(ks[3], f, d)
+    else:
+        p["wi"] = stack(ks[1], d, f)
+        p["wo"] = stack(ks[2], f, d)
+    if moe.shared_expert:
+        shared = _init_ffn(ks[4], cfg)
+        for k2, v in shared.items():
+            if k2 != "ln":
+                p["shared_" + k2] = v
+    return p
+
+
+def _init_mamba(key, cfg: ModelConfig) -> dict:
+    ssm = cfg.ssm
+    d = cfg.d_model
+    d_in = ssm.d_inner(d)
+    nh = ssm.num_heads(d)
+    conv_dim = d_in + 2 * ssm.d_state
+    d_proj = 2 * d_in + 2 * ssm.d_state + nh
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(
+        jax.random.uniform(ks[2], (nh,), jnp.float32)
+        * (math.log(0.1) - math.log(0.001))
+        + math.log(0.001)
+    )
+    return {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "in_proj": _dense(ks[0], d, d_proj),
+        "conv_w": jax.random.normal(ks[1], (ssm.conv_width, conv_dim), jnp.float32)
+        / math.sqrt(ssm.conv_width),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(
+            1.0 + jnp.arange(nh, dtype=jnp.float32)
+        ),  # A in [-1, -nh]
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt)),
+        "norm": jnp.zeros((d_in,), jnp.float32),
+        "out_proj": _dense(ks[3], d_in, d),
+    }
+
+
+def _init_block(key, cfg: ModelConfig, spec: LayerSpec, cross: bool) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    blk = {}
+    if spec.kind == MAMBA:
+        blk["mamba"] = _init_mamba(k1, cfg)
+    else:
+        blk["attn"] = _init_attn(k1, cfg)
+    if cross:
+        blk["cross"] = _init_attn(k3, cfg)
+    if cfg.d_ff > 0:
+        blk["ffn"] = _init_moe(k2, cfg) if (spec.moe and cfg.moe) else _init_ffn(k2, cfg)
+    return blk
+
+
+def _init_period(key, cfg: ModelConfig, cross: bool) -> dict:
+    keys = jax.random.split(key, len(cfg.pattern))
+    return {
+        f"block_{i}": _init_block(keys[i], cfg, spec, cross)
+        for i, spec in enumerate(cfg.pattern)
+    }
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 8)
+    vp = cfg.padded_vocab
+    params = _init_params_f32(ks, cfg, vp)
+    if cfg.param_dtype == "bfloat16":
+        # bf16 parameter storage (fp32 Adam moments remain the master
+        # statistics; adam_update computes in fp32 and casts back).
+        params = jax.tree.map(lambda a: a.astype(jnp.bfloat16), params)
+    return params
+
+
+def _init_params_f32(ks, cfg: ModelConfig, vp: int) -> dict:
+    params = {
+        "embed": jax.random.normal(ks[0], (vp, cfg.d_model), jnp.float32) * 0.02,
+        "final_ln": jnp.zeros((cfg.d_model,), jnp.float32),
+        "layers": jax.vmap(
+            lambda k: _init_period(k, cfg, cross=cfg.is_encdec)
+        )(jax.random.split(ks[1], cfg.num_periods)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense(ks[2], cfg.d_model, vp)
+    if cfg.frontend.kind == "vision":
+        params["frontend_proj"] = _dense(ks[3], cfg.frontend.embed_dim, cfg.d_model)
+    if cfg.is_encdec:
+        enc_spec = LayerSpec(kind=ATTN_BIDIR)
+        enc_cfg = cfg  # same dims for encoder (whisper-large symmetric)
+        params["encoder"] = {
+            "frontend_proj": _dense(ks[4], cfg.d_model, cfg.d_model),
+            "final_ln": jnp.zeros((cfg.d_model,), jnp.float32),
+            "layers": jax.vmap(
+                lambda k: {
+                    "block_0": _init_block(k, enc_cfg, enc_spec, cross=False)
+                }
+            )(jax.random.split(ks[5], cfg.encoder.num_layers)),
+        }
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStruct pytree (no allocation) — dry-run input."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# --------------------------------------------------------------------------
+# Train forward
+# --------------------------------------------------------------------------
+def _apply_block(
+    params: dict, x: jax.Array, cfg: ModelConfig, spec: LayerSpec,
+    positions: jax.Array, enc: Optional[jax.Array],
+) -> jax.Array:
+    if spec.kind == MAMBA:
+        x = x + mamba_train(params["mamba"], rms_norm(x, params["mamba"]["ln"], cfg.norm_eps), cfg)
+    else:
+        x = x + attention_train(
+            params["attn"], rms_norm(x, params["attn"]["ln"], cfg.norm_eps),
+            cfg, spec, positions,
+        )
+    if enc is not None and "cross" in params:
+        x = x + cross_attention_train(
+            params["cross"], rms_norm(x, params["cross"]["ln"], cfg.norm_eps),
+            enc, cfg,
+        )
+    if "ffn" in params:
+        h = rms_norm(x, params["ffn"]["ln"], cfg.norm_eps)
+        if spec.moe and cfg.moe is not None:
+            x = x + moe_ffn(params["ffn"], h, cfg)
+        else:
+            x = x + mlp(params["ffn"], h, cfg)
+    return constrain(x, DP, None, None)
+
+
+def _run_stack(
+    stacked: dict, x: jax.Array, cfg: ModelConfig,
+    pattern: tuple, positions: jax.Array, enc: Optional[jax.Array],
+) -> jax.Array:
+    def period_body(carry, period_params):
+        h = carry
+        for i, spec in enumerate(pattern):
+            h = _apply_block(
+                period_params[f"block_{i}"], h, cfg, spec, positions, enc
+            )
+        return h, None
+
+    if cfg.remat and cfg.remat_policy == "dots":
+        body = jax.checkpoint(
+            period_body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        )
+    elif cfg.remat:
+        body = jax.checkpoint(period_body)
+    else:
+        body = period_body
+    x, _ = jax.lax.scan(body, x, stacked)
+    return x
+
+
+def forward_lm(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array,  # (B, S_text)
+    patch_embeds: Optional[jax.Array] = None,  # (B, P, E) vision stub
+) -> jax.Array:
+    """Decoder-only LM forward -> logits (B, S_total, padded_vocab)."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    )
+    if patch_embeds is not None:
+        pe = patch_embeds.astype(x.dtype) @ params["frontend_proj"].astype(x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    if not cfg.use_rope:
+        x = x + sinusoidal_positions(s, cfg.d_model, x.dtype)[None]
+    x = constrain(x, DP, None, None)
+    x = _run_stack(params["layers"], x, cfg, cfg.pattern, positions, None)
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = x @ head.astype(x.dtype)
+    return constrain(logits, DP, None, TP)
+
+
+def encode(params: dict, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Whisper encoder over precomputed frame embeddings (B, T, D)."""
+    enc_p = params["encoder"]
+    x = frames.astype(
+        jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    ) @ enc_p["frontend_proj"].astype(
+        jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    )
+    t = x.shape[1]
+    x = x + sinusoidal_positions(t, cfg.d_model, x.dtype)[None]
+    x = constrain(x, DP, None, None)
+    x = _run_stack(
+        enc_p["layers"], x, cfg, (LayerSpec(kind=ATTN_BIDIR),),
+        jnp.arange(t), None,
+    )
+    return rms_norm(x, enc_p["final_ln"], cfg.norm_eps)
+
+
+def forward_encdec(
+    params: dict, cfg: ModelConfig, frames: jax.Array, tokens: jax.Array
+) -> jax.Array:
+    """Encoder-decoder training forward -> decoder logits."""
+    enc = encode(params, cfg, frames)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(enc.dtype)
+    s = x.shape[1]
+    x = x + sinusoidal_positions(s, cfg.d_model, x.dtype)[None]
+    x = constrain(x, DP, None, None)
+    x = _run_stack(params["layers"], x, cfg, cfg.pattern, jnp.arange(s), enc)
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"].T)
+    logits = x @ head.astype(x.dtype)
+    return constrain(logits, DP, None, TP)
+
+
+# --------------------------------------------------------------------------
+# Decode (serving)
+# --------------------------------------------------------------------------
+def init_cache(
+    cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0,
+    dtype=jnp.bfloat16,
+) -> dict:
+    """Per-period stacked cache pytree."""
+    p = cfg.num_periods
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    period = {}
+    for i, spec in enumerate(cfg.pattern):
+        if spec.kind == MAMBA:
+            ssm = cfg.ssm
+            d_in = ssm.d_inner(cfg.d_model)
+            conv_dim = d_in + 2 * ssm.d_state
+            blk = {
+                "conv": jnp.zeros((p, batch, ssm.conv_width - 1, conv_dim), dtype),
+                "ssm": jnp.zeros(
+                    (p, batch, ssm.num_heads(cfg.d_model), ssm.head_dim,
+                     ssm.d_state), jnp.float32,
+                ),
+            }
+        else:
+            # Windowed layers get a ring buffer of length window (see
+            # layers.attention_decode) — O(window) memory at any context.
+            length = max_len
+            if spec.kind in ("swa", "chunked") and spec.window > 0:
+                length = min(spec.window, max_len)
+            blk = {
+                "k": jnp.zeros((p, batch, length, kv, hd), dtype),
+                "v": jnp.zeros((p, batch, length, kv, hd), dtype),
+            }
+        if cfg.is_encdec:
+            blk["ck"] = jnp.zeros((p, batch, enc_len, kv, hd), dtype)
+            blk["cv"] = jnp.zeros((p, batch, enc_len, kv, hd), dtype)
+        period[f"block_{i}"] = blk
+    return period
+
+
+def prefill_cross_cache(
+    params: dict, cfg: ModelConfig, frames: jax.Array, cache: dict
+) -> dict:
+    """Encode source frames and fill the decoder cross-attention K/V cache
+    (whisper serving prefill). Returns the updated cache."""
+    enc = encode(params, cfg, frames)  # (B, T, D)
+    b, t, _ = enc.shape
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def per_period(period_params, period_cache):
+        new = {}
+        for i in range(len(cfg.pattern)):
+            blk_p = period_params[f"block_{i}"]
+            blk_c = dict(period_cache[f"block_{i}"])
+            wk = blk_p["cross"]["wk"].astype(enc.dtype)
+            wv = blk_p["cross"]["wv"].astype(enc.dtype)
+            blk_c["ck"] = (enc @ wk).reshape(b, t, kv, hd).astype(
+                blk_c["ck"].dtype
+            )
+            blk_c["cv"] = (enc @ wv).reshape(b, t, kv, hd).astype(
+                blk_c["cv"].dtype
+            )
+            new[f"block_{i}"] = blk_c
+        return new
+
+    return jax.vmap(per_period)(params["layers"], cache)
+
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    cache: dict,
+    tokens: jax.Array,  # (B,) current token ids
+    pos: jax.Array,  # scalar int32 position
+) -> tuple[jax.Array, dict]:
+    """One serving step: next-token logits + updated cache."""
+    x = jnp.take(params["embed"], tokens, axis=0)[:, None, :].astype(
+        jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    )
+    if not cfg.use_rope:
+        pe = sinusoidal_positions(1, cfg.d_model, x.dtype)  # placeholder row
+        freq_row = _sinusoidal_at(pos, cfg.d_model, x.dtype)
+        x = x + freq_row[None, None, :]
+    x = constrain(x, DP, None, None)
+
+    def period_body(carry, inp):
+        h = carry
+        period_params, period_cache = inp
+        new_cache = {}
+        for i, spec in enumerate(cfg.pattern):
+            blk_p = period_params[f"block_{i}"]
+            blk_c = period_cache[f"block_{i}"]
+            nc = dict(blk_c)
+            if spec.kind == MAMBA:
+                y, upd = mamba_decode(
+                    blk_p["mamba"],
+                    rms_norm(h, blk_p["mamba"]["ln"], cfg.norm_eps),
+                    {"conv": blk_c["conv"], "ssm": blk_c["ssm"]}, cfg,
+                )
+                nc.update(upd)
+            else:
+                y, upd = attention_decode(
+                    blk_p["attn"],
+                    rms_norm(h, blk_p["attn"]["ln"], cfg.norm_eps),
+                    {"k": blk_c["k"], "v": blk_c["v"]}, pos, cfg, spec,
+                )
+                nc.update(upd)
+            h = h + y
+            if cfg.is_encdec and "cross" in blk_p:
+                h = h + cross_attention_decode(
+                    blk_p["cross"],
+                    rms_norm(h, blk_p["cross"]["ln"], cfg.norm_eps),
+                    blk_c, cfg,
+                )
+            if "ffn" in blk_p:
+                z = rms_norm(h, blk_p["ffn"]["ln"], cfg.norm_eps)
+                if spec.moe and cfg.moe is not None:
+                    h = h + moe_ffn(blk_p["ffn"], z, cfg)
+                else:
+                    h = h + mlp(blk_p["ffn"], z, cfg)
+            new_cache[f"block_{i}"] = nc
+        return h, new_cache
+
+    x, new_cache = jax.lax.scan(period_body, x, (params["layers"], cache))
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    head = params.get("lm_head", params["embed"].T)
+    logits = (x[:, 0, :] @ head.astype(x.dtype)).astype(jnp.float32)
+    return constrain(logits, DP, TP), new_cache
+
+
+def _sinusoidal_at(pos: jax.Array, dim: int, dtype) -> jax.Array:
+    i = jnp.arange(dim // 2, dtype=jnp.float32)
+    angles = pos.astype(jnp.float32) / jnp.power(10_000.0, 2.0 * i / dim)
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)]).astype(dtype)

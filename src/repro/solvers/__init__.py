@@ -1,0 +1,56 @@
+"""Linear-system solver registry and a single dispatch entry point."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.solvers.base import SolveResult, SolverConfig
+from repro.solvers.cg import solve_cg
+from repro.solvers.ap import solve_ap
+from repro.solvers.sgd import solve_sgd
+from repro.solvers.operator import HOperator, kernel_mvm_tiled
+from repro.solvers.precond import (
+    Preconditioner,
+    build_preconditioner,
+    pivoted_cholesky,
+)
+
+SOLVERS = {"cg": solve_cg, "ap": solve_ap, "sgd": solve_sgd}
+
+
+def solve(
+    op: HOperator,
+    b: jax.Array,
+    v0: Optional[jax.Array],
+    cfg: SolverConfig,
+    key: Optional[jax.Array] = None,
+) -> SolveResult:
+    """Solve H [v_y, v_1..v_s] = b with the configured solver.
+
+    ``v0=None`` is the cold start (zero initialisation); pass the previous
+    outer step's solution to warm start (paper §4).
+    """
+    if cfg.name == "cg":
+        return solve_cg(op, b, v0, cfg)
+    if cfg.name == "ap":
+        return solve_ap(op, b, v0, cfg)
+    if cfg.name == "sgd":
+        return solve_sgd(op, b, v0, cfg, key=key)
+    raise ValueError(f"unknown solver {cfg.name!r}")
+
+
+__all__ = [
+    "SOLVERS",
+    "solve",
+    "solve_cg",
+    "solve_ap",
+    "solve_sgd",
+    "SolveResult",
+    "SolverConfig",
+    "HOperator",
+    "kernel_mvm_tiled",
+    "Preconditioner",
+    "build_preconditioner",
+    "pivoted_cholesky",
+]

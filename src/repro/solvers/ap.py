@@ -1,0 +1,100 @@
+"""Alternating projections for batched GP systems (Algorithm 2, Wu et al.).
+
+Per iteration: greedily pick the block with the largest residual norm,
+solve the (b x b) diagonal block against the block residual with its cached
+Cholesky factor, update the solution block and the FULL residual via one
+(n x b) column-block kernel slab.
+
+Epoch accounting: one iteration touches n*b entries of H = b/n of an epoch;
+``max_iters = (n / b) * max_epochs``. The per-block Cholesky factors are
+computed once per outer MLL step and cached (their cost is counted once as
+b/n of an epoch per block = 1 extra epoch total the first time).
+
+Block selection: the paper's pseudocode takes an argmax over a per-block
+aggregate of mean+probe residuals; we use the Frobenius norm of the block
+residual across all t systems, which coincides for a single system and
+avoids sign cancellation across probes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.solvers.base import (
+    SolveResult,
+    SolverConfig,
+    denormalise,
+    normalise_system,
+    not_converged,
+    residual_norms,
+)
+from repro.solvers.operator import HOperator
+
+
+class _APState(NamedTuple):
+    v: jax.Array
+    r: jax.Array
+    t: jax.Array
+    res_y: jax.Array
+    res_z: jax.Array
+
+
+def solve_ap(
+    op: HOperator,
+    b: jax.Array,
+    v0: Optional[jax.Array],
+    cfg: SolverConfig,
+    block_chols: Optional[jax.Array] = None,
+) -> SolveResult:
+    n = op.n
+    bs = cfg.block_size
+    if n % bs != 0:
+        raise ValueError(f"n={n} must be a multiple of block_size={bs}")
+    nb = n // bs
+    if block_chols is None:
+        block_chols = op.all_block_cholesky(bs)
+
+    sysn = normalise_system(b, v0)
+    max_iters = jnp.asarray(
+        min(nb * cfg.max_epochs, 2**31 - 1), dtype=jnp.int32
+    )
+
+    r0 = sysn.b - op.mvm(sysn.v0)
+    res_y0, res_z0 = residual_norms(r0)
+    state0 = _APState(
+        v=sysn.v0, r=r0, t=jnp.asarray(0, jnp.int32),
+        res_y=res_y0, res_z=res_z0,
+    )
+
+    def cond(s: _APState):
+        return jnp.logical_and(
+            s.t < max_iters, not_converged(s.res_y, s.res_z, cfg.tolerance)
+        )
+
+    def body(s: _APState):
+        # Greedy block selection by block-residual Frobenius norm.
+        blk_norms = jnp.sum(
+            s.r.reshape(nb, bs, -1) ** 2, axis=(1, 2)
+        )
+        i = jnp.argmax(blk_norms)
+        start = i * bs
+        rb = jax.lax.dynamic_slice(s.r, (start, 0), (bs, s.r.shape[1]))
+        chol = block_chols[i]
+        delta = jax.scipy.linalg.cho_solve((chol, True), rb)  # (bs, t)
+        vb = jax.lax.dynamic_slice(s.v, (start, 0), (bs, s.v.shape[1]))
+        v = jax.lax.dynamic_update_slice(s.v, vb + delta, (start, 0))
+        # r <- r - H[:, blk] @ delta  (one (n x b) kernel slab)
+        r = s.r - op.col_block_mvm(start, bs, delta)
+        res_y, res_z = residual_norms(r)
+        return _APState(v=v, r=r, t=s.t + 1, res_y=res_y, res_z=res_z)
+
+    final = jax.lax.while_loop(cond, body, state0)
+    return SolveResult(
+        v=denormalise(final.v, sysn.scale),
+        res_y=final.res_y,
+        res_z=final.res_z,
+        iters=final.t,
+        epochs=final.t.astype(jnp.float32) * (bs / n),
+    )

@@ -1,0 +1,86 @@
+"""Shared solver types: config, result, normalisation, budget accounting.
+
+Budget accounting follows paper §5 footnote 3: one *solver epoch* = every
+entry of H_theta computed once. CG: 1 iteration = 1 epoch (one full MVM).
+AP / SGD with block/batch size b: one iteration touches an (n x b) slab,
+i.e. b/n of an epoch, so ``max_iters = (n / b) * max_epochs``.
+
+Normalisation follows Appendix B: each system ``H u = b`` is solved as
+``H u~ = b~`` with ``b~ = b / (||b|| + eps)`` and rescaled afterwards; the
+relative-residual tolerance then becomes an absolute tolerance on ``||r~||``.
+
+Termination (paper §B "Linear System Solver"): BOTH the mean-system residual
+norm ``||r_y||`` and the probe average ``||r_z|| = (1/s) sum_j ||r_j||`` must
+reach tau. (The pseudocode's ``and`` in the while-condition is a typo for the
+text's rule; we follow the text.)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+NORM_EPS = 1e-10
+
+
+@dataclass(frozen=True)
+class SolverConfig:
+    name: str = "cg"  # cg | ap | sgd
+    tolerance: float = 0.01  # tau (paper: Maddox et al. value)
+    max_epochs: float = 1e9  # budget in solver epochs; large => to-tolerance
+    # CG
+    precond_rank: int = 100  # pivoted-Cholesky rank (0 disables)
+    # AP
+    block_size: int = 1000
+    # SGD
+    batch_size: int = 500
+    learning_rate: float = 30.0
+    momentum: float = 0.9
+    # Numerics
+    exact_final_residual: bool = False  # extra full MVM for reporting
+
+
+class SolveResult(NamedTuple):
+    v: jax.Array  # (n, t) solutions [v_y | v_1 .. v_s]
+    res_y: jax.Array  # final relative residual of the mean system
+    res_z: jax.Array  # mean relative residual over probe systems
+    iters: jax.Array  # inner iterations executed
+    epochs: jax.Array  # solver epochs consumed (budget units)
+
+
+class NormalisedSystem(NamedTuple):
+    b: jax.Array  # (n, t) normalised targets
+    v0: jax.Array  # (n, t) normalised initialisation
+    scale: jax.Array  # (t,) ||b|| + eps per column
+
+
+def normalise_system(
+    b: jax.Array, v0: Optional[jax.Array]
+) -> NormalisedSystem:
+    scale = jnp.linalg.norm(b, axis=0) + NORM_EPS
+    bn = b / scale
+    v0n = jnp.zeros_like(b) if v0 is None else v0 / scale
+    return NormalisedSystem(b=bn, v0=v0n, scale=scale)
+
+
+def denormalise(v: jax.Array, scale: jax.Array) -> jax.Array:
+    return v * scale
+
+
+def residual_norms(r: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(||r_y||, mean_j ||r_j||) for the normalised batched system.
+
+    Column 0 is the mean system; columns 1..s are probes. If there is only
+    one column, both norms coincide.
+    """
+    norms = jnp.linalg.norm(r, axis=0)
+    res_y = norms[0]
+    res_z = jnp.mean(norms[1:]) if r.shape[1] > 1 else norms[0]
+    return res_y, res_z
+
+
+def not_converged(res_y: jax.Array, res_z: jax.Array, tol: float) -> jax.Array:
+    """Continue while EITHER system family is above tolerance."""
+    return jnp.logical_or(res_y > tol, res_z > tol)

@@ -1,0 +1,97 @@
+"""Preconditioned conjugate gradients for batched GP systems (Algorithm 1).
+
+Solves ``H [v_y, v_1..v_s] = [y, b_1..b_s]`` with one shared MVM per
+iteration; per-column step sizes (each column is an independent system with
+the same coefficient matrix). Rank-100 pivoted-Cholesky preconditioner by
+default (Wang et al. [29]).
+
+Epoch accounting: 1 CG iteration = 1 solver epoch (every entry of H touched
+once per MVM).
+
+Note: the paper's pseudocode line 6 reads ``d <- b``; we implement the
+standard PCG recursion ``d <- p`` (as in GPyTorch, which the paper follows) —
+with ``d <- b`` warm starting would be incorrect.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.solvers.base import (
+    SolveResult,
+    SolverConfig,
+    denormalise,
+    normalise_system,
+    not_converged,
+    residual_norms,
+)
+from repro.solvers.operator import HOperator
+from repro.solvers.precond import Preconditioner, build_preconditioner
+
+
+class _CGState(NamedTuple):
+    v: jax.Array
+    r: jax.Array
+    d: jax.Array
+    gamma: jax.Array  # (t,) r^T P^-1 r per column
+    t: jax.Array
+    res_y: jax.Array
+    res_z: jax.Array
+
+
+def solve_cg(
+    op: HOperator,
+    b: jax.Array,
+    v0: Optional[jax.Array],
+    cfg: SolverConfig,
+    precond: Optional[Preconditioner] = None,
+) -> SolveResult:
+    if precond is None:
+        precond = build_preconditioner(op, cfg.precond_rank)
+
+    sysn = normalise_system(b, v0)
+    max_iters = jnp.asarray(
+        min(cfg.max_epochs, 2**31 - 1), dtype=jnp.int32
+    )
+
+    r0 = sysn.b - op.mvm(sysn.v0)
+    p0 = precond.apply(r0)
+    gamma0 = jnp.sum(r0 * p0, axis=0)
+    res_y0, res_z0 = residual_norms(r0)
+    state0 = _CGState(
+        v=sysn.v0, r=r0, d=p0, gamma=gamma0,
+        t=jnp.asarray(0, jnp.int32), res_y=res_y0, res_z=res_z0,
+    )
+
+    def cond(s: _CGState):
+        return jnp.logical_and(
+            s.t < max_iters, not_converged(s.res_y, s.res_z, cfg.tolerance)
+        )
+
+    def body(s: _CGState):
+        hd = op.mvm(s.d)
+        denom = jnp.sum(s.d * hd, axis=0)
+        # Guard converged columns (denom -> 0) against 0/0.
+        alpha = s.gamma / jnp.where(denom > 0, denom, 1.0)
+        alpha = jnp.where(denom > 0, alpha, 0.0)
+        v = s.v + alpha * s.d
+        r = s.r - alpha * hd
+        p = precond.apply(r)
+        gamma_new = jnp.sum(r * p, axis=0)
+        beta = gamma_new / jnp.where(s.gamma > 0, s.gamma, 1.0)
+        beta = jnp.where(s.gamma > 0, beta, 0.0)
+        d = p + beta * s.d
+        res_y, res_z = residual_norms(r)
+        return _CGState(v=v, r=r, d=d, gamma=gamma_new, t=s.t + 1,
+                        res_y=res_y, res_z=res_z)
+
+    final = jax.lax.while_loop(cond, body, state0)
+    return SolveResult(
+        v=denormalise(final.v, sysn.scale),
+        res_y=final.res_y,
+        res_z=final.res_z,
+        iters=final.t,
+        epochs=final.t.astype(jnp.float32),
+    )

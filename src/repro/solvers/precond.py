@@ -1,0 +1,85 @@
+"""Rank-k pivoted Cholesky preconditioner for CG (paper Appendix B, following
+Wang et al. [29] / GPyTorch).
+
+Builds a partial pivoted Cholesky factor L (n x k) of the *kernel* matrix K
+(without noise) using k greedy pivots, then applies
+
+    P^{-1} r = (L L^T + sigma^2 I)^{-1} r
+             = (r - L (sigma^2 I_k + L^T L)^{-1} L^T r) / sigma^2      (Woodbury)
+
+Each pivot step needs exactly one kernel row K[i, :] — O(n * d) work — so the
+full preconditioner costs O(k * n * (d + k)) and is negligible next to solver
+epochs (k=100).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.solvers.operator import HOperator
+
+_JITTER = 1e-10
+
+
+class Preconditioner(NamedTuple):
+    l: jax.Array  # (n, k) partial pivoted-Cholesky factor of K
+    chol_inner: jax.Array  # (k, k) Cholesky of sigma^2 I_k + L^T L
+    noise_var: jax.Array  # sigma^2
+
+    def apply(self, r: jax.Array) -> jax.Array:
+        """P^{-1} @ r for r of shape (n, t)."""
+        ltr = self.l.T @ r  # (k, t)
+        inner = jax.scipy.linalg.cho_solve((self.chol_inner, True), ltr)
+        return (r - self.l @ inner) / self.noise_var
+
+
+def identity_preconditioner(n: int, dtype=jnp.float32) -> Preconditioner:
+    """Rank-0 stand-in: apply() reduces to the identity (L = 0)."""
+    return Preconditioner(
+        l=jnp.zeros((n, 1), dtype=dtype),
+        chol_inner=jnp.eye(1, dtype=dtype),
+        noise_var=jnp.asarray(1.0, dtype=dtype),
+    )
+
+
+def pivoted_cholesky(op: HOperator, rank: int) -> jax.Array:
+    """Partial pivoted Cholesky of K (kernel only, no noise): (n, rank).
+
+    Greedy pivot = argmax of the running diagonal of the Schur complement.
+    """
+    n = op.n
+    dtype = op.x.dtype
+
+    def step(carry, j):
+        l, d = carry  # l: (n, rank); d: (n,) residual diagonal
+        i = jnp.argmax(d)
+        row = op.kernel_row(i)  # (n,) K[i, :]
+        # Schur correction from previously selected columns.
+        li = jax.lax.dynamic_slice(l, (i, 0), (1, rank))[0]  # (rank,)
+        row = row - l @ li
+        pivot = jnp.sqrt(jnp.maximum(d[i], _JITTER))
+        col = row / pivot
+        # Exact zero at previously-pivoted rows is implied; numerically we
+        # just update the diagonal and clamp.
+        l = l.at[:, j].set(col)
+        d = jnp.maximum(d - col**2, 0.0)
+        d = d.at[i].set(0.0)
+        return (l, d), None
+
+    l0 = jnp.zeros((n, rank), dtype=dtype)
+    d0 = op.kernel_diag()
+    (l, _), _ = jax.lax.scan(step, (l0, d0), jnp.arange(rank))
+    return l
+
+
+def build_preconditioner(op: HOperator, rank: int) -> Preconditioner:
+    if rank <= 0:
+        return identity_preconditioner(op.n, dtype=op.x.dtype)
+    l = pivoted_cholesky(op, rank)
+    inner = op.noise_var * jnp.eye(rank, dtype=l.dtype) + l.T @ l
+    inner = inner + _JITTER * jnp.eye(rank, dtype=l.dtype)
+    return Preconditioner(
+        l=l, chol_inner=jnp.linalg.cholesky(inner), noise_var=op.noise_var
+    )

@@ -1,0 +1,86 @@
+"""Adam optimiser (Kingma & Ba), from scratch on pytrees.
+
+Used by (i) the outer-loop marginal-likelihood optimiser (paper: Adam with
+default betas, lr 0.1 small / 0.03 large datasets) and (ii) the LM training
+path (bf16 params + fp32 moments). optax is intentionally not vendored — the
+framework is self-contained.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array  # scalar int32
+    mu: Any  # first-moment pytree (fp32)
+    nu: Any  # second-moment pytree (fp32)
+
+
+class AdamConfig(NamedTuple):
+    learning_rate: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0  # decoupled (AdamW); 0 disables
+    grad_clip_norm: float = 0.0  # global-norm clip; 0 disables
+
+
+def adam_init(params: Any) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dtype=jnp.float32), params)
+    zeros2 = jax.tree.map(lambda p: jnp.zeros(p.shape, dtype=jnp.float32), params)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=zeros2)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def adam_update(
+    grads: Any,
+    state: AdamState,
+    params: Any,
+    cfg: AdamConfig,
+    *,
+    maximize: bool = False,
+):
+    """One Adam step. Returns (new_params, new_state).
+
+    ``maximize=True`` ascends (the MLL outer loop maximises L); LM training
+    descends on the loss.
+    """
+    if maximize:
+        grads = jax.tree.map(lambda g: -g, grads)
+    if cfg.grad_clip_norm > 0.0:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip_norm / (gn + 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step = state.step + 1
+    b1t = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g32
+        v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g32)
+        mhat = m / b1t
+        vhat = v / b2t
+        delta = cfg.learning_rate * mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay > 0.0:
+            delta = delta + cfg.learning_rate * cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step=step, mu=new_m, nu=new_v)

@@ -1,0 +1,40 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# Smoke tests and benches must see 1 device (the dry-run sets its own flag
+# in a subprocess) — do NOT force a device count here.
+
+
+@pytest.fixture(scope="session")
+def gp_problem():
+    """Small synthetic GP regression problem + dense reference quantities."""
+    from repro.data.synthetic import make_gp_regression
+    from repro.gp.hyperparams import HyperParams
+    from repro.gp.kernels_math import regularised_kernel_matrix
+
+    key = jax.random.PRNGKey(0)
+    n, d = 256, 3
+    x, y = make_gp_regression(key, n + 64, d, noise=0.2)
+    params = HyperParams.create(d, lengthscale=0.7, signal=1.1, noise=0.3)
+    h = regularised_kernel_matrix(x[:n], params)
+    return {
+        "x": x[:n], "y": y[:n], "xs": x[n:], "ys": y[n:],
+        "params": params, "h": h, "n": n, "d": d,
+    }
+
+
+@pytest.fixture(scope="session")
+def batched_system(gp_problem):
+    """H [v_y, v_1..v_s] = [y, b_1..b_s] with dense solution."""
+    key = jax.random.PRNGKey(7)
+    s = 8
+    b = jnp.concatenate(
+        [gp_problem["y"][:, None],
+         jax.random.normal(key, (gp_problem["n"], s))], axis=1,
+    )
+    v = jnp.linalg.solve(gp_problem["h"], b)
+    return {"b": b, "v_true": v, "s": s}

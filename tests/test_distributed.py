@@ -1,0 +1,139 @@
+"""Multi-device distribution tests.
+
+These run in SUBPROCESSES with XLA_FLAGS forcing 8 host devices (the parent
+pytest process must keep seeing 1 device for the smoke tests), mirroring the
+dry-run pattern.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(body: str, devices: int = 8) -> str:
+    script = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={devices}'\n"
+        + textwrap.dedent(body)
+    )
+    env = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env=env, timeout=900)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def test_ring_mvm_matches_dense():
+    out = _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.distributed.ring import ring_kernel_mvm
+    from repro.gp.hyperparams import HyperParams
+    from repro.gp.kernels_math import kernel_matrix
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    n, d, s = 64, 3, 5
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, d))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (n, s))
+    params = HyperParams.create(d, noise=0.3)
+    sh = NamedSharding(mesh, P(("data", "model"), None))
+    xs = jax.device_put(x, sh); vs = jax.device_put(v, sh)
+    out = jax.jit(lambda a, b: ring_kernel_mvm(a, b, params, mesh))(xs, vs)
+    ref = kernel_matrix(x, x, params) @ v
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+    print("RING_OK")
+    """)
+    assert "RING_OK" in out
+
+
+def test_ring_mvm_gradients_match_dense():
+    out = _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.distributed.ring import ring_h_mvm
+    from repro.gp.hyperparams import HyperParams
+    from repro.gp.kernels_math import regularised_kernel_matrix
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    n, d, s = 32, 2, 3
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, d))
+    v = jax.random.normal(jax.random.fold_in(key, 1), (n, s))
+    params = HyperParams.create(d, noise=0.4)
+    sh = NamedSharding(mesh, P(("data", "model"), None))
+    xs = jax.device_put(x, sh); vs = jax.device_put(v, sh)
+
+    def quad_ring(p):
+        hv = ring_h_mvm(xs, vs, p, mesh)
+        return jnp.sum(vs * hv)
+    def quad_dense(p):
+        return jnp.sum(v * (regularised_kernel_matrix(x, p) @ v))
+
+    g1 = jax.jit(jax.grad(quad_ring))(params)
+    g2 = jax.grad(quad_dense)(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+    print("RING_GRAD_OK")
+    """)
+    assert "RING_GRAD_OK" in out
+
+
+def test_gp_distributed_step_improves_residual():
+    """Two warm-started budgeted distributed steps: residual decreases
+    (the paper's accumulation effect, on a real 8-device mesh)."""
+    out = _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.distributed.gp_step import GPStepState, make_gp_outer_step
+    from repro.gp.hyperparams import HyperParams
+    from repro.gp.rff import init_rff
+    from repro.train.adam import adam_init
+    from repro.data.synthetic import make_gp_regression
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    n, d, s = 64, 2, 4
+    x, y = make_gp_regression(jax.random.PRNGKey(0), n, d, noise=0.3)
+    rff = init_rff(jax.random.PRNGKey(1), 64, d, s)
+    w_eps = jax.random.normal(jax.random.PRNGKey(2), (n, s))
+    params = HyperParams.create(d)
+    sh = NamedSharding(mesh, P(("data", "model"), None))
+    sh1 = NamedSharding(mesh, P(("data", "model")))
+    state = GPStepState(params=params, adam=adam_init(params),
+                        carry_v=jax.device_put(jnp.zeros((n, 1+s)), sh),
+                        res_y=jnp.zeros(()), res_z=jnp.zeros(()))
+    xs = jax.device_put(x, sh); ys = jax.device_put(y, sh1)
+    weps = jax.device_put(w_eps, sh)
+    step = jax.jit(make_gp_outer_step(mesh, s, solver_epochs=5))
+    s1 = step(state, xs, ys, rff, weps)
+    s2 = step(s1, xs, ys, rff, weps)
+    r1, r2 = float(s1.res_z), float(s2.res_z)
+    print("RES", r1, r2)
+    assert np.isfinite(r1) and np.isfinite(r2)
+    assert r2 < r1  # warm-started progress accumulates
+    print("GP_STEP_OK")
+    """)
+    assert "GP_STEP_OK" in out
+
+
+def test_valid_spec_drops_nondividing_axes():
+    import jax
+
+    from repro.distributed.sharding import valid_spec
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    spec = valid_spec(mesh, (10, 7), (("pod", "data"), "model"))
+    assert spec == __import__("jax").sharding.PartitionSpec(("data",), "model")
+
+
+def test_smoke_sees_one_device():
+    """Guard: the pytest process must NOT inherit the 512-device flag."""
+    import jax
+
+    assert len(jax.devices()) == 1

@@ -1,0 +1,119 @@
+"""Estimator theory: initial-distance (eqs. 12-15), variance equality
+(App. A.1), and gradient-estimate accuracy for both estimators."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    PATHWISE,
+    STANDARD,
+    build_system_targets,
+    init_probes,
+    mll_grad_estimate,
+    probe_targets,
+)
+from repro.core.gradients import exact_grad_reference
+from repro.gp.hyperparams import HyperParams
+from repro.gp.kernels_math import regularised_kernel_matrix
+
+
+def test_initial_distance_theory(gp_problem):
+    """E||0 - u||_H^2 = tr(H^-1) (standard, eq.14) vs n (pathwise, eq.15)."""
+    x, params, h = gp_problem["x"], gp_problem["params"], gp_problem["h"]
+    n, d = x.shape
+    h_inv = jnp.linalg.inv(h)
+    s = 512
+
+    def mean_sqdist(est):
+        probes = init_probes(jax.random.PRNGKey(3), est, n, d, s, 2000)
+        b = probe_targets(probes, x, params)  # (n, s)
+        u = h_inv @ b
+        return float(jnp.mean(jnp.sum(u * (h @ u), axis=0)))
+
+    std = mean_sqdist(STANDARD)
+    path = mean_sqdist(PATHWISE)
+    tr = float(jnp.trace(h_inv))
+    assert abs(std - tr) / tr < 0.15
+    assert abs(path - n) / n < 0.15
+    # the paper's point: pathwise distance is smaller when noise precision
+    # is high; with sigma=0.3, tr(H^-1) >> n is expected here
+    assert std > path
+
+
+def test_pathwise_probe_covariance(gp_problem):
+    """xi ~ N(0, H): empirical second moment of the targets matches H."""
+    x, params, h = gp_problem["x"], gp_problem["params"], gp_problem["h"]
+    n, d = x.shape
+    probes = init_probes(jax.random.PRNGKey(5), PATHWISE, n, d, 4096, 4000)
+    xi = probe_targets(probes, x, params)
+    emp = (xi @ xi.T) / xi.shape[1]
+    err = jnp.max(jnp.abs(emp - h)) / jnp.max(jnp.abs(h))
+    assert float(err) < 0.2
+
+
+def test_variance_equality_noise_derivative(gp_problem):
+    """A.1: for dH/dsigma = 2 sigma I (commutes with H^-1), both estimators
+    have the SAME variance; empirical check."""
+    x, params, h = gp_problem["x"], gp_problem["params"], gp_problem["h"]
+    n = x.shape[0]
+    h_inv = jnp.linalg.inv(h)
+    key = jax.random.PRNGKey(11)
+    m = 4000
+    # standard: z^T H^-1 (2 sigma I) z
+    z = jax.random.normal(key, (n, m))
+    sigma = params.noise
+    q_std = 2 * sigma * jnp.sum(z * (h_inv @ z), axis=0)
+    # pathwise: zhat^T (2 sigma I) zhat with zhat ~ N(0, H^-1)
+    l = jnp.linalg.cholesky(h_inv + 1e-9 * jnp.eye(n))
+    zh = l @ jax.random.normal(jax.random.PRNGKey(12), (n, m))
+    q_path = 2 * sigma * jnp.sum(zh * zh, axis=0)
+    v1, v2 = float(jnp.var(q_std)), float(jnp.var(q_path))
+    assert abs(v1 - v2) / max(v1, v2) < 0.2
+    # means agree with the exact trace
+    tr = float(2 * sigma * jnp.trace(h_inv))
+    assert abs(float(jnp.mean(q_std)) - tr) / abs(tr) < 0.1
+    assert abs(float(jnp.mean(q_path)) - tr) / abs(tr) < 0.1
+
+
+@pytest.mark.parametrize("est", [STANDARD, PATHWISE])
+def test_gradient_estimate_matches_exact(gp_problem, est):
+    """With exact inner solves and many probes, the stochastic gradient
+    approaches the exact Cholesky gradient (eq. 5)."""
+    x, y, params, h = (gp_problem["x"], gp_problem["y"], gp_problem["params"],
+                       gp_problem["h"])
+    n, d = x.shape
+    probes = init_probes(jax.random.PRNGKey(3), est, n, d, 512, 4000)
+    targets = build_system_targets(probes, x, y, params)
+    v = jnp.linalg.solve(h, targets)
+    g, aux = mll_grad_estimate(x, y, params, v, targets, est, bm=64, bn=64)
+    g_exact = exact_grad_reference(x, y, params)
+    # Global relative error (per-leaf is dominated by MC noise on the
+    # small-magnitude leaves; unbiasedness is tested separately).
+    ga = jnp.concatenate([q.reshape(-1) for q in jax.tree.leaves(g)])
+    gb = jnp.concatenate([q.reshape(-1) for q in jax.tree.leaves(g_exact)])
+    rel = float(jnp.linalg.norm(ga - gb) / jnp.linalg.norm(gb))
+    assert rel < 0.15, rel
+
+
+def test_grad_estimate_unbiased_over_draws(gp_problem):
+    """Standard estimator is unbiased: average over independent probe draws
+    converges to the exact gradient."""
+    x, y, params, h = (gp_problem["x"], gp_problem["y"], gp_problem["params"],
+                       gp_problem["h"])
+    n, d = x.shape
+    g_exact = jnp.concatenate([
+        v.reshape(-1) for v in jax.tree.leaves(exact_grad_reference(x, y, params))
+    ])
+    acc = 0.0
+    reps = 24
+    for i in range(reps):
+        probes = init_probes(jax.random.PRNGKey(100 + i), STANDARD, n, d, 16)
+        targets = build_system_targets(probes, x, y, params)
+        v = jnp.linalg.solve(h, targets)
+        g, _ = mll_grad_estimate(x, y, params, v, targets, STANDARD,
+                                 bm=64, bn=64)
+        acc = acc + jnp.concatenate([q.reshape(-1) for q in jax.tree.leaves(g)])
+    mean = acc / reps
+    rel = float(jnp.linalg.norm(mean - g_exact) / jnp.linalg.norm(g_exact))
+    assert rel < 0.1

@@ -1,0 +1,73 @@
+"""RFF prior machinery: kernel approximation, Matérn-3/2 spectral sampling,
+and the deterministic warm-start reparameterisation contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.gp.hyperparams import HyperParams
+from repro.gp.kernels_math import kernel_matrix
+from repro.gp.rff import init_rff, prior_sample_at, rff_features
+
+
+def test_rff_covariance_approximates_matern():
+    d = 3
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (40, d))
+    p = HyperParams.create(d, lengthscale=0.8, signal=1.2)
+    st = init_rff(jax.random.PRNGKey(1), 8000, d, 1)
+    phi = rff_features(x, st, p)
+    k_hat = phi @ phi.T
+    k = kernel_matrix(x, x, p)
+    assert float(jnp.max(jnp.abs(k_hat - k))) < 0.08 * float(p.signal) ** 2
+
+
+def test_rff_covariance_rbf():
+    d = 2
+    x = jax.random.normal(jax.random.PRNGKey(0), (30, d))
+    p = HyperParams.create(d)
+    st = init_rff(jax.random.PRNGKey(1), 8000, d, 1, kind="rbf")
+    phi = rff_features(x, st, p)
+    k = kernel_matrix(x, x, p, kind="rbf")
+    assert float(jnp.max(jnp.abs(phi @ phi.T - k))) < 0.08
+
+
+def test_prior_sample_moments():
+    """f(x) = phi(x) w has E[f]=0 and Cov ~ K."""
+    d = 2
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, d))
+    p = HyperParams.create(d)
+    st = init_rff(jax.random.PRNGKey(1), 2000, d, 4096)
+    f = prior_sample_at(x, st, p)  # (16, 4096)
+    assert float(jnp.max(jnp.abs(jnp.mean(f, axis=1)))) < 0.1
+    emp = (f @ f.T) / f.shape[1]
+    k = kernel_matrix(x, x, p)
+    assert float(jnp.max(jnp.abs(emp - k))) < 0.25
+
+
+def test_lengthscale_reparameterisation_deterministic():
+    """Fixed base draws: targets change smoothly and deterministically with
+    theta (Appendix B: 'selecting a particular instance of a prior sample')."""
+    d = 2
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, d))
+    st = init_rff(jax.random.PRNGKey(1), 128, d, 2)
+    p1 = HyperParams.create(d, lengthscale=1.0)
+    p2 = HyperParams.create(d, lengthscale=1.0)
+    f1 = prior_sample_at(x, st, p1)
+    f2 = prior_sample_at(x, st, p2)
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    p3 = HyperParams.create(d, lengthscale=1.01)
+    f3 = prior_sample_at(x, st, p3)
+    assert 0 < float(jnp.max(jnp.abs(f3 - f1))) < 0.5
+
+
+def test_matern_frequency_tails_heavier_than_gaussian():
+    """Matérn-3/2 spectral density is a t_3 — heavier tails than RBF."""
+    d = 1
+    st_m = init_rff(jax.random.PRNGKey(3), 20000, d, 1, kind="matern32")
+    st_g = init_rff(jax.random.PRNGKey(3), 20000, d, 1, kind="rbf")
+    p = HyperParams.create(d)
+    from repro.gp.rff import rff_frequencies
+
+    om = np.abs(np.asarray(rff_frequencies(st_m, p)))[:, 0]
+    og = np.abs(np.asarray(rff_frequencies(st_g, p)))[:, 0]
+    assert np.quantile(om, 0.99) > 2.0 * np.quantile(og, 0.99)
