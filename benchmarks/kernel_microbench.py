@@ -1,10 +1,12 @@
-"""Matérn MVM backend microbenchmark + Pallas kernel working-set report.
+"""Kernel MVM backend microbenchmark + Pallas kernel working-set report.
 
-Wall-clock on CPU covers the jnp backends (dense vs streamed). The Pallas
-kernel runs in interpret mode here (correctness only — interpret wall time
-is meaningless), so its entry reports the STRUCTURAL roofline quantities of
-the BlockSpec tiling for TPU v5e instead: VMEM working set, per-tile
-arithmetic intensity, and the bound it implies.
+Runs per registered kernel (RBF + Matérn family). Wall-clock on CPU covers
+the jnp backends (dense vs streamed). The Pallas kernel runs in interpret
+mode here (correctness only — interpret wall time is meaningless), so its
+entry reports the STRUCTURAL roofline quantities of the BlockSpec tiling
+for TPU v5e instead: VMEM working set, per-tile arithmetic intensity, and
+the bound it implies. The tiling is shared across kernels; only the
+per-tile profile flop count differs.
 """
 from __future__ import annotations
 
@@ -16,11 +18,16 @@ import jax.numpy as jnp
 from benchmarks.common import csv_line
 from repro.gp.hyperparams import HyperParams
 from repro.gp.kernels_math import h_mvm_dense, h_mvm_streamed
+from repro.kernels.registry import available_kernels
 from repro.launch.mesh import HBM_BW, PEAK_BF16_FLOPS
+
+# Per-tile profile evaluation cost (VPU flops per kernel entry), on top of
+# the shared distance-tile GEMM: transcendental + polynomial terms.
+PROFILE_FLOPS = {"rbf": 8, "matern12": 10, "matern32": 10, "matern52": 12}
 
 
 def _time(f, *args, reps=3):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    jax.block_until_ready(f(*args))
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(f(*args))
@@ -32,33 +39,38 @@ def main(small: bool = True):
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (n, d))
     v = jax.random.normal(jax.random.fold_in(key, 1), (n, s))
-    p = HyperParams.create(d, noise=0.3)
 
-    dense = jax.jit(lambda x, v: h_mvm_dense(x, v, p))
-    streamed = jax.jit(lambda x, v: h_mvm_streamed(x, v, p, block_rows=512))
-    t_dense = _time(dense, x, v)
-    t_streamed = _time(streamed, x, v)
-    flops = 2 * n * n * (d + s) + 10 * n * n  # distances + profile + MVM
-    csv_line("kernel/dense", t_dense * 1e6,
-             f"gflops={flops/t_dense/1e9:.1f}")
-    csv_line("kernel/streamed", t_streamed * 1e6,
-             f"gflops={flops/t_streamed/1e9:.1f};mem=O(block*n)")
+    for kind in available_kernels():
+        p = HyperParams.create(d, noise=0.3, kernel=kind)
+        prof_flops = PROFILE_FLOPS.get(kind, 10)
 
-    # Pallas kernel structural report (TPU target; interpret-validated)
-    bm = bn = 256
-    s_pad = 128
-    vmem = (bm * d + bn * d + bn * s_pad + bm * bn + bm * s_pad) * 4
-    tile_flops = 2 * bm * bn * d + 10 * bm * bn + 2 * bm * bn * s_pad
-    tile_bytes = (bm * d + bn * d + bn * s_pad + bm * s_pad) * 4
-    intensity = tile_flops / tile_bytes
-    ridge = PEAK_BF16_FLOPS / HBM_BW
-    bound = "compute" if intensity > ridge else "memory"
-    csv_line(
-        "kernel/pallas_matern_mvm_structural", 0.0,
-        f"vmem_tile_bytes={vmem};intensity={intensity:.1f}flops/B;"
-        f"v5e_ridge={ridge:.0f};bound={bound};"
-        f"tile={bm}x{bn}xd{d}xs{s_pad}",
-    )
+        dense = jax.jit(lambda x, v, p=p: h_mvm_dense(x, v, p))
+        streamed = jax.jit(lambda x, v, p=p: h_mvm_streamed(x, v, p,
+                                                            block_rows=512))
+        t_dense = _time(dense, x, v)
+        t_streamed = _time(streamed, x, v)
+        flops = 2 * n * n * (d + s) + prof_flops * n * n
+        csv_line(f"kernel/{kind}/dense", t_dense * 1e6,
+                 f"gflops={flops/t_dense/1e9:.1f}")
+        csv_line(f"kernel/{kind}/streamed", t_streamed * 1e6,
+                 f"gflops={flops/t_streamed/1e9:.1f};mem=O(block*n)")
+
+        # Pallas kernel structural report (TPU target; interpret-validated)
+        bm = bn = 256
+        s_pad = 128
+        vmem = (bm * d + bn * d + bn * s_pad + bm * bn + bm * s_pad) * 4
+        tile_flops = (2 * bm * bn * d + prof_flops * bm * bn
+                      + 2 * bm * bn * s_pad)
+        tile_bytes = (bm * d + bn * d + bn * s_pad + bm * s_pad) * 4
+        intensity = tile_flops / tile_bytes
+        ridge = PEAK_BF16_FLOPS / HBM_BW
+        bound = "compute" if intensity > ridge else "memory"
+        csv_line(
+            f"kernel/{kind}/pallas_mvm_structural", 0.0,
+            f"vmem_tile_bytes={vmem};intensity={intensity:.1f}flops/B;"
+            f"v5e_ridge={ridge:.0f};bound={bound};"
+            f"tile={bm}x{bn}xd{d}xs{s_pad}",
+        )
 
 
 if __name__ == "__main__":

@@ -1,9 +1,11 @@
 """gp-iterative — the paper's own 'architecture'.
 
 Iterative GP marginal-likelihood optimisation (pathwise estimator + warm
-starts + epoch budgets) over a Matérn-3/2 kernel. Production shapes mirror
-the paper's large-data regime and run through the same mesh / dry-run /
-roofline machinery as the LM archs (DESIGN.md §5).
+starts + epoch budgets) over any registered stationary kernel (RBF or the
+Matérn family — see ``repro.kernels.registry``; Matérn-3/2 is the paper
+default). Production shapes mirror the paper's large-data regime and run
+through the same mesh / dry-run / roofline machinery as the LM archs
+(DESIGN.md §5).
 """
 from dataclasses import dataclass
 
@@ -11,7 +13,7 @@ from dataclasses import dataclass
 @dataclass(frozen=True)
 class GPArchConfig:
     name: str = "gp-iterative"
-    kind: str = "matern32"
+    kind: str = "matern32"  # any repro.kernels.registry name
     num_probes: int = 64
     num_rff_pairs: int = 1000
     estimator: str = "pathwise"
@@ -21,7 +23,18 @@ class GPArchConfig:
     precond_rank: int = 0  # preconditioner off in the distributed path
     block_rows: int = 1024  # per-device row tile for the ring MVM
 
+    def __post_init__(self):
+        from repro.kernels.registry import get_kernel
+
+        get_kernel(self.kind)  # fail fast on unknown kernel names
+
 
 CONFIG = GPArchConfig()
 
 SMOKE = GPArchConfig(num_probes=8, num_rff_pairs=64, solver_epochs=5)
+
+# One sweep entry per registered kernel — the multi-kernel scenario grid.
+KERNEL_SWEEP = tuple(
+    GPArchConfig(name=f"gp-iterative-{k}", kind=k)
+    for k in ("matern12", "matern32", "matern52", "rbf")
+)

@@ -19,6 +19,7 @@ from repro.core.estimators import PATHWISE, build_system_targets, init_probes
 from repro.core.outer import (
     OuterConfig,
     OuterState,
+    effective_kind,
     init_outer_state,
     outer_step,
 )
@@ -57,17 +58,18 @@ def pick_sgd_learning_rate(
     diverge; ``halve=True`` returns half of it (large-dataset rule)."""
     grid = sorted(grid or SGD_LR_GRID)
     n, d = x.shape
+    kind = effective_kind(cfg, params)
     probes = init_probes(
         key, cfg.estimator, n, d, cfg.num_probes, cfg.num_rff_pairs,
-        kind=cfg.kind, dtype=x.dtype,
+        kind=kind, dtype=x.dtype,
     )
     targets = build_system_targets(probes, x, y, params)
-    op = HOperator(x=x, params=params, kind=cfg.kind, backend=cfg.backend,
+    op = HOperator(x=x, params=params, kind=kind, backend=cfg.backend,
                    bm=cfg.bm, bn=cfg.bn)
     best = grid[0]
     for lr in grid:
         scfg = replace(cfg.solver, name="sgd", learning_rate=lr,
-                       max_epochs=probe_epochs)
+                       max_epochs=probe_epochs, kind=kind)
         res = solve(op, targets, None, scfg, key=key)
         r = float(res.res_y) + float(res.res_z)
         if np.isfinite(r) and r < 2.0 * 2.0:  # residuals are relative; >2 => diverging
@@ -102,7 +104,7 @@ def init_hypers_heuristic(
 
     @jax.jit
     def subset_fit(xc, yc):
-        params = HyperParams.create(d, dtype=x.dtype)
+        params = HyperParams.create(d, dtype=x.dtype, kernel=kind)
         adam = adam_init(params)
         cfg = AdamConfig(learning_rate=adam_lr)
 
@@ -213,10 +215,11 @@ def evaluate(
     current carry. Standard estimator: runs the s pathwise eval solves the
     paper charges to the standard path (Fig. 1), warm-started from zero.
     """
+    kind = effective_kind(cfg, state.params)
     if cfg.estimator == PATHWISE:
         pred = pathwise_predict(
             x, x_test, state.carry_v, state.probes, state.params,
-            kind=cfg.kind, bm=cfg.bm, bn=cfg.bn,
+            kind=kind, bm=cfg.bm, bn=cfg.bn,
         )
         m = predictive_metrics(y_test, pred, state.params)
     else:
@@ -224,16 +227,18 @@ def evaluate(
         key = jax.random.fold_in(state.key, 7)
         eval_probes = init_probes(
             key, PATHWISE, n, d, state.carry_v.shape[1] - 1,
-            cfg.num_rff_pairs, kind=cfg.kind, dtype=x.dtype,
+            cfg.num_rff_pairs, kind=kind, dtype=x.dtype,
         )
         # Reuse v_y from the carry; solve only the s probe systems.
         targets = build_system_targets(eval_probes, x, jnp.zeros((n,), x.dtype),
                                        state.params)
-        op = HOperator(x=x, params=state.params, kind=cfg.kind,
+        op = HOperator(x=x, params=state.params, kind=kind,
                        backend=cfg.backend, bm=cfg.bm, bn=cfg.bn)
-        res = solve(op, targets[:, 1:], None, cfg.solver, key=key)
+        scfg = (cfg.solver if cfg.solver.kind == kind
+                else replace(cfg.solver, kind=kind))
+        res = solve(op, targets[:, 1:], None, scfg, key=key)
         v = jnp.concatenate([state.carry_v[:, :1], res.v], axis=1)
         pred = pathwise_predict(x, x_test, v, eval_probes, state.params,
-                                kind=cfg.kind, bm=cfg.bm, bn=cfg.bn)
+                                kind=kind, bm=cfg.bm, bn=cfg.bn)
         m = predictive_metrics(y_test, pred, state.params)
     return {k: float(v) for k, v in m.items()}

@@ -21,7 +21,7 @@ kernel performs explicitly in one sweep over tiles.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -59,7 +59,7 @@ def mll_grad_estimate(
     v: jax.Array,
     targets: jax.Array,
     estimator: str,
-    kind: str = "matern32",
+    kind: Optional[str] = None,
     bm: int = 1024,
     bn: int = 1024,
 ):
@@ -98,7 +98,7 @@ def exact_grad_reference(
     x: jax.Array,
     y: jax.Array,
     params: HyperParams,
-    kind: str = "matern32",
+    kind: Optional[str] = None,
 ):
     """Dense-Cholesky exact gradient (paper's reference; tests only)."""
     from repro.gp.exact import exact_mll

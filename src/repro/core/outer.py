@@ -39,13 +39,22 @@ class OuterConfig:
     warm_start: bool = True
     num_probes: int = 64  # s (paper default)
     num_rff_pairs: int = 1000  # m sin/cos pairs (2m features)
-    kind: str = "matern32"
+    kind: Optional[str] = None  # registered kernel; None => params.kernel
     solver: SolverConfig = field(default_factory=SolverConfig)
     adam: AdamConfig = field(default_factory=lambda: AdamConfig(learning_rate=0.1))
     num_steps: int = 100
     backend: str = "streamed"  # HOperator backend
     bm: int = 1024
     bn: int = 1024
+
+
+def effective_kind(cfg: "OuterConfig", params: HyperParams) -> str:
+    """Kernel precedence: OuterConfig.kind > SolverConfig.kind > params.kernel."""
+    if cfg.kind is not None:
+        return cfg.kind
+    if cfg.solver.kind is not None:
+        return cfg.solver.kind
+    return params.kernel
 
 
 class OuterState(NamedTuple):
@@ -73,10 +82,15 @@ def init_outer_state(
 ) -> OuterState:
     n, d = x.shape
     kp, kprobe, krest = jax.random.split(key, 3)
-    params = init_params if init_params is not None else HyperParams.create(d)
+    if init_params is not None:
+        params = init_params
+    else:
+        params = HyperParams.create(
+            d, kernel=cfg.kind or cfg.solver.kind or "matern32"
+        )
     probes = init_probes(
         kprobe, cfg.estimator, n, d, cfg.num_probes, cfg.num_rff_pairs,
-        kind=cfg.kind, dtype=x.dtype,
+        kind=effective_kind(cfg, params), dtype=x.dtype,
     )
     carry = jnp.zeros((n, 1 + cfg.num_probes), dtype=x.dtype)
     z = jnp.zeros((), jnp.float32)
@@ -110,6 +124,7 @@ def outer_step(
     state: OuterState, x: jax.Array, y: jax.Array, cfg: OuterConfig
 ) -> tuple[OuterState, dict]:
     """One outer MLL step: solve -> gradient -> Adam -> carry."""
+    kind = effective_kind(cfg, state.params)
     key, ksolve, kprobe = jax.random.split(state.key, 3)
 
     probes = state.probes
@@ -120,14 +135,18 @@ def outer_step(
     v0 = state.carry_v if cfg.warm_start else None
 
     op = HOperator(
-        x=x, params=state.params, kind=cfg.kind,
+        x=x, params=state.params, kind=kind,
         backend=cfg.backend, bm=cfg.bm, bn=cfg.bn,
     )
-    res = solve(op, targets, v0, cfg.solver, key=ksolve)
+    # Align the solver config with the resolved kernel so the documented
+    # precedence (OuterConfig.kind > SolverConfig.kind) holds; solve()'s
+    # conflict check then only fires for hand-built operator/config pairs.
+    scfg = cfg.solver if cfg.solver.kind == kind else replace(cfg.solver, kind=kind)
+    res = solve(op, targets, v0, scfg, key=ksolve)
 
     grads, aux = mll_grad_estimate(
         x, y, state.params, res.v, targets, cfg.estimator,
-        kind=cfg.kind, bm=cfg.bm, bn=cfg.bn,
+        kind=kind, bm=cfg.bm, bn=cfg.bn,
     )
     new_params, new_adam = adam_update(
         grads, state.adam, state.params, cfg.adam, maximize=True
@@ -162,7 +181,7 @@ def outer_step(
 
 def exact_outer_step(
     params: HyperParams, adam: AdamState, x: jax.Array, y: jax.Array,
-    adam_cfg: AdamConfig, kind: str = "matern32",
+    adam_cfg: AdamConfig, kind: Optional[str] = None,
 ):
     """Reference: one Adam step on the EXACT Cholesky MLL gradient.
 

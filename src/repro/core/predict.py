@@ -14,7 +14,7 @@ them — reproducing Fig. 1's extra "prediction" cost for the standard path.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +37,7 @@ def pathwise_predict(
     v: jax.Array,
     probes: ProbeState,
     params: HyperParams,
-    kind: str = "matern32",
+    kind: Optional[str] = None,
     bm: int = 1024,
     bn: int = 1024,
 ) -> Predictions:
@@ -78,7 +78,7 @@ def mean_only_predict(
     xs: jax.Array,
     v_y: jax.Array,
     params: HyperParams,
-    kind: str = "matern32",
+    kind: Optional[str] = None,
     bm: int = 1024,
     bn: int = 1024,
 ) -> jax.Array:

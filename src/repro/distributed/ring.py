@@ -24,7 +24,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.gp.hyperparams import HyperParams
-from repro.gp.kernels_math import _PROFILES, scaled_sqdist
+from repro.gp.kernels_math import profile_from_r2, scaled_sqdist
 
 ROW_AXES = ("pod", "data", "model")  # rows sharded over every mesh axis
 
@@ -59,7 +59,7 @@ def ring_kernel_mvm(
     """
     axes = _present_axes(mesh)
     sizes = [mesh.shape[a] for a in axes]
-    profile = _PROFILES[kind]
+    profile = profile_from_r2(kind)
     # Constrained hypers enter the manual region as explicit replicated
     # operands (closure capture of sharded tracers is rejected by shard_map).
     lengthscales = params.lengthscales

@@ -8,7 +8,7 @@ Everything here is O(n^3) compute / O(n^2) memory by design.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +20,7 @@ LOG2PI = 1.8378770664093453
 
 
 def exact_mll(
-    x: jax.Array, y: jax.Array, params: HyperParams, kind: str = "matern32"
+    x: jax.Array, y: jax.Array, params: HyperParams, kind: Optional[str] = None
 ) -> jax.Array:
     """Marginal log-likelihood (paper eq. 4), exact via Cholesky."""
     n = x.shape[0]
@@ -32,7 +32,7 @@ def exact_mll(
 
 
 def exact_mll_grad(
-    x: jax.Array, y: jax.Array, params: HyperParams, kind: str = "matern32"
+    x: jax.Array, y: jax.Array, params: HyperParams, kind: Optional[str] = None
 ):
     """(mll, grad) wrt the raw hyperparameters via autodiff (exact)."""
     return jax.value_and_grad(lambda p: exact_mll(x, y, p, kind=kind))(params)
@@ -48,7 +48,7 @@ def exact_posterior(
     y: jax.Array,
     xs: jax.Array,
     params: HyperParams,
-    kind: str = "matern32",
+    kind: Optional[str] = None,
 ) -> ExactPosterior:
     """Exact posterior mean/variance at test inputs xs (paper eqs. 1-2)."""
     h = regularised_kernel_matrix(x, params, kind=kind)

@@ -34,11 +34,15 @@ class HyperParams(NamedTuple):
       raw_lengthscales: shape (d,), one per input dimension.
       raw_signal: scalar signal scale (sqrt of kernel variance).
       raw_noise: scalar observation noise scale sigma.
+      kernel: registered kernel name (repro.kernels.registry) — static pytree
+        aux data, not a leaf, so it survives tree maps / Adam / checkpointing
+        and acts as the default ``kind`` wherever one is not given explicitly.
     """
 
     raw_lengthscales: jax.Array
     raw_signal: jax.Array
     raw_noise: jax.Array
+    kernel: str = "matern32"
 
     @property
     def lengthscales(self) -> jax.Array:
@@ -63,6 +67,7 @@ class HyperParams(NamedTuple):
         signal: float = 1.0,
         noise: float = 1.0,
         dtype=jnp.float32,
+        kernel: str = "matern32",
     ) -> "HyperParams":
         """Constrained-space constructor (paper initialises at 1.0)."""
         ls = jnp.full((d,), lengthscale, dtype=dtype)
@@ -70,6 +75,7 @@ class HyperParams(NamedTuple):
             raw_lengthscales=softplus_inverse(ls),
             raw_signal=softplus_inverse(jnp.asarray(signal, dtype=dtype)),
             raw_noise=softplus_inverse(jnp.asarray(noise, dtype=dtype)),
+            kernel=kernel,
         )
 
     def constrained(self) -> dict:
@@ -84,3 +90,17 @@ class HyperParams(NamedTuple):
         return jnp.concatenate(
             [self.lengthscales, self.signal[None], self.noise[None]]
         )
+
+
+# ``kernel`` rides along as static aux data: tree maps (Adam updates, grads,
+# checkpoint restore-by-template) see only the three raw arrays as leaves.
+jax.tree_util.register_pytree_node(
+    HyperParams,
+    lambda p: ((p.raw_lengthscales, p.raw_signal, p.raw_noise), p.kernel),
+    lambda kernel, children: HyperParams(*children, kernel=kernel),
+)
+
+
+def resolve_kind(kind, params) -> str:
+    """The effective kernel name: an explicit ``kind`` wins over the params'."""
+    return kind if kind is not None else params.kernel

@@ -1,26 +1,28 @@
-"""Kernel mathematics: Matérn-3/2 (paper default) and RBF.
+"""Dense/streamed kernel mathematics over the registered stationary kernels.
 
 All kernels are parameterised by per-dimension lengthscales and a scalar
-signal scale (paper §2), evaluated as ``k(a, b) = s^2 * kappa(r)`` with
-``r = ||(a - b) / ell||_2`` the scaled Euclidean distance.
+signal scale (paper §2), evaluated as ``k(a, b) = s^2 * kappa(r^2)`` with
+``r = ||(a - b) / ell||_2`` the scaled Euclidean distance. The scalar
+profiles ``kappa`` live in ``repro.kernels.registry`` (RBF + Matérn family)
+and are SHARED with the fused Pallas tile kernels, so dense reference and
+tiled hot path agree bit-for-bit on the profile maths.
 
 The *regularised kernel matrix* is ``H_theta = K(x, x) + sigma^2 I``.
 
 These functions are the pure-jnp oracles; the Pallas kernels in
-``repro.kernels.matern`` compute tiled/fused versions of the same maths.
+``repro.kernels`` compute tiled/fused versions of the same maths.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.gp.hyperparams import HyperParams
+from repro.gp.hyperparams import HyperParams, resolve_kind
+from repro.kernels.registry import available_kernels, get_kernel
 
-SQRT3 = 1.7320508075688772
-_R2_FLOOR = 1e-30  # keeps sqrt differentiable at coincident points
 
 
 def scaled_sqdist(x1: jax.Array, x2: jax.Array, lengthscales: jax.Array) -> jax.Array:
@@ -43,36 +45,44 @@ def scaled_sqdist(x1: jax.Array, x2: jax.Array, lengthscales: jax.Array) -> jax.
     return jnp.maximum(r2, 0.0)
 
 
-def matern32_from_r2(r2: jax.Array, signal: jax.Array) -> jax.Array:
-    """Matérn-3/2 profile from squared scaled distance."""
-    r = jnp.sqrt(jnp.maximum(r2, _R2_FLOOR))
-    return (signal**2) * (1.0 + SQRT3 * r) * jnp.exp(-SQRT3 * r)
+def profile_from_r2(kind: str) -> Callable:
+    """Signal-scaled profile ``(r2, signal) -> s^2 kappa(r2)`` for ``kind``."""
+    spec = get_kernel(kind)
+
+    def profile(r2: jax.Array, signal: jax.Array) -> jax.Array:
+        return (signal**2) * spec.kappa_from_r2(r2)
+
+    return profile
 
 
-def rbf_from_r2(r2: jax.Array, signal: jax.Array) -> jax.Array:
-    """RBF (squared-exponential) profile from squared scaled distance."""
-    return (signal**2) * jnp.exp(-0.5 * r2)
-
-
-_PROFILES: dict[str, Callable] = {
-    "matern32": matern32_from_r2,
-    "rbf": rbf_from_r2,
+# Dense signal-scaled profiles, one per registered kernel. Built at import;
+# kernels registered later are reachable via profile_from_r2 / get_kernel.
+PROFILES: dict[str, Callable] = {
+    name: profile_from_r2(name) for name in available_kernels()
 }
+_PROFILES = PROFILES  # back-compat alias
+
+# Named profiles of the built-in family (back-compat with the seed API).
+rbf_from_r2 = PROFILES["rbf"]
+matern12_from_r2 = PROFILES["matern12"]
+matern32_from_r2 = PROFILES["matern32"]
+matern52_from_r2 = PROFILES["matern52"]
 
 
 def kernel_matrix(
     x1: jax.Array,
     x2: jax.Array,
     params: HyperParams,
-    kind: str = "matern32",
+    kind: Optional[str] = None,
 ) -> jax.Array:
     """Dense cross-kernel matrix K(x1, x2; theta) of shape (n, m)."""
+    kind = resolve_kind(kind, params)
     r2 = scaled_sqdist(x1, x2, params.lengthscales)
-    return _PROFILES[kind](r2, params.signal)
+    return profile_from_r2(kind)(r2, params.signal)
 
 
 def regularised_kernel_matrix(
-    x: jax.Array, params: HyperParams, kind: str = "matern32"
+    x: jax.Array, params: HyperParams, kind: Optional[str] = None
 ) -> jax.Array:
     """H_theta = K(x, x) + sigma^2 I (dense; reference/small-n only)."""
     n = x.shape[0]
@@ -86,7 +96,7 @@ def kernel_mvm_streamed(
     x2: jax.Array,
     v: jax.Array,
     params: HyperParams,
-    kind: str = "matern32",
+    kind: Optional[str] = None,
     block_rows: int = 1024,
 ) -> jax.Array:
     """K(x1, x2) @ v without materialising K — O(block * m) memory.
@@ -101,6 +111,7 @@ def kernel_mvm_streamed(
     Returns:
       (n, s) or (n,) — K @ v.
     """
+    kind = resolve_kind(kind, params)
     squeeze = v.ndim == 1
     if squeeze:
         v = v[:, None]
@@ -109,10 +120,11 @@ def kernel_mvm_streamed(
     pad = nb * block_rows - n
     x1p = jnp.pad(x1, ((0, pad), (0, 0)))
     blocks = x1p.reshape(nb, block_rows, x1.shape[1])
+    profile = profile_from_r2(kind)
 
     def body(xb):
         r2 = scaled_sqdist(xb, x2, params.lengthscales)
-        kb = _PROFILES[kind](r2, params.signal)
+        kb = profile(r2, params.signal)
         return kb @ v
 
     out = jax.lax.map(body, blocks).reshape(nb * block_rows, v.shape[1])[:n]
@@ -120,7 +132,7 @@ def kernel_mvm_streamed(
 
 
 def h_mvm_dense(
-    x: jax.Array, v: jax.Array, params: HyperParams, kind: str = "matern32"
+    x: jax.Array, v: jax.Array, params: HyperParams, kind: Optional[str] = None
 ) -> jax.Array:
     """H_theta @ v via the dense kernel matrix (reference)."""
     h = regularised_kernel_matrix(x, params, kind=kind)
@@ -131,7 +143,7 @@ def h_mvm_streamed(
     x: jax.Array,
     v: jax.Array,
     params: HyperParams,
-    kind: str = "matern32",
+    kind: Optional[str] = None,
     block_rows: int = 1024,
 ) -> jax.Array:
     """H_theta @ v = K @ v + sigma^2 v, streamed (no n x n materialisation)."""

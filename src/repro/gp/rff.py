@@ -5,11 +5,13 @@ estimator (paper §3, Appendix B): a prior sample is ``f(.) = phi(.) @ w``
 with ``w ~ N(0, I_{2m})`` and ``phi`` built from ``m`` sin/cos frequency
 pairs (paper uses m=1000 pairs, 2000 features total).
 
-Matérn-3/2 spectral sampling: a standard multivariate Student-t with 3
-degrees of freedom has characteristic function ``(1 + sqrt(3)|t|)
-exp(-sqrt(3)|t|)`` — exactly the Matérn-3/2 correlation — so frequencies are
-``omega = z * sqrt(3 / u) / ell`` with ``z ~ N(0, I_d)`` and ``u ~ chi^2_3``
-(one ``u`` per frequency, shared across dimensions). RBF uses ``omega = z/ell``.
+Spectral sampling is kernel-agnostic via ``repro.kernels.registry``: the
+Matérn-nu spectral density is a multivariate Student-t with 2*nu degrees of
+freedom — a Gaussian scale mixture — so frequencies are ``omega = z *
+sqrt(2 nu / u) / ell`` with ``z ~ N(0, I_d)`` and ``u ~ chi^2_{2 nu}`` (one
+``u`` per frequency, shared across dimensions; e.g. Matérn-3/2 has
+characteristic function ``(1 + sqrt(3)|t|) exp(-sqrt(3)|t|)``). RBF uses
+the plain Gaussian ``omega = z / ell`` (``u`` degenerate at 1).
 
 Warm-start contract (paper Appendix B): the *base* draws ``(z, u, w)`` are
 sampled ONCE and fixed; each outer step re-evaluates ``omega`` from the fixed
@@ -25,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.gp.hyperparams import HyperParams
+from repro.kernels.registry import get_kernel
 
 
 class RFFState(NamedTuple):
@@ -35,7 +38,7 @@ class RFFState(NamedTuple):
     """
 
     z: jax.Array  # (m, d) standard normal
-    u: jax.Array  # (m,) chi^2_3 (matern32) or ones (rbf)
+    u: jax.Array  # (m,) spectral mixture draws (chi^2_{2 nu}; ones for rbf)
     w: jax.Array  # (2m, s) feature weights, one column per prior sample
     kind: str = "matern32"
 
@@ -55,25 +58,17 @@ def init_rff(
     kind: str = "matern32",
     dtype=jnp.float32,
 ) -> RFFState:
+    spec = get_kernel(kind)  # raises on unknown kernel
     kz, ku, kw = jax.random.split(key, 3)
     z = jax.random.normal(kz, (num_pairs, d), dtype=dtype)
-    if kind == "matern32":
-        # chi^2 with 3 dof = 2 * Gamma(shape=1.5, scale=1)
-        u = 2.0 * jax.random.gamma(ku, 1.5, (num_pairs,), dtype=dtype)
-    elif kind == "rbf":
-        u = jnp.ones((num_pairs,), dtype=dtype)
-    else:
-        raise ValueError(f"unknown kernel kind {kind!r}")
+    u = spec.mixture_sample(ku, num_pairs, dtype=dtype)
     w = jax.random.normal(kw, (2 * num_pairs, num_samples), dtype=dtype)
     return RFFState(z=z, u=u, w=w, kind=kind)
 
 
 def rff_frequencies(state: RFFState, params: HyperParams) -> jax.Array:
     """Frequencies (m, d) for the current lengthscales."""
-    if state.kind == "matern32":
-        scale = jnp.sqrt(3.0 / state.u)[:, None]
-    else:
-        scale = 1.0
+    scale = get_kernel(state.kind).mixture_scale(state.u)[:, None]
     return state.z * scale / params.lengthscales
 
 

@@ -1,10 +1,33 @@
 """Pallas TPU kernels for compute hot spots (DESIGN.md §4).
 
-matern/ — fused Matérn-3/2 kernel MVM with custom VJP: the inner-loop hot
-spot of every GP solver. The backward tile kernel doubles as the fused
+Kernel-agnostic substrate: ``registry`` holds the stationary kernel
+profiles (RBF + Matérn-1/2, -3/2, -5/2 — profile, derivative, spectral
+sampler); ``tiled`` holds the shared fused distance-tile Pallas kernels
+(the inner-loop hot spot of every GP solver); ``ops`` wraps them in a
+jit-ready custom-VJP op whose backward tile kernel doubles as the fused
 hyper-gradient sweep (all d+2 hyperparameter gradients share its distance
-tiles via the pre/post-scaling AD contract in ops.py).
+tiles via the pre/post-scaling AD contract); ``ref`` is the dense oracle.
 """
-from repro.kernels.matern import h_mvm, h_mvm_ref, matern_mvm, matern_mvm_ref
+from repro.kernels.registry import (
+    KERNELS,
+    KernelSpec,
+    available_kernels,
+    get_kernel,
+    register_kernel,
+)
+from repro.kernels.ops import h_mvm, kernel_mvm, matern_mvm
+from repro.kernels.ref import h_mvm_ref, kernel_mvm_ref, matern_mvm_ref
 
-__all__ = ["matern_mvm", "h_mvm", "matern_mvm_ref", "h_mvm_ref"]
+__all__ = [
+    "KERNELS",
+    "KernelSpec",
+    "available_kernels",
+    "get_kernel",
+    "register_kernel",
+    "kernel_mvm",
+    "h_mvm",
+    "kernel_mvm_ref",
+    "h_mvm_ref",
+    "matern_mvm",
+    "matern_mvm_ref",
+]

@@ -1,4 +1,17 @@
-from repro.kernels.matern.ops import h_mvm, matern_mvm
-from repro.kernels.matern.ref import h_mvm_ref, matern_mvm_ref
+"""Back-compat shim: the Matérn-3/2 Pallas path is now the ``matern32``
+entry of the kernel-agnostic substrate in ``repro.kernels`` (registry +
+tiled + ops + ref). Import from there in new code."""
+from repro.kernels.ops import h_mvm, kernel_mvm, matern_mvm
+from repro.kernels.ref import h_mvm_ref, kernel_mvm_ref, matern_mvm_ref
+from repro.kernels.tiled import matern_mvm_bwd_pallas, matern_mvm_pallas
 
-__all__ = ["matern_mvm", "h_mvm", "matern_mvm_ref", "h_mvm_ref"]
+__all__ = [
+    "matern_mvm",
+    "h_mvm",
+    "matern_mvm_ref",
+    "h_mvm_ref",
+    "kernel_mvm",
+    "kernel_mvm_ref",
+    "matern_mvm_pallas",
+    "matern_mvm_bwd_pallas",
+]

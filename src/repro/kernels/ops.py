@@ -1,15 +1,18 @@
-"""Jit-ready public op around the Pallas Matérn MVM, with a custom VJP.
+"""Jit-ready public op around the Pallas kernel MVM, with a custom VJP.
 
-``matern_mvm(x1, x2, v, params)`` computes ``K(x1, x2; theta) @ v`` where
-``K`` is the Matérn-3/2 kernel with per-dimension lengthscales and signal
-scale (no noise diagonal — HOperator adds ``sigma^2 v`` outside).
+``kernel_mvm(x1, x2, v, params, kind=...)`` computes ``K(x1, x2; theta) @ v``
+for any kernel registered in ``repro.kernels.registry`` (RBF and the Matérn
+family), with per-dimension lengthscales and signal scale (no noise diagonal
+— HOperator adds ``sigma^2 v`` outside). ``kind=None`` defaults to
+``params.kernel``.
 
 Differentiation contract: gradients flow to ``x1``, ``x2``, ``v`` and the
 hyperparameters. Lengthscale/signal gradients are picked up by plain JAX AD
 through the pre-scaling ``u = x / ell`` and the post-scaling ``signal**2 *
 out`` — the Pallas pair (forward + backward tile kernels) only ever sees the
-unit kernel of pre-scaled inputs. The backward pass is the paper-motivated
-fusion: ONE extra sweep over distance tiles serves every hyperparameter.
+unit kernel of pre-scaled inputs, and only the per-tile profile evaluation
+differs between kernels. The backward pass is the paper-motivated fusion:
+ONE extra sweep over distance tiles serves every hyperparameter.
 
 On CPU (this container) the kernels run with ``interpret=True``; on TPU the
 same BlockSpecs compile via Mosaic.
@@ -22,8 +25,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.gp.hyperparams import HyperParams
-from repro.kernels.matern.kernel import matern_mvm_bwd_pallas, matern_mvm_pallas
+from repro.gp.hyperparams import HyperParams, resolve_kind
+from repro.kernels.tiled import kernel_mvm_bwd_pallas, kernel_mvm_pallas
 
 
 def _interpret_default() -> bool:
@@ -35,35 +38,40 @@ def _pad_rows(a: jax.Array, mult: int) -> jax.Array:
     return a if r == 0 else jnp.pad(a, ((0, r), (0, 0)))
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def _unit_mvm(u, w, v, bm, bn, interpret):
-    return matern_mvm_pallas(u, w, v, bm=bm, bn=bn, interpret=interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _unit_mvm(u, w, v, kind, bm, bn, interpret):
+    return kernel_mvm_pallas(u, w, v, kind=kind, bm=bm, bn=bn,
+                             interpret=interpret)
 
 
-def _unit_mvm_fwd(u, w, v, bm, bn, interpret):
-    return _unit_mvm(u, w, v, bm, bn, interpret), (u, w, v)
+def _unit_mvm_fwd(u, w, v, kind, bm, bn, interpret):
+    return _unit_mvm(u, w, v, kind, bm, bn, interpret), (u, w, v)
 
 
-def _unit_mvm_bwd(bm, bn, interpret, res, g):
+def _unit_mvm_bwd(kind, bm, bn, interpret, res, g):
     u, w, v = res
     g = g.astype(jnp.float32)
     # db = kappa(w, u) @ g  — forward kernel, roles swapped.
-    dv = matern_mvm_pallas(w, u, g, bm=bn, bn=bm, interpret=interpret)
+    dv = kernel_mvm_pallas(w, u, g, kind=kind, bm=bn, bn=bm,
+                           interpret=interpret)
     # du: fused distance-tile backward; dw by the (u,w)/(g,v) symmetry
     # D(u,w,g,v)^T = D(w,u,v,g).
-    du = matern_mvm_bwd_pallas(u, w, g, v, bm=bm, bn=bn, interpret=interpret)
-    dw = matern_mvm_bwd_pallas(w, u, v, g, bm=bn, bn=bm, interpret=interpret)
+    du = kernel_mvm_bwd_pallas(u, w, g, v, kind=kind, bm=bm, bn=bn,
+                               interpret=interpret)
+    dw = kernel_mvm_bwd_pallas(w, u, v, g, kind=kind, bm=bn, bn=bm,
+                               interpret=interpret)
     return du.astype(u.dtype), dw.astype(w.dtype), dv.astype(v.dtype)
 
 
 _unit_mvm.defvjp(_unit_mvm_fwd, _unit_mvm_bwd)
 
 
-def matern_mvm(
+def kernel_mvm(
     x1: jax.Array,
     x2: jax.Array,
     v: jax.Array,
     params: HyperParams,
+    kind: Optional[str] = None,
     bm: int = 256,
     bn: int = 256,
     interpret: Optional[bool] = None,
@@ -72,9 +80,11 @@ def matern_mvm(
 
     Args:
       x1: (n, d); x2: (m, d); v: (m, s) or (m,).
+      kind: registered kernel name; defaults to ``params.kernel``.
     Returns:
       (n, s) or (n,) in x1.dtype.
     """
+    kind = resolve_kind(kind, params)
     if interpret is None:
         interpret = _interpret_default()
     squeeze = v.ndim == 1
@@ -88,7 +98,7 @@ def matern_mvm(
     vp = _pad_rows(v, bn)
     out = _unit_mvm(
         u.astype(jnp.float32), w.astype(jnp.float32), vp.astype(jnp.float32),
-        bm, bn, interpret,
+        kind, bm, bn, interpret,
     )[:n]
     out = (params.signal**2) * out
     out = out.astype(x1.dtype)
@@ -99,11 +109,17 @@ def h_mvm(
     x: jax.Array,
     v: jax.Array,
     params: HyperParams,
+    kind: Optional[str] = None,
     bm: int = 256,
     bn: int = 256,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """H_theta @ v = K @ v + sigma^2 v via the Pallas kernel."""
-    return matern_mvm(x, x, v, params, bm=bm, bn=bn, interpret=interpret) + (
-        params.noise**2
-    ) * v
+    return kernel_mvm(x, x, v, params, kind=kind, bm=bm, bn=bn,
+                      interpret=interpret) + (params.noise**2) * v
+
+
+def matern_mvm(x1, x2, v, params, bm=256, bn=256, interpret=None):
+    """Original Matérn-3/2 entry point (compat wrapper over kernel_mvm)."""
+    return kernel_mvm(x1, x2, v, params, kind="matern32", bm=bm, bn=bn,
+                      interpret=interpret)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the Pallas kernel MVM (dense; small n only)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.gp.hyperparams import HyperParams, resolve_kind
+
+
+def kernel_mvm_ref(
+    x1: jax.Array,
+    x2: jax.Array,
+    v: jax.Array,
+    params: HyperParams,
+    kind: Optional[str] = None,
+) -> jax.Array:
+    """Dense K(x1, x2) @ v — the correctness oracle."""
+    # Deferred: repro.gp.kernels_math itself imports the registry from this
+    # package, so a module-level import here would be circular.
+    from repro.gp.kernels_math import kernel_matrix
+
+    kind = resolve_kind(kind, params)
+    squeeze = v.ndim == 1
+    if squeeze:
+        v = v[:, None]
+    out = kernel_matrix(x1, x2, params, kind=kind) @ v
+    return out[:, 0] if squeeze else out
+
+
+def h_mvm_ref(
+    x: jax.Array, v: jax.Array, params: HyperParams, kind: Optional[str] = None
+) -> jax.Array:
+    return kernel_mvm_ref(x, x, v, params, kind=kind) + (params.noise**2) * v
+
+
+def matern_mvm_ref(x1, x2, v, params):
+    """Original Matérn-3/2 oracle (compat wrapper)."""
+    return kernel_mvm_ref(x1, x2, v, params, kind="matern32")

@@ -1,21 +1,23 @@
-"""Pallas TPU kernels for the fused Matérn-3/2 kernel matrix-vector product.
+"""Pallas TPU kernels for fused stationary-kernel matrix-vector products.
 
 The GP solvers' hot spot is ``K(x1, x2) @ V`` where ``K`` is n x m and never
 fits in HBM for the paper's large-n regime. These kernels stream
 FlashAttention-style: a (bm x bn) *distance tile* is built in VMEM from row/
 column blocks of the (pre-scaled) inputs — the cross term is a single MXU
-GEMM — the Matérn-3/2 profile is applied in VREGs, and the tile is
-immediately contracted against the corresponding V block into a (bm x s)
-fp32 accumulator. K is never materialised.
+GEMM — the kernel profile is applied in VREGs, and the tile is immediately
+contracted against the corresponding V block into a (bm x s) fp32
+accumulator. K is never materialised.
 
-Both kernels operate on the UNIT-signal kernel ``kappa(r) = (1+sqrt3 r)
-exp(-sqrt3 r)`` of PRE-SCALED inputs ``u = x / ell``; the signal**2 factor,
-lengthscale scaling and the sigma**2 diagonal live OUTSIDE (ops.py), where
-plain JAX autodiff picks up their gradients.
+The tiling plumbing (BlockSpecs, grid order, accumulation, padding contract)
+is kernel-AGNOSTIC: the only per-kernel code is the scalar profile
+``kappa(r2)`` and its derivative ``dkappa/dr2`` looked up from
+``repro.kernels.registry``. Both kernels operate on the UNIT kernel of
+PRE-SCALED inputs ``u = x / ell``; the signal**2 factor, lengthscale scaling
+and the sigma**2 diagonal live OUTSIDE (ops.py), where plain JAX autodiff
+picks up their gradients.
 
-Forward:   out[i]   = sum_j kappa(||u_i - w_j||) v_j
+Forward:   out[i]   = sum_j kappa(||u_i - w_j||^2) v_j
 Backward:  du_i     = sum_j D_ij * 2 (u_i - w_j),  D = (g v^T) . dkappa/dr2
-           (dkappa/dr2 = -(3/2) exp(-sqrt3 r): smooth, no 1/r singularity)
 
 The same backward kernel computes dw by symmetry (swap (u,w) and (g,v)),
 and db is the forward kernel with (u,w) swapped — see ops.py. This is the
@@ -33,8 +35,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-SQRT3 = 1.7320508075688772
-_R2_FLOOR = 1e-30
+from repro.kernels.registry import KernelSpec, get_kernel
 
 
 def _dist_tile(u, w):
@@ -47,12 +48,11 @@ def _dist_tile(u, w):
     return jnp.maximum(uu + ww.T - 2.0 * cross, 0.0)
 
 
-def _mvm_kernel(u_ref, w_ref, v_ref, out_ref):
+def _mvm_kernel(spec: KernelSpec, u_ref, w_ref, v_ref, out_ref):
     """One (i, j) tile of kappa(u, w) @ v, accumulated over j."""
     j = pl.program_id(1)
     r2 = _dist_tile(u_ref[...], w_ref[...])
-    r = jnp.sqrt(r2 + _R2_FLOOR)
-    k = (1.0 + SQRT3 * r) * jnp.exp(-SQRT3 * r)
+    k = spec.kappa_from_r2(r2)
     acc = jax.lax.dot(
         k.astype(v_ref.dtype), v_ref[...], preferred_element_type=jnp.float32
     )
@@ -66,18 +66,17 @@ def _mvm_kernel(u_ref, w_ref, v_ref, out_ref):
         out_ref[...] += acc
 
 
-def _mvm_bwd_kernel(u_ref, w_ref, g_ref, v_ref, du_ref):
+def _mvm_bwd_kernel(spec: KernelSpec, u_ref, w_ref, g_ref, v_ref, du_ref):
     """One (i, j) tile of du = sum_j D_ij 2 (u_i - w_j), accumulated over j.
 
-    D = (g v^T) * dkappa/dr2, with dkappa/dr2 = -(3/2) exp(-sqrt3 r).
+    D = (g v^T) * dkappa/dr2.
     du_i = 2 * (rowsum(D)_i * u_i - (D @ w)_i).
     """
     j = pl.program_id(1)
     u = u_ref[...]
     w = w_ref[...]
     r2 = _dist_tile(u, w)
-    r = jnp.sqrt(r2 + _R2_FLOOR)
-    dk = -1.5 * jnp.exp(-SQRT3 * r)  # dkappa/dr2
+    dk = spec.dkappa_dr2(r2)
     e = jax.lax.dot_general(
         g_ref[...], v_ref[...], (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
@@ -96,11 +95,12 @@ def _mvm_bwd_kernel(u_ref, w_ref, g_ref, v_ref, du_ref):
         du_ref[...] += acc
 
 
-def matern_mvm_pallas(
+def kernel_mvm_pallas(
     u: jax.Array,
     w: jax.Array,
     v: jax.Array,
     *,
+    kind: str = "matern32",
     bm: int = 256,
     bn: int = 256,
     interpret: bool = True,
@@ -109,12 +109,13 @@ def matern_mvm_pallas(
 
     n and m must be multiples of bm / bn (ops.py pads).
     """
+    spec = get_kernel(kind)
     n, d = u.shape
     m = w.shape[0]
     s = v.shape[1]
     grid = (n // bm, m // bn)
     return pl.pallas_call(
-        _mvm_kernel,
+        functools.partial(_mvm_kernel, spec),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
@@ -127,23 +128,25 @@ def matern_mvm_pallas(
     )(u, w, v)
 
 
-def matern_mvm_bwd_pallas(
+def kernel_mvm_bwd_pallas(
     u: jax.Array,
     w: jax.Array,
     g: jax.Array,
     v: jax.Array,
     *,
+    kind: str = "matern32",
     bm: int = 256,
     bn: int = 256,
     interpret: bool = True,
 ) -> jax.Array:
     """du for out = kappa(u, w) @ v with output cotangent g: (n, d)."""
+    spec = get_kernel(kind)
     n, d = u.shape
     m = w.shape[0]
     s = v.shape[1]
     grid = (n // bm, m // bn)
     return pl.pallas_call(
-        _mvm_bwd_kernel,
+        functools.partial(_mvm_bwd_kernel, spec),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
@@ -155,3 +158,8 @@ def matern_mvm_bwd_pallas(
         out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
         interpret=interpret,
     )(u, w, g, v)
+
+
+# Matérn-3/2 aliases preserved for the original single-kernel API.
+matern_mvm_pallas = functools.partial(kernel_mvm_pallas, kind="matern32")
+matern_mvm_bwd_pallas = functools.partial(kernel_mvm_bwd_pallas, kind="matern32")

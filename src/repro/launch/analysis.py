@@ -357,7 +357,7 @@ def analysis_gp_cell(shape_name: str, mesh, opts=None) -> tuple[Cost, dict]:
     """
     from repro.configs.gp_iterative import CONFIG as GP_CFG
     from repro.gp.hyperparams import HyperParams
-    from repro.gp.kernels_math import _PROFILES, scaled_sqdist
+    from repro.gp.kernels_math import profile_from_r2, scaled_sqdist
 
     opts = opts or {}
     tile_dtype = (jnp.bfloat16 if opts.get("gp_tile_dtype") == "bfloat16"
@@ -374,7 +374,7 @@ def analysis_gp_cell(shape_name: str, mesh, opts=None) -> tuple[Cost, dict]:
         ut = (u / params.lengthscales).astype(tile_dtype)
         wt = (w / params.lengthscales).astype(tile_dtype)
         r2 = scaled_sqdist(ut, wt, jnp.ones((), tile_dtype))
-        k = _PROFILES[GP_CFG.kind](r2, params.signal.astype(tile_dtype))
+        k = profile_from_r2(GP_CFG.kind)(r2, params.signal.astype(tile_dtype))
         return jax.lax.dot(k, v.astype(tile_dtype),
                            preferred_element_type=jnp.float32)
 

@@ -1,6 +1,7 @@
 """Linear-system solver registry and a single dispatch entry point."""
 from __future__ import annotations
 
+from dataclasses import replace
 from typing import Optional
 
 import jax
@@ -30,7 +31,20 @@ def solve(
 
     ``v0=None`` is the cold start (zero initialisation); pass the previous
     outer step's solution to warm start (paper §4).
+
+    ``cfg.kind`` (when set) asserts the kernel the solve runs on: it must
+    agree with the operator's effective kernel (explicit ``op.kind`` or
+    ``params.kernel``); any disagreement is an error rather than a silent
+    override.
     """
+    if cfg.kind is not None:
+        if cfg.kind != op.kernel_kind:
+            raise ValueError(
+                f"SolverConfig.kind={cfg.kind!r} conflicts with the "
+                f"operator's kernel {op.kernel_kind!r}"
+            )
+        if op.kind is None:
+            op = replace(op, kind=cfg.kind)
     if cfg.name == "cg":
         return solve_cg(op, b, v0, cfg)
     if cfg.name == "ap":

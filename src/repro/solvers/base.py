@@ -29,6 +29,9 @@ NORM_EPS = 1e-10
 class SolverConfig:
     name: str = "cg"  # cg | ap | sgd
     tolerance: float = 0.01  # tau (paper: Maddox et al. value)
+    # Kernel override for the operator: a registered kernel name pins the
+    # solve to that kernel; None defers to HOperator.kind / params.kernel.
+    kind: Optional[str] = None
     max_epochs: float = 1e9  # budget in solver epochs; large => to-tolerance
     # CG
     precond_rank: int = 100  # pivoted-Cholesky rank (0 disables)

@@ -5,8 +5,9 @@ through this interface, so backends can be swapped freely:
 
   * ``dense``    — materialise H once (reference; small n only).
   * ``streamed`` — pure-jnp two-level tiling, O(bm*bn) live memory.
-  * ``pallas``   — fused Matérn TPU kernel (repro.kernels.matern); validated
-                   on CPU via interpret mode.
+  * ``pallas``   — fused distance-tile TPU kernel for any registered
+                   stationary kernel (repro.kernels); validated on CPU via
+                   interpret mode.
   * ``ring``     — multi-device shard_map ring MVM (repro.distributed.ring);
                    constructed by the distributed driver.
 
@@ -24,10 +25,10 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.gp.hyperparams import HyperParams
+from repro.gp.hyperparams import HyperParams, resolve_kind
 from repro.gp.kernels_math import (
-    _PROFILES,
     kernel_matrix,
+    profile_from_r2,
     regularised_kernel_matrix,
     scaled_sqdist,
 )
@@ -38,7 +39,7 @@ def kernel_mvm_tiled(
     x2: jax.Array,
     v: jax.Array,
     params: HyperParams,
-    kind: str = "matern32",
+    kind: Optional[str] = None,
     bm: int = 1024,
     bn: int = 1024,
 ) -> jax.Array:
@@ -62,7 +63,7 @@ def kernel_mvm_tiled(
     x1b = x1p.reshape(nb_m, bm, d)
     x2b = x2p.reshape(nb_n, bn, d)
     vb = vp.reshape(nb_n, bn, s)
-    profile = _PROFILES[kind]
+    profile = profile_from_r2(resolve_kind(kind, params))
 
     def row_tile(xr):
         def col_step(acc, xcvc):
@@ -85,7 +86,7 @@ class HOperator:
 
     x: jax.Array  # (n, d) training inputs
     params: HyperParams
-    kind: str = "matern32"
+    kind: Optional[str] = None  # None => params.kernel
     backend: str = "streamed"  # dense | streamed | pallas
     bm: int = 1024
     bn: int = 1024
@@ -96,6 +97,11 @@ class HOperator:
     @property
     def n(self) -> int:
         return self.x.shape[0]
+
+    @property
+    def kernel_kind(self) -> str:
+        """The effective kernel name (explicit kind wins over params.kernel)."""
+        return resolve_kind(self.kind, self.params)
 
     @property
     def noise_var(self) -> jax.Array:
@@ -109,10 +115,11 @@ class HOperator:
             k = kernel_matrix(self.x, self.x, self.params, kind=self.kind)
             return k @ v
         if self.backend == "pallas":
-            from repro.kernels.matern.ops import matern_mvm
+            from repro.kernels.ops import kernel_mvm
 
-            return matern_mvm(
-                self.x, self.x, v, self.params, bm=self.bm, bn=self.bn
+            return kernel_mvm(
+                self.x, self.x, v, self.params, kind=self.kernel_kind,
+                bm=self.bm, bn=self.bn,
             )
         return kernel_mvm_tiled(
             self.x, self.x, v, self.params, kind=self.kind, bm=self.bm, bn=self.bn

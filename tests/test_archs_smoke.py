@@ -9,6 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # one train+decode step per LM arch; minutes on CPU
+
 from repro.configs import LM_ARCHS, SMOKE_SHAPES, get_config
 from repro.models import (
     concrete_batch,

@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # multi-step outer-MLL fits; ~1 min on CPU
+
 from repro.core import (
     PATHWISE,
     STANDARD,

@@ -2,6 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# Optional dev dependency (listed in the ``dev`` extra): skip this module —
+# instead of aborting the whole collection — when it is absent.
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.gp.hyperparams import HyperParams, softplus, softplus_inverse

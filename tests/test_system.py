@@ -5,6 +5,8 @@ import jax
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # full-pipeline fits; minutes on CPU
+
 from repro.core import OuterConfig, fit
 from repro.data.synthetic import load_dataset, pad_to_block_multiple
 from repro.solvers import SolverConfig
