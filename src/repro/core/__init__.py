@@ -17,14 +17,18 @@ from repro.core.gradients import exact_grad_reference, mll_grad_estimate
 from repro.core.outer import (
     OuterConfig,
     OuterState,
+    effective_kind,
     exact_outer_step,
+    extend_state,
     init_outer_state,
     outer_step,
 )
 from repro.core.predict import (
     Predictions,
+    correction_matrix,
     mean_only_predict,
     pathwise_predict,
+    pathwise_predict_from_correction,
     predictive_metrics,
 )
 from repro.core.driver import (
@@ -39,9 +43,10 @@ __all__ = [
     "PATHWISE", "STANDARD", "ProbeState", "build_system_targets",
     "expected_initial_sqdistance", "init_probes", "probe_targets",
     "exact_grad_reference", "mll_grad_estimate",
-    "OuterConfig", "OuterState", "exact_outer_step", "init_outer_state",
-    "outer_step",
-    "Predictions", "mean_only_predict", "pathwise_predict",
+    "OuterConfig", "OuterState", "effective_kind", "exact_outer_step",
+    "extend_state", "init_outer_state", "outer_step",
+    "Predictions", "correction_matrix", "mean_only_predict",
+    "pathwise_predict", "pathwise_predict_from_correction",
     "predictive_metrics",
     "FitResult", "evaluate", "fit", "init_hypers_heuristic",
     "pick_sgd_learning_rate",

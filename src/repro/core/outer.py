@@ -106,6 +106,42 @@ def init_outer_state(
     )
 
 
+def extend_state(
+    state: OuterState, num_new: int, dtype=None
+) -> OuterState:
+    """Extend the warm-start carry for ``num_new`` appended observations.
+
+    The online-refresh hook (Dong et al., 2025): when new rows (x, y) stream
+    in, the old solutions zero-padded on the new rows are the warm start for
+    the enlarged system — the accumulated solver progress on the old rows is
+    kept (negligible-bias carry, Lin et al., 2024). Base probe randomness for
+    the NEW rows is drawn once here and then fixed, preserving the
+    warm-start contract of Appendix B:
+
+      * carry_v gains ``num_new`` zero rows,
+      * pathwise ``w_eps`` (standard ``z``) gains ``num_new`` fresh N(0,1)
+        rows — the RFF base draws are function-space and need no extension.
+    """
+    if num_new <= 0:
+        return state
+    dtype = dtype if dtype is not None else state.carry_v.dtype
+    key, knew = jax.random.split(state.key)
+    s = state.carry_v.shape[1] - 1
+    carry = jnp.concatenate(
+        [state.carry_v, jnp.zeros((num_new, 1 + s), dtype=dtype)], axis=0
+    )
+    probes = state.probes
+    if probes.estimator == PATHWISE:
+        rows = jax.random.normal(knew, (num_new, s), dtype=dtype)
+        probes = probes._replace(
+            w_eps=jnp.concatenate([probes.w_eps, rows], axis=0)
+        )
+    else:
+        rows = jax.random.normal(knew, (num_new, probes.z.shape[1]), dtype=dtype)
+        probes = probes._replace(z=jnp.concatenate([probes.z, rows], axis=0))
+    return state._replace(carry_v=carry, probes=probes, key=key)
+
+
 def _resample_probes(key: jax.Array, probes: ProbeState, x: jax.Array) -> ProbeState:
     """Fresh base randomness with identical shapes (non-warm-start regime)."""
     n, d = x.shape

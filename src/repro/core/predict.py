@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.core.estimators import ProbeState
 from repro.gp.hyperparams import HyperParams
-from repro.gp.rff import prior_sample_at
+from repro.gp.rff import RFFState, prior_sample_at
 from repro.solvers.operator import kernel_mvm_tiled
 
 
@@ -29,6 +29,71 @@ class Predictions(NamedTuple):
     mean: jax.Array  # (m,) latent posterior mean k(xs,x) v_y
     var: jax.Array  # (m,) latent variance (sample estimate over s paths)
     samples: jax.Array  # (m, s) posterior function samples at xs
+
+
+def correction_matrix(v: jax.Array) -> jax.Array:
+    """Pre-concatenated correction ``[v_y | v_y - z_hat_1..z_hat_s]``.
+
+    ``v`` is the (n, 1+s) pathwise solver output ``[v_y | z_hat_j]``. The
+    result is everything eq. 16 needs from the solves, folded so that one
+    cross-kernel MVM yields both the posterior mean (column 0) and all s
+    sample corrections (columns 1..s). The map is invertible
+    (``z_hat_j = d_0 - d_j``), so the artifact layer stores only this form.
+    """
+    v_y = v[:, :1]
+    return jnp.concatenate([v_y, v_y - v[:, 1:]], axis=1)
+
+
+def _sample_variance(samples: jax.Array, mean: jax.Array) -> jax.Array:
+    """Unbiased per-row variance over the s posterior samples.
+
+    A single sample carries no variance information — ``s == 1`` used to hit
+    ``jnp.maximum(s - 1, 1)`` and silently return an all-but-zero variance,
+    which poisons predictive log-likelihoods downstream. The sample count is
+    a static shape, so we fail at trace time instead.
+    """
+    s = samples.shape[1]
+    if s < 2:
+        raise ValueError(
+            f"posterior variance needs >= 2 pathwise samples, got s={s}; "
+            "fit with num_probes >= 2 or use mean_only_predict"
+        )
+    var = jnp.sum((samples - mean[:, None]) ** 2, axis=1) / (s - 1)
+    return jnp.maximum(var, 1e-12)
+
+
+def pathwise_predict_from_correction(
+    x: jax.Array,
+    xs: jax.Array,
+    correction: jax.Array,
+    rff: "RFFState",
+    params: HyperParams,
+    kind: Optional[str] = None,
+    bm: int = 1024,
+    bn: int = 1024,
+) -> Predictions:
+    """Eq. 16 evaluated from a precomputed correction matrix (jit-friendly).
+
+    This is the serving entry point: ``correction`` is
+    :func:`correction_matrix` of the solver carry, computed ONCE when a model
+    is exported, so each query costs exactly one cross-kernel MVM plus one
+    RFF feature evaluation — zero solves, zero per-request concatenation.
+    All inputs are pytrees/arrays (``kind`` static), so the whole function
+    jits into a single executable per query shape.
+    """
+    s_corr, s_rff = correction.shape[1] - 1, rff.w.shape[1]
+    if s_corr != s_rff:
+        raise ValueError(
+            f"correction carries {s_corr} sample columns but the RFF state "
+            f"holds {s_rff} prior samples; they must come from the same fit"
+        )
+    cross = kernel_mvm_tiled(xs, x, correction, params, kind=kind, bm=bm, bn=bn)
+    mean = cross[:, 0]
+    f_prior = prior_sample_at(xs, rff, params)  # (m, s)
+    samples = f_prior + cross[:, 1:]
+    return Predictions(
+        mean=mean, var=_sample_variance(samples, mean), samples=samples
+    )
 
 
 def pathwise_predict(
@@ -48,16 +113,9 @@ def pathwise_predict(
     """
     if probes.estimator != "pathwise":
         raise ValueError("pathwise_predict needs pathwise solver output")
-    v_y = v[:, :1]
-    corrections = v_y - v[:, 1:]  # (n, s)
-    d = jnp.concatenate([v_y, corrections], axis=1)  # (n, 1+s)
-    cross = kernel_mvm_tiled(xs, x, d, params, kind=kind, bm=bm, bn=bn)
-    mean = cross[:, 0]
-    f_prior = prior_sample_at(xs, probes.rff, params)  # (m, s)
-    samples = f_prior + cross[:, 1:]
-    s = samples.shape[1]
-    var = jnp.sum((samples - mean[:, None]) ** 2, axis=1) / jnp.maximum(s - 1, 1)
-    return Predictions(mean=mean, var=jnp.maximum(var, 1e-12), samples=samples)
+    return pathwise_predict_from_correction(
+        x, xs, correction_matrix(v), probes.rff, params, kind=kind, bm=bm, bn=bn
+    )
 
 
 def predictive_metrics(

@@ -1,5 +1,6 @@
 from repro.distributed.checkpoint import (
     latest_step,
+    load_metadata,
     restore_checkpoint,
     save_checkpoint,
 )
@@ -16,7 +17,7 @@ from repro.distributed.sharding import (
 )
 
 __all__ = [
-    "latest_step", "restore_checkpoint", "save_checkpoint",
+    "latest_step", "load_metadata", "restore_checkpoint", "save_checkpoint",
     "EFState", "compress", "decompress", "ef_init",
     "reshard", "row_sharded_builder",
     "DP", "FSDP", "TP", "constrain", "get_global_mesh", "set_global_mesh",

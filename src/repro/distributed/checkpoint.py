@@ -80,6 +80,23 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def load_metadata(ckpt_dir: str, step: Optional[int] = None) -> dict:
+    """Read the JSON sidecar written next to a checkpoint (default: latest).
+
+    The sidecar is what makes a checkpoint self-describing across processes:
+    callers that cannot rebuild the original pytree from code (e.g. loading a
+    serving artifact with unknown n/s/kernel) store the shape/static info
+    here and reconstruct a restore template from it.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step}.json")
+    with open(path) as f:
+        return json.load(f)
+
+
 def restore_checkpoint(
     ckpt_dir: str,
     template: Any,

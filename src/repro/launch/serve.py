@@ -1,9 +1,11 @@
 """CLI serving driver (reduced configs on local devices).
 
 LM archs: autoregressive generation with the KV/SSM cache serve_step.
-GP arch: pathwise-conditioning prediction server — amortised posterior
-samples from the training carry, zero extra linear solves per request
-(the paper's §3 amortisation).
+GP arch: pathwise-conditioning prediction server on `repro.serve` — fit,
+export a `ServableGP`, drive the shape-bucketed engine (zero linear solves
+per request, eq. 16 amortisation; zero retraces after warmup). `--compat`
+keeps the legacy per-request loop (jit hoisted out of the loop, tail block
+padded).
 """
 from __future__ import annotations
 
@@ -44,8 +46,8 @@ def serve_lm(args):
           f"{[int(t[0]) for t in out[:16]]}")
 
 
-def serve_gp(args):
-    from repro.core import OuterConfig, fit, pathwise_predict, predictive_metrics
+def _fit_gp(args):
+    from repro.core import OuterConfig, fit
     from repro.data.synthetic import load_dataset
     from repro.solvers import SolverConfig
 
@@ -56,24 +58,100 @@ def serve_gp(args):
         num_steps=args.train_steps, bm=512, bn=512,
     )
     res = fit(ds.x_train, ds.y_train, cfg, key=jax.random.PRNGKey(args.seed))
-    state = res.state
-    # "Serving": batched posterior queries, re-using the solver carry.
+    return ds, cfg, res.state
+
+
+def serve_gp_compat(args, ds, cfg, state):
+    """Legacy per-request loop, minimally fixed: the `pathwise_predict` jit
+    is built ONCE outside the request loop, and the tail block is padded to
+    the fixed request width so ragged shapes never retrace."""
+    from functools import partial
+
+    from repro.core import pathwise_predict, predictive_metrics
+
+    width = 64
+    predict = jax.jit(partial(
+        pathwise_predict, kind=None, bm=cfg.bm, bn=cfg.bn
+    ))
+    n_test = ds.x_test.shape[0]
     t0 = time.perf_counter()
     for i in range(args.requests):
-        lo = (i * 64) % max(1, ds.x_test.shape[0] - 64)
-        xq = ds.x_test[lo : lo + 64]
-        pred = pathwise_predict(ds.x_train, xq, state.carry_v, state.probes,
-                                state.params, bm=cfg.bm, bn=cfg.bn)
+        lo = (i * width) % max(1, n_test)
+        xq = ds.x_test[lo : lo + width]
+        take = xq.shape[0]
+        if take < width:  # pad the tail block instead of wrapping/retracing
+            xq = jnp.pad(xq, ((0, width - take), (0, 0)))
+        pred = predict(ds.x_train, xq, state.carry_v, state.probes,
+                       state.params)
         jax.block_until_ready(pred.mean)
     dt = time.perf_counter() - t0
-    m = predictive_metrics(ds.y_test[:64],
-                           pathwise_predict(ds.x_train, ds.x_test[:64],
+    m = predictive_metrics(ds.y_test[:width],
+                           pathwise_predict(ds.x_train, ds.x_test[:width],
                                             state.carry_v, state.probes,
                                             state.params),
                            state.params)
-    print(f"[serve-gp] {args.requests} batched requests in {dt:.2f}s "
-          f"({args.requests*64/dt:.1f} q/s) — ZERO solves at serve time; "
+    print(f"[serve-gp compat] {args.requests} requests x {width} in {dt:.2f}s "
+          f"({args.requests*width/dt:.1f} q/s) — ZERO solves at serve time; "
           f"rmse={float(m['rmse']):.4f} llh={float(m['llh']):.4f}")
+
+
+def serve_gp(args, ds=None, cfg=None, state=None):
+    """Engine-based serving: fit -> export `ServableGP` -> bucketed engine.
+
+    Steady state is zero retraces (all bucket executables compiled by
+    `warmup`) and zero linear solves (eq. 16 amortisation via the frozen
+    correction matrix).
+    """
+    import numpy as np
+
+    from repro.core import predictive_metrics
+    from repro.serve import BucketedEngine, OnlineGP, export_servable
+
+    if ds is None:
+        ds, cfg, state = _fit_gp(args)
+    if args.compat:
+        return serve_gp_compat(args, ds, cfg, state)
+
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    model = export_servable(state, ds.x_train)
+    engine = BucketedEngine(model, buckets=buckets, bm=cfg.bm, bn=cfg.bn)
+    compiles = engine.warmup()
+
+    width = 64
+    n_test = ds.x_test.shape[0]
+    lat = []
+    t0 = time.perf_counter()
+    for i in range(args.requests):
+        lo = (i * width) % max(1, n_test - 1)
+        xq = ds.x_test[lo : lo + width]
+        ts = time.perf_counter()
+        pred = engine.submit(xq)
+        jax.block_until_ready(pred.mean)
+        lat.append(time.perf_counter() - ts)
+    dt = time.perf_counter() - t0
+    now = engine.num_compiles()
+    retraces = None if (compiles is None or now is None) else now - compiles
+
+    if args.refresh_every and n_test > 0:
+        blk = min(width, n_test)
+        online = OnlineGP(ds.x_train, ds.y_train, state, cfg)
+        online.append(ds.x_test[:blk], ds.y_test[:blk])
+        report = online.refresh_into(engine, budget_epochs=10.0)
+        print(f"[serve-gp] online refresh: +{blk} rows -> n={report.n}, "
+              f"{report.epochs:.1f} epochs, res_y={report.res_y:.3f}")
+
+    m = predictive_metrics(
+        ds.y_test[:width], engine.submit(ds.x_test[:width]), state.params
+    )
+    p50, p99 = np.percentile(np.asarray(lat) * 1e3, [50, 99])
+    retrace_msg = "n/a (no cache introspection)" if retraces is None else retraces
+    print(f"[serve-gp] {args.requests} requests x {width} in {dt:.2f}s "
+          f"({args.requests*width/dt:.1f} q/s, p50={p50:.1f}ms p99={p99:.1f}ms) "
+          f"— buckets={buckets}, retraces after warmup={retrace_msg}, "
+          f"ZERO solves at serve time; "
+          f"rmse={float(m['rmse']):.4f} llh={float(m['llh']):.4f}")
+    if retraces:
+        raise SystemExit(f"steady-state serving retraced {retraces}x")
 
 
 def main(argv=None):
@@ -87,6 +165,12 @@ def main(argv=None):
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--buckets", default="16,64,256",
+                    help="comma-separated GP engine row buckets")
+    ap.add_argument("--compat", action="store_true",
+                    help="legacy per-request GP loop (jit hoisted, tail padded)")
+    ap.add_argument("--refresh-every", type=int, default=0,
+                    help="if set, run one warm online refresh after serving")
     args = ap.parse_args(argv)
     if args.arch == "gp-iterative":
         serve_gp(args)

@@ -1,0 +1,30 @@
+"""Prediction serving on top of fitted iterative GPs.
+
+The pathwise estimator makes the solved probe systems *be* posterior samples
+(paper eq. 16), so a fitted model can serve posterior mean/variance/samples
+with zero lin-solves per request. This package turns that observation into a
+serving layer between fitting (`repro.core`) and the CLI (`repro.launch`):
+
+  * :mod:`repro.serve.artifact`   — frozen, checkpointable `ServableGP`
+  * :mod:`repro.serve.engine`     — shape-bucketed microbatching engine
+  * :mod:`repro.serve.refresh`    — warm-started online model refresh
+  * :mod:`repro.serve.multimodel` — several models behind one engine
+"""
+from repro.serve.artifact import (
+    ServableGP,
+    export_servable,
+    load_servable,
+    save_servable,
+    servable_predict,
+)
+from repro.serve.engine import BucketedEngine, EngineStats, pad_to_bucket
+from repro.serve.multimodel import MultiModelServer
+from repro.serve.refresh import OnlineGP, RefreshReport, merge_refined_state
+
+__all__ = [
+    "ServableGP", "export_servable", "load_servable", "save_servable",
+    "servable_predict",
+    "BucketedEngine", "EngineStats", "pad_to_bucket",
+    "MultiModelServer",
+    "OnlineGP", "RefreshReport", "merge_refined_state",
+]

@@ -1,0 +1,156 @@
+"""`ServableGP` — a fitted iterative GP frozen into a serving artifact.
+
+The amortisation contract (paper eq. 16): after a pathwise-estimator fit,
+the solver carry ``[v_y | z_hat_1..z_hat_s]`` already contains everything a
+posterior needs — the mean weights AND s posterior-sample corrections. The
+artifact stores the *pre-concatenated correction matrix*
+``[v_y | v_y - z_hat_j]`` (computed once at export), the training inputs,
+the fixed RFF base draws and the hyperparameters; a prediction is then one
+cross-kernel MVM plus one RFF feature evaluation — zero linear solves,
+zero per-request assembly.
+
+Persistence reuses the atomic checkpoint machinery
+(`repro.distributed.checkpoint`); the JSON sidecar records shapes and the
+static kernel names so `load_servable` can rebuild the restore template
+without any Python state from the exporting process.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.outer import OuterState
+from repro.core.predict import (
+    Predictions,
+    correction_matrix,
+    pathwise_predict_from_correction,
+)
+from repro.distributed.checkpoint import (
+    load_metadata,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.gp.hyperparams import HyperParams
+from repro.gp.rff import RFFState
+
+
+class ServableGP(NamedTuple):
+    """Frozen servable model (a pytree; ``kind`` is static aux data).
+
+    Attributes:
+      x: (n, d) training inputs.
+      correction: (n, 1+s) pre-concatenated ``[v_y | v_y - z_hat_j]``.
+      rff: fixed RFF base draws behind the s posterior samples.
+      params: hyperparameters at export time.
+      kind: effective kernel name (registry key); static so one jitted
+        executable exists per (query-shape, kernel) pair.
+    """
+
+    x: jax.Array
+    correction: jax.Array
+    rff: RFFState
+    params: HyperParams
+    kind: str = "matern32"
+
+    @property
+    def n(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def num_samples(self) -> int:
+        return self.correction.shape[1] - 1
+
+
+jax.tree_util.register_pytree_node(
+    ServableGP,
+    lambda m: ((m.x, m.correction, m.rff, m.params), m.kind),
+    lambda kind, children: ServableGP(*children, kind=kind),
+)
+
+
+def export_servable(
+    state: OuterState, x: jax.Array, kind: Optional[str] = None
+) -> ServableGP:
+    """Freeze a pathwise-fitted `OuterState` into a `ServableGP`.
+
+    The O(n*s) correction concatenation happens here, once, instead of per
+    request inside `pathwise_predict`.
+    """
+    if state.probes.estimator != "pathwise":
+        raise ValueError(
+            "export_servable needs a pathwise fit; the standard estimator "
+            "has no posterior samples among its solver outputs (run the "
+            "s extra pathwise_eval solves first)"
+        )
+    return ServableGP(
+        x=x,
+        correction=correction_matrix(state.carry_v),
+        rff=state.probes.rff,
+        params=state.params,
+        kind=kind if kind is not None else state.params.kernel,
+    )
+
+
+def servable_predict(
+    model: ServableGP, xq: jax.Array, bm: int = 1024, bn: int = 1024
+) -> Predictions:
+    """Posterior at ``xq`` from the frozen artifact (jit-friendly).
+
+    Pure function of (pytree, array) — the engine jits exactly this.
+    """
+    return pathwise_predict_from_correction(
+        model.x, xq, model.correction, model.rff, model.params,
+        kind=model.kind, bm=bm, bn=bn,
+    )
+
+
+def save_servable(
+    ckpt_dir: str, model: ServableGP, step: int = 0, keep: int = 3
+) -> str:
+    """Atomically persist the artifact; returns the checkpoint path."""
+    meta = {
+        "artifact": "ServableGP",
+        "kind": model.kind,
+        "rff_kind": model.rff.kind,
+        "kernel": model.params.kernel,
+        "n": int(model.x.shape[0]),
+        "d": int(model.x.shape[1]),
+        "num_samples": int(model.num_samples),
+        "num_rff_pairs": int(model.rff.z.shape[0]),
+        "dtype": str(model.x.dtype),
+    }
+    return save_checkpoint(ckpt_dir, step, model, metadata=meta, keep=keep)
+
+
+def _template_from_meta(meta: dict) -> ServableGP:
+    dtype = jnp.dtype(meta["dtype"])
+    n, d, s, m = (meta["n"], meta["d"], meta["num_samples"],
+                  meta["num_rff_pairs"])
+    z = jnp.zeros((m, d), dtype)
+    rff = RFFState(
+        z=z, u=jnp.zeros((m,), dtype), w=jnp.zeros((2 * m, s), dtype),
+        kind=meta["rff_kind"],
+    )
+    params = HyperParams.create(d, dtype=dtype, kernel=meta["kernel"])
+    return ServableGP(
+        x=jnp.zeros((n, d), dtype),
+        correction=jnp.zeros((n, 1 + s), dtype),
+        rff=rff,
+        params=params,
+        kind=meta["kind"],
+    )
+
+
+def load_servable(ckpt_dir: str, step: Optional[int] = None) -> ServableGP:
+    """Restore a `ServableGP` from disk using only the sidecar metadata."""
+    meta = load_metadata(ckpt_dir, step)
+    if meta.get("artifact") != "ServableGP":
+        raise ValueError(
+            f"checkpoint under {ckpt_dir} is not a ServableGP artifact "
+            f"(metadata: {meta})"
+        )
+    model, _ = restore_checkpoint(ckpt_dir, _template_from_meta(meta),
+                                  step=meta["step"] if step is None else step)
+    return model

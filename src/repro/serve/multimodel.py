@@ -1,0 +1,86 @@
+"""Several `ServableGP`s (per kernel / per dataset) behind one engine.
+
+One `BucketedEngine` means ONE jitted predict whose executable cache is
+shared: jax specialises per (query bucket, training-set shape, kernel kind)
+— the kernel rides along as static pytree aux data from the kernel registry
+— so e.g. four kernels x three buckets warm exactly twelve executables, and
+models with identical shapes and kernel share executables outright.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence
+
+import jax
+
+from repro.core.predict import Predictions
+from repro.serve.artifact import ServableGP
+from repro.serve.engine import DEFAULT_BUCKETS, BucketedEngine
+
+
+class MultiModelServer:
+    """Named-model registry delegating all compute to a shared engine."""
+
+    def __init__(
+        self,
+        buckets: Sequence[int] = DEFAULT_BUCKETS,
+        bm: int = 1024,
+        bn: int = 1024,
+        engine: Optional[BucketedEngine] = None,
+    ):
+        self.engine = engine if engine is not None else BucketedEngine(
+            None, buckets=buckets, bm=bm, bn=bn
+        )
+        self._models: Dict[str, ServableGP] = {}
+        self._lock = threading.Lock()
+
+    # -- registry -----------------------------------------------------------
+    def register(
+        self, name: str, model: ServableGP, warmup: bool = False
+    ) -> None:
+        with self._lock:
+            if name in self._models:
+                raise ValueError(
+                    f"model {name!r} already registered; use swap()"
+                )
+            self._models[name] = model
+        if warmup:
+            self.engine.warmup(model)
+
+    def swap(self, name: str, model: ServableGP) -> None:
+        """Atomic replacement (the refresh handoff for named models)."""
+        with self._lock:
+            if name not in self._models:
+                raise KeyError(f"unknown model {name!r}")
+            self._models[name] = model
+
+    def unregister(self, name: str) -> ServableGP:
+        with self._lock:
+            return self._models.pop(name)
+
+    def get(self, name: str) -> ServableGP:
+        with self._lock:
+            try:
+                return self._models[name]
+            except KeyError:
+                raise KeyError(
+                    f"unknown model {name!r}; registered: {sorted(self._models)}"
+                ) from None
+
+    def names(self) -> tuple:
+        with self._lock:
+            return tuple(sorted(self._models))
+
+    # -- serving ------------------------------------------------------------
+    def warmup(self) -> Optional[int]:
+        """Compile all buckets for every registered model; returns #compiles
+        (None when jit cache introspection is unavailable)."""
+        for name in self.names():
+            self.engine.warmup(self.get(name))
+        return self.engine.num_compiles()
+
+    def submit(self, name: str, xq: jax.Array) -> Predictions:
+        return self.engine.submit(xq, model=self.get(name))
+
+    def enqueue(self, name: str, xq: jax.Array):
+        return self.engine.enqueue(xq, model=self.get(name))

@@ -1,0 +1,221 @@
+"""Warm-started online model refresh (append -> refine -> atomic swap).
+
+The same carry that amortises outer MLL steps (paper §4) amortises *model
+refresh* when observations stream in (Dong et al., 2025, "Warm-Starting
+Iterative Gaussian Processes for Faster Sequential Inference"): the old
+solutions, zero-padded on the appended rows, are an excellent initialisation
+for the enlarged system, so a budgeted warm solve reaches tolerance in far
+fewer epochs than a cold start. `OnlineGP` owns the mutable (data, state)
+pair; serving stays on the frozen `ServableGP` until `refine` finishes and
+the engine swap makes the new artifact visible atomically.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future
+from dataclasses import replace
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimators import build_system_targets
+from repro.core.outer import (
+    OuterConfig,
+    OuterState,
+    effective_kind,
+    extend_state,
+    outer_step,
+)
+from repro.serve.artifact import ServableGP, export_servable
+from repro.solvers import HOperator, solve
+
+
+def merge_refined_state(
+    current: OuterState, refined: OuterState
+) -> OuterState:
+    """Fold a refinement computed on an n-row snapshot into ``current``.
+
+    ``current`` may have grown past the snapshot (appends that raced a
+    background refine): its extra carry/probe rows — zero carry plus fresh
+    base noise from `extend_state` — must survive the commit, so the solved
+    rows overwrite only the snapshot's prefix. ``current``'s probes and key
+    are kept (they include the concurrent extensions and key advances);
+    hyperparameter/Adam/step progress is taken from ``refined``.
+    """
+    n_solved = refined.carry_v.shape[0]
+    if current.carry_v.shape[0] > n_solved:
+        carry = jnp.concatenate(
+            [refined.carry_v, current.carry_v[n_solved:]], axis=0
+        )
+    else:
+        carry = refined.carry_v
+    return current._replace(
+        carry_v=carry,
+        params=refined.params,
+        adam=refined.adam,
+        step=refined.step,
+        last_res_y=refined.last_res_y,
+        last_res_z=refined.last_res_z,
+        last_iters=refined.last_iters,
+        last_epochs=refined.last_epochs,
+    )
+
+
+class RefreshReport(NamedTuple):
+    """What one `refine` cost and achieved."""
+
+    n: int  # training rows after the refresh
+    appended: int  # rows appended since the last refine
+    epochs: float  # solver epochs consumed
+    iters: int  # inner iterations
+    res_y: float  # final mean-system relative residual
+    res_z: float  # final probe-average relative residual
+    warm: bool  # warm-started from the extended carry?
+
+
+class OnlineGP:
+    """A fitted GP that can absorb new observations and refresh in place.
+
+    Typical loop:
+
+        online = OnlineGP(x, y, fit_result.state, cfg)
+        engine = BucketedEngine(online.export()); engine.warmup()
+        ...
+        online.append(x_new, y_new)
+        online.refresh_into(engine, budget_epochs=10.0)   # solve + swap
+    """
+
+    def __init__(
+        self, x: jax.Array, y: jax.Array, state: OuterState, cfg: OuterConfig
+    ):
+        self.x = x
+        self.y = y
+        self.state = state
+        self.cfg = cfg
+        self._appended = 0
+        self._lock = threading.Lock()
+
+    @property
+    def n(self) -> int:
+        return self.x.shape[0]
+
+    def append(self, x_new: jax.Array, y_new: jax.Array) -> None:
+        """Add observations; extends the warm-start carry with zero rows and
+        draws fixed base-probe randomness for the new rows (core hook)."""
+        if x_new.ndim != 2 or x_new.shape[1] != self.x.shape[1]:
+            raise ValueError(
+                f"x_new must be (k, {self.x.shape[1]}), got {x_new.shape}"
+            )
+        with self._lock:
+            k = x_new.shape[0]
+            self.x = jnp.concatenate([self.x, x_new], axis=0)
+            self.y = jnp.concatenate([self.y, y_new], axis=0)
+            self.state = extend_state(self.state, k, dtype=self.x.dtype)
+            self._appended += k
+
+    def refine(
+        self,
+        budget_epochs: Optional[float] = None,
+        warm: bool = True,
+        mode: str = "solve",
+        key: Optional[jax.Array] = None,
+    ) -> RefreshReport:
+        """Budgeted refinement of the enlarged system (paper §5 budgets).
+
+        ``mode="solve"`` re-solves the linear systems at fixed hyperparameters
+        (the serving-refresh fast path: tolerance is the early stop, the
+        epoch budget the cap). ``mode="step"`` runs one full `outer_step`
+        (hyperparameters move too). ``warm=False`` is the cold-start control
+        the throughput benchmark compares against.
+        """
+        with self._lock:
+            state, x, y, cfg = self.state, self.x, self.y, self.cfg
+            appended = self._appended
+        kind = effective_kind(cfg, state.params)
+        if mode == "step":
+            scfg = cfg.solver if budget_epochs is None else replace(
+                cfg.solver, max_epochs=budget_epochs
+            )
+            step_cfg = replace(cfg, solver=scfg, warm_start=warm)
+            new_state, metrics = outer_step(state, x, y, step_cfg)
+            report = RefreshReport(
+                n=x.shape[0], appended=appended,
+                epochs=float(metrics["epochs"]), iters=int(metrics["iters"]),
+                res_y=float(metrics["res_y"]), res_z=float(metrics["res_z"]),
+                warm=warm,
+            )
+        elif mode == "solve":
+            targets = build_system_targets(state.probes, x, y, state.params)
+            op = HOperator(x=x, params=state.params, kind=kind,
+                           backend=cfg.backend, bm=cfg.bm, bn=cfg.bn)
+            scfg = cfg.solver if cfg.solver.kind == kind else replace(
+                cfg.solver, kind=kind
+            )
+            if budget_epochs is not None:
+                scfg = replace(scfg, max_epochs=budget_epochs)
+            v0 = state.carry_v if warm else None
+            ksolve = key if key is not None else jax.random.fold_in(state.key, 13)
+            res = solve(op, targets, v0, scfg, key=ksolve)
+            new_state = state._replace(carry_v=res.v)
+            report = RefreshReport(
+                n=x.shape[0], appended=appended,
+                epochs=float(res.epochs), iters=int(res.iters),
+                res_y=float(res.res_y), res_z=float(res.res_z), warm=warm,
+            )
+        else:
+            raise ValueError(f"unknown refine mode {mode!r}")
+        with self._lock:
+            # Appends may have raced this refine (background mode): commit the
+            # solved rows into the CURRENT state so their extensions survive.
+            self.state = merge_refined_state(self.state, new_state)
+            self._appended = max(0, self._appended - appended)
+        return report
+
+    def export(self) -> ServableGP:
+        """Freeze the current state into a serving artifact."""
+        with self._lock:
+            return export_servable(
+                self.state, self.x, kind=effective_kind(self.cfg, self.state.params)
+            )
+
+    def refresh_into(
+        self,
+        engine,
+        name: Optional[str] = None,
+        budget_epochs: Optional[float] = None,
+        mode: str = "solve",
+        background: bool = False,
+    ):
+        """Refine, then atomically swap the new artifact into ``engine``.
+
+        ``engine`` is a `BucketedEngine` (or a `MultiModelServer` with
+        ``name``). ``background=True`` runs the whole refresh on a daemon
+        thread — serving continues on the old artifact until the swap — and
+        returns a `concurrent.futures.Future` resolving to the
+        `RefreshReport` (or carrying the exception, so failures are
+        observable instead of dying with the thread). Otherwise returns the
+        `RefreshReport` directly.
+        """
+
+        def _do():
+            report = self.refine(budget_epochs=budget_epochs, mode=mode)
+            model = self.export()
+            if name is not None:
+                engine.swap(name, model)
+            else:
+                engine.swap_model(model)
+            return report
+
+        if background:
+            fut: Future = Future()
+
+            def _run():
+                try:
+                    fut.set_result(_do())
+                except BaseException as e:
+                    fut.set_exception(e)
+
+            threading.Thread(target=_run, name="gp-refresh", daemon=True).start()
+            return fut
+        return _do()

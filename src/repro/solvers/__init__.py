@@ -12,8 +12,12 @@ from repro.solvers.ap import solve_ap
 from repro.solvers.sgd import solve_sgd
 from repro.solvers.operator import HOperator, kernel_mvm_tiled
 from repro.solvers.precond import (
+    AUTO_RANK,
+    PRECOND_DEFAULTS,
     Preconditioner,
+    PrecondDefaults,
     build_preconditioner,
+    default_precond,
     pivoted_cholesky,
 )
 
@@ -64,7 +68,11 @@ __all__ = [
     "SolverConfig",
     "HOperator",
     "kernel_mvm_tiled",
+    "AUTO_RANK",
+    "PRECOND_DEFAULTS",
     "Preconditioner",
+    "PrecondDefaults",
     "build_preconditioner",
+    "default_precond",
     "pivoted_cholesky",
 ]

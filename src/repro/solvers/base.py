@@ -34,7 +34,9 @@ class SolverConfig:
     kind: Optional[str] = None
     max_epochs: float = 1e9  # budget in solver epochs; large => to-tolerance
     # CG
-    precond_rank: int = 100  # pivoted-Cholesky rank (0 disables)
+    # Pivoted-Cholesky rank: 0 disables; AUTO_RANK (-1) resolves rank and
+    # jitter per kernel from solvers.precond.PRECOND_DEFAULTS.
+    precond_rank: int = 100
     # AP
     block_size: int = 1000
     # SGD

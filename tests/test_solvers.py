@@ -102,6 +102,40 @@ def test_pallas_backend_matches_streamed(gp_problem, batched_system):
                                rtol=5e-2, atol=1e-2)
 
 
+@pytest.mark.parametrize("kind", ["rbf", "matern12", "matern32", "matern52"])
+def test_per_kernel_precond_defaults_parity(kind):
+    """AUTO_RANK resolves the per-kernel rank/jitter table. Parity contract
+    on the synthetic suite: the per-kernel default must still reach tolerance
+    and keep preconditioning effective (>= 2x fewer CG iterations than no
+    preconditioner), while its rank — the O(n k (d + k)) setup cost — never
+    exceeds the flat Matérn-calibrated 100 it replaces."""
+    from repro.data.synthetic import make_gp_regression
+    from repro.solvers import AUTO_RANK, PRECOND_DEFAULTS, default_precond
+
+    x, y = make_gp_regression(jax.random.PRNGKey(3), 192, 2, noise=0.3)
+    params = HyperParams.create(2, lengthscale=0.8, signal=1.0, noise=0.3,
+                                kernel=kind)
+    op = HOperator(x=x, params=params, bm=64, bn=64)
+    b = jnp.concatenate(
+        [y[:, None], jax.random.normal(jax.random.PRNGKey(4), (192, 4))],
+        axis=1,
+    )
+    iters = {}
+    for rank in (0, AUTO_RANK):
+        cfg = SolverConfig(name="cg", tolerance=TOL, max_epochs=3000,
+                           precond_rank=rank)
+        res = solve(op, b, None, cfg)
+        assert float(res.res_y) <= TOL * 1.01
+        iters[rank] = int(res.iters)
+    assert 2 * iters[AUTO_RANK] <= iters[0], iters
+    # setup-cost parity vs. the flat default, and eigendecay ordering:
+    # smoother kernels (faster spectral decay) get smaller default ranks
+    assert default_precond(kind).rank <= 150
+    ranks = {k: v.rank for k, v in PRECOND_DEFAULTS.items()}
+    assert (ranks["rbf"] < ranks["matern52"] < ranks["matern32"]
+            <= ranks["matern12"])
+
+
 def test_pivoted_cholesky_preconditioner_quality(gp_problem):
     """P^-1 H should be much better conditioned than H."""
     from repro.solvers.precond import build_preconditioner
