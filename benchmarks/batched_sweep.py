@@ -1,0 +1,114 @@
+"""One-program batched sweep vs per-process sweep: wall-clock + retraces.
+
+Runs the SAME kernel x seed grid (8 lanes: 2 kernels x 4 seeds) twice
+through ``repro.launch.batch`` — once batched (one process, one executable
+per kernel group, seeds as vmap lanes) and once ``--isolate`` (the legacy
+one-subprocess-per-cell sweep) — each timed as a fresh top-level process so
+interpreter + jax startup is charged where it is actually paid. Asserts the
+batched path is >= 2x faster and compiled exactly one executable per static
+group, and writes a machine-readable ``BENCH_batched_sweep.json``.
+
+    PYTHONPATH=src python benchmarks/batched_sweep.py [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+KERNELS = "matern32,rbf"
+SEEDS = 4  # x 2 kernels = 8 lanes
+MIN_SPEEDUP = 2.0
+
+
+def _run_sweep(out_dir: str, isolate: bool, max_n: int, steps: int) -> float:
+    cmd = [
+        sys.executable, "-m", "repro.launch.batch",
+        "--out", out_dir, "--dataset", "pol", "--max-n", str(max_n),
+        "--kernels", KERNELS, "--seeds", str(SEEDS), "--steps", str(steps),
+        "--smoke",
+    ]
+    if isolate:
+        cmd.append("--isolate")
+    # Prepend the repo's src dir, keep the inherited PYTHONPATH (same
+    # pattern as launch/batch.py's isolate workers).
+    src = os.path.join(REPO, "src")
+    inherited = os.environ.get("PYTHONPATH")
+    pypath = src + (os.pathsep + inherited if inherited else "")
+    t0 = time.perf_counter()
+    r = subprocess.run(
+        cmd, capture_output=True, text=True, cwd=REPO,
+        env={**os.environ, "PYTHONPATH": pypath}, timeout=3600,
+    )
+    dt = time.perf_counter() - t0
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"sweep ({'isolated' if isolate else 'batched'}) failed:\n"
+            f"{(r.stderr or r.stdout)[-3000:]}"
+        )
+    return dt
+
+
+def csv_line(name: str, value: float, derived: str):
+    # Same line protocol as benchmarks.common (not imported so this file
+    # also runs as a bare script, like serve_throughput.py).
+    print(f"{name},{value:.1f},{derived}")
+
+
+def main(small: bool = True, out_dir: str = "artifacts/bench"):
+    max_n, steps = (256, 3) if small else (512, 5)
+    with tempfile.TemporaryDirectory() as d_batch, \
+            tempfile.TemporaryDirectory() as d_iso:
+        t_batched = _run_sweep(d_batch, isolate=False, max_n=max_n, steps=steps)
+        t_isolated = _run_sweep(d_iso, isolate=True, max_n=max_n, steps=steps)
+        with open(os.path.join(d_batch, "_sweep_status.json")) as f:
+            status = json.load(f)
+        n_cells = len([
+            p for p in os.listdir(d_batch) if not p.startswith("_")
+        ])
+
+    lanes = status["cells"]
+    speedup = t_isolated / t_batched
+    report = {
+        "bench": "batched_sweep",
+        "grid": {"kernels": KERNELS.split(","), "seeds": SEEDS,
+                 "max_n": max_n, "steps": steps},
+        "lanes": lanes,
+        "groups": status["groups"],
+        "num_compiles": status["num_compiles"],
+        "wall_batched_s": t_batched,
+        "wall_isolated_s": t_isolated,
+        "speedup": speedup,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "BENCH_batched_sweep.json"), "w") as f:
+        json.dump(report, f, indent=2)
+
+    csv_line("batched_sweep_one_program", t_batched * 1e6,
+             f"lanes={lanes} groups={status['groups']} "
+             f"compiles={status['num_compiles']}")
+    csv_line("batched_sweep_per_process", t_isolated * 1e6,
+             f"cells={n_cells}")
+    csv_line("batched_sweep_speedup", speedup, "x (isolated / batched)")
+
+    assert lanes == 2 * SEEDS, f"expected {2*SEEDS} cells, got {lanes}"
+    assert status["num_compiles"] == status["groups"] == 2, status
+    assert speedup >= MIN_SPEEDUP, (
+        f"batched sweep only {speedup:.2f}x faster "
+        f"(need >= {MIN_SPEEDUP}x): batched={t_batched:.1f}s "
+        f"isolated={t_isolated:.1f}s"
+    )
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="artifacts/bench")
+    args = ap.parse_args()
+    main(small=not args.full, out_dir=args.out)

@@ -1,13 +1,21 @@
 """Benchmark entry point: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,...]
+                                            [--out-dir artifacts/bench]
 
 Prints ``name,us_per_call,derived`` CSV lines (plus the roofline table from
-any dry-run artifacts present).
+any dry-run artifacts present) and writes one machine-readable
+``BENCH_<module>.json`` per module to ``--out-dir``: wall-clock, the parsed
+CSV rows, and — merged in, when a module writes its own richer BENCH file
+(e.g. batched_sweep's lanes/retrace counts) — that module's extra fields.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
+import io
+import json
+import os
 import sys
 import time
 import traceback
@@ -20,7 +28,69 @@ MODULES = [
     "fig6_warmstart_distance",
     "fig9_budget",
     "kernel_microbench",
+    "batched_sweep",
 ]
+
+
+class _Tee(io.TextIOBase):
+    """Write-through stdout capture (benchmarks stay live on the console)."""
+
+    def __init__(self, stream):
+        self.stream = stream
+        self.lines: list[str] = []
+        self._buf = ""
+
+    def write(self, s):
+        self.stream.write(s)
+        self._buf += s
+        while "\n" in self._buf:
+            line, self._buf = self._buf.split("\n", 1)
+            self.lines.append(line)
+        return len(s)
+
+    def flush(self):
+        self.stream.flush()
+
+
+def parse_csv_rows(lines: list[str]) -> list[dict]:
+    """The ``name,us_per_call,derived`` line protocol of benchmarks.common."""
+    rows = []
+    for line in lines:
+        parts = line.split(",", 2)
+        if len(parts) != 3 or line.startswith("#"):
+            continue
+        try:
+            value = float(parts[1])
+        except ValueError:
+            continue
+        rows.append({"name": parts[0], "us_per_call": value,
+                     "derived": parts[2]})
+    return rows
+
+
+def write_bench_json(out_dir: str, module: str, wall_s: float,
+                     rows: list[dict], failed: bool):
+    """BENCH_<module>.json; preserves any fields the module wrote itself."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{module}.json")
+    report = {}
+    if not failed and os.path.exists(path):
+        # Merge fields the module wrote itself during THIS run (e.g.
+        # batched_sweep's lanes/retrace counts). A failed run must not
+        # inherit stale numbers from an earlier success.
+        try:
+            with open(path) as f:
+                report = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            report = {}
+    report.update({
+        "module": module,
+        "wall_s": wall_s,
+        "failed": failed,
+        "rows": rows,
+    })
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
 
 
 def main(argv=None):
@@ -28,6 +98,7 @@ def main(argv=None):
     ap.add_argument("--full", action="store_true",
                     help="paper-scale runs (hours); default is CPU-quick")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--out-dir", default="artifacts/bench")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
     failures = []
@@ -37,19 +108,36 @@ def main(argv=None):
         mod = __import__(f"benchmarks.{name}", fromlist=["main"])
         t0 = time.time()
         print(f"# --- {name} ---", flush=True)
+        tee = _Tee(sys.stdout)
+        failed = False
         try:
-            mod.main(small=not args.full)
+            import inspect
+
+            kwargs = {"small": not args.full}
+            if "out_dir" in inspect.signature(mod.main).parameters:
+                kwargs["out_dir"] = args.out_dir
+            with contextlib.redirect_stdout(tee):
+                mod.main(**kwargs)
         except Exception:
+            failed = True
             failures.append(name)
             traceback.print_exc()
-        print(f"# {name} took {time.time()-t0:.1f}s", flush=True)
+        dt = time.time() - t0
+        write_bench_json(args.out_dir, name, dt, parse_csv_rows(tee.lines),
+                         failed)
+        print(f"# {name} took {dt:.1f}s", flush=True)
 
     # roofline table (reads artifacts/dryrun if present)
     try:
         from benchmarks import roofline
 
         print("# --- roofline (from dry-run artifacts) ---")
-        roofline.main(["--csv"])
+        t0 = time.time()
+        tee = _Tee(sys.stdout)
+        with contextlib.redirect_stdout(tee):
+            roofline.main(["--csv"])
+        write_bench_json(args.out_dir, "roofline", time.time() - t0,
+                         parse_csv_rows(tee.lines), failed=False)
     except Exception:
         failures.append("roofline")
         traceback.print_exc()

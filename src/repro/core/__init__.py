@@ -21,7 +21,13 @@ from repro.core.outer import (
     exact_outer_step,
     extend_state,
     init_outer_state,
+    init_outer_state_lanes,
+    num_lanes,
+    outer_scan,
     outer_step,
+    outer_step_lanes,
+    stack_states,
+    unstack_state,
 )
 from repro.core.predict import (
     Predictions,
@@ -32,9 +38,12 @@ from repro.core.predict import (
     predictive_metrics,
 )
 from repro.core.driver import (
+    GRAD_EPOCH_EQUIV,
+    SGD_DIVERGENCE_THRESHOLD,
     FitResult,
     evaluate,
     fit,
+    fit_batch,
     init_hypers_heuristic,
     pick_sgd_learning_rate,
 )
@@ -44,10 +53,13 @@ __all__ = [
     "expected_initial_sqdistance", "init_probes", "probe_targets",
     "exact_grad_reference", "mll_grad_estimate",
     "OuterConfig", "OuterState", "effective_kind", "exact_outer_step",
-    "extend_state", "init_outer_state", "outer_step",
+    "extend_state", "init_outer_state", "init_outer_state_lanes",
+    "num_lanes", "outer_scan", "outer_step", "outer_step_lanes",
+    "stack_states", "unstack_state",
     "Predictions", "correction_matrix", "mean_only_predict",
     "pathwise_predict", "pathwise_predict_from_correction",
     "predictive_metrics",
-    "FitResult", "evaluate", "fit", "init_hypers_heuristic",
+    "GRAD_EPOCH_EQUIV", "SGD_DIVERGENCE_THRESHOLD",
+    "FitResult", "evaluate", "fit", "fit_batch", "init_hypers_heuristic",
     "pick_sgd_learning_rate",
 ]

@@ -21,7 +21,11 @@ from repro.core.outer import (
     OuterState,
     effective_kind,
     init_outer_state,
+    init_outer_state_lanes,
+    num_lanes,
+    outer_scan,
     outer_step,
+    unstack_state,
 )
 from repro.core.predict import pathwise_predict, predictive_metrics
 from repro.distributed.checkpoint import (
@@ -35,13 +39,29 @@ from repro.train.adam import AdamConfig, adam_init, adam_update
 
 SGD_LR_GRID = [5.0, 10.0, 20.0, 30.0, 50.0, 60.0, 70.0, 80.0, 90.0, 100.0]
 
+# Divergence cut-off for the SGD learning-rate grid search (paper Appendix B:
+# "the largest learning rate which does not cause divergence"). Systems are
+# normalised to ||b~|| = 1 (solvers.base), so a cold-started probe solve
+# begins at relative residual ~1 per system family; after the probe epochs,
+# res_y + res_z above 2 + 2 means BOTH families grew past twice their
+# starting norm — the iteration is expanding, not contracting.
+SGD_DIVERGENCE_THRESHOLD = 4.0
+
+# Epoch-equivalents charged to gradient assembly when splitting a measured
+# step time into solve vs grad/Adam time. mll_grad_estimate differentiates
+# one tiled kernel MVM: the forward pass touches every entry of H once
+# (1 epoch-equivalent) and the reverse pass re-streams the tiles for the
+# cotangents (~2 more). Adam and target building are O(n) and ignored.
+GRAD_EPOCH_EQUIV = 3.0
+
 
 @dataclass
 class FitResult:
     state: OuterState
     history: dict  # str -> np.ndarray over steps
     wall_time_s: float
-    solver_time_s: float
+    solver_time_s: float  # estimated inner-solve share (epoch accounting)
+    grad_time_s: float = 0.0  # estimated grad-assembly + Adam share
 
 
 def pick_sgd_learning_rate(
@@ -53,9 +73,12 @@ def pick_sgd_learning_rate(
     grid=None,
     probe_epochs: float = 3.0,
     halve: bool = False,
+    divergence_threshold: float = SGD_DIVERGENCE_THRESHOLD,
 ) -> float:
     """Paper protocol: largest grid lr whose first-step solve does not
-    diverge; ``halve=True`` returns half of it (large-dataset rule)."""
+    diverge; ``halve=True`` returns half of it (large-dataset rule).
+    "Diverged" means ``res_y + res_z`` is non-finite or exceeds
+    ``divergence_threshold`` (see :data:`SGD_DIVERGENCE_THRESHOLD`)."""
     grid = sorted(grid or SGD_LR_GRID)
     n, d = x.shape
     kind = effective_kind(cfg, params)
@@ -72,7 +95,7 @@ def pick_sgd_learning_rate(
                        max_epochs=probe_epochs, kind=kind)
         res = solve(op, targets, None, scfg, key=key)
         r = float(res.res_y) + float(res.res_z)
-        if np.isfinite(r) and r < 2.0 * 2.0:  # residuals are relative; >2 => diverging
+        if np.isfinite(r) and r < divergence_threshold:
             best = lr
         else:
             break
@@ -126,6 +149,56 @@ def init_hypers_heuristic(
     return jax.tree.map(lambda v: v / num_centroids, acc)
 
 
+def _empty_history() -> dict[str, list]:
+    return {
+        "res_y": [], "res_z": [], "iters": [], "epochs": [],
+        "hypers": [], "grad_norm": [], "data_fit": [],
+        "eval_step": [], "eval_rmse": [], "eval_llh": [],
+        "step_time_s": [], "solver_frac_iters": [],
+    }
+
+
+def _round_size(step: int, num_steps: int, steps_per_round: int,
+                *boundaries: int) -> int:
+    """Steps to scan this round: capped by ``steps_per_round`` (<= 0 means
+    "all remaining") and never crossing an eval/checkpoint boundary."""
+    k = num_steps - step
+    if steps_per_round > 0:
+        k = min(k, steps_per_round)
+    for every in boundaries:
+        if every:
+            k = min(k, every - step % every)
+    return k
+
+
+def _append_round(history: dict, metrics: dict, dt: float, k: int,
+                  lane: Optional[int] = None) -> float:
+    """Append one scan round's stacked metrics (leading axis = k steps) to
+    the per-step history lists. Returns the round's estimated solve time.
+
+    The solve vs grad/Adam split comes from epoch accounting (the scan runs
+    on-device, so there is no per-phase host timer): each step's solver work
+    is ``epochs`` epoch-equivalents against :data:`GRAD_EPOCH_EQUIV` for
+    gradient assembly; ``solver_frac_iters`` records that per-step fraction.
+    """
+    def col(name, dtype=float):
+        a = np.asarray(metrics[name])
+        return np.asarray(a[:, lane] if lane is not None else a, dtype=dtype)
+
+    epochs = col("epochs", np.float64)
+    frac = epochs / (epochs + GRAD_EPOCH_EQUIV)
+    history["res_y"].extend(col("res_y"))
+    history["res_z"].extend(col("res_z"))
+    history["iters"].extend(col("iters", int))
+    history["epochs"].extend(epochs)
+    history["hypers"].extend(col("hypers", None))
+    history["grad_norm"].extend(col("grad_norm"))
+    history["data_fit"].extend(col("data_fit"))
+    history["step_time_s"].extend([dt / k] * k)
+    history["solver_frac_iters"].extend(frac)
+    return float(np.sum(dt / k * frac))
+
+
 def fit(
     x: jax.Array,
     y: jax.Array,
@@ -139,8 +212,24 @@ def fit(
     ckpt_every: int = 0,
     resume: bool = True,
     verbose: bool = False,
+    steps_per_round: int = 8,
 ) -> FitResult:
     """Run ``cfg.num_steps`` outer MLL steps with optional eval/checkpointing.
+
+    The outer loop runs in scan chunks of up to ``steps_per_round`` steps
+    (:func:`repro.core.outer.outer_scan`): one device dispatch and one host
+    sync per round instead of per step. Chunks never cross an eval or
+    checkpoint boundary, and the scan body is the same traced computation
+    as :func:`outer_step`, so the trajectory is independent of the chunking
+    (``steps_per_round=1`` reproduces the legacy per-step loop exactly;
+    ``<= 0`` scans all remaining steps in one dispatch).
+
+    Compile-cost note: each distinct chunk length is a separate
+    ``outer_scan`` executable (``num_steps`` is static). Aligned cadences —
+    no boundaries, or ``eval_every``/``ckpt_every`` multiples of
+    ``steps_per_round`` — use one or two; pathological co-prime cadences
+    can produce one per distinct remainder, so align them when compile
+    time matters.
 
     Restart semantics: if ``ckpt_dir`` holds a checkpoint and ``resume``,
     training continues from it — including warm-start carry and probe draws,
@@ -152,54 +241,120 @@ def fit(
     if ckpt_dir and resume and latest_step(ckpt_dir) is not None:
         state, start_step = restore_checkpoint(ckpt_dir, state)
 
-    history: dict[str, list] = {
-        "res_y": [], "res_z": [], "iters": [], "epochs": [],
-        "hypers": [], "grad_norm": [], "data_fit": [],
-        "eval_step": [], "eval_rmse": [], "eval_llh": [],
-        "step_time_s": [], "solver_frac_iters": [],
-    }
+    history = _empty_history()
     t0 = time.perf_counter()
     solver_time = 0.0
 
-    for step in range(start_step, cfg.num_steps):
+    step = start_step
+    while step < cfg.num_steps:
+        k = _round_size(step, cfg.num_steps, steps_per_round,
+                        eval_every if x_test is not None else 0,
+                        ckpt_every if ckpt_dir else 0)
         ts = time.perf_counter()
-        state, metrics = outer_step(state, x, y, cfg)
+        state, metrics = outer_scan(state, x, y, cfg, k)
         jax.block_until_ready(state.carry_v)
         dt = time.perf_counter() - ts
-        solver_time += dt  # inner solve dominates; refined split in benchmarks
-        history["res_y"].append(float(metrics["res_y"]))
-        history["res_z"].append(float(metrics["res_z"]))
-        history["iters"].append(int(metrics["iters"]))
-        history["epochs"].append(float(metrics["epochs"]))
-        history["hypers"].append(np.asarray(metrics["hypers"]))
-        history["grad_norm"].append(float(metrics["grad_norm"]))
-        history["data_fit"].append(float(metrics["data_fit"]))
-        history["step_time_s"].append(dt)
+        solver_time += _append_round(history, metrics, dt, k)
+        step += k
 
-        if eval_every and x_test is not None and (step + 1) % eval_every == 0:
+        if eval_every and x_test is not None and step % eval_every == 0:
             m = evaluate(x, state, cfg, x_test, y_test)
-            history["eval_step"].append(step + 1)
+            history["eval_step"].append(step)
             history["eval_rmse"].append(m["rmse"])
             history["eval_llh"].append(m["llh"])
             if verbose:
-                print(f"[fit] step {step+1}: rmse={m['rmse']:.4f} llh={m['llh']:.4f}")
+                print(f"[fit] step {step}: rmse={m['rmse']:.4f} llh={m['llh']:.4f}")
 
-        if ckpt_dir and ckpt_every and (step + 1) % ckpt_every == 0:
-            save_checkpoint(ckpt_dir, step + 1, state)
+        if ckpt_dir and ckpt_every and step % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, step, state)
 
         if verbose:
             print(
-                f"[fit] step {step+1}/{cfg.num_steps} "
+                f"[fit] step {step}/{cfg.num_steps} "
                 f"res_y={history['res_y'][-1]:.4f} res_z={history['res_z'][-1]:.4f} "
-                f"iters={history['iters'][-1]} ({dt:.2f}s)"
+                f"iters={history['iters'][-1]} ({dt:.2f}s/{k} steps)"
             )
 
     if ckpt_dir:
         save_checkpoint(ckpt_dir, cfg.num_steps, state)
     wall = time.perf_counter() - t0
-    hist = {k: np.asarray(v) for k, v in history.items()}
+    hist = {k_: np.asarray(v) for k_, v in history.items()}
     return FitResult(state=state, history=hist, wall_time_s=wall,
-                     solver_time_s=solver_time)
+                     solver_time_s=solver_time,
+                     grad_time_s=float(np.sum(hist["step_time_s"])) - solver_time)
+
+
+def fit_batch(
+    x: jax.Array,
+    y: jax.Array,
+    cfg: OuterConfig,
+    keys: jax.Array,
+    init_params: Optional[HyperParams] = None,
+    x_test: Optional[jax.Array] = None,
+    y_test: Optional[jax.Array] = None,
+    verbose: bool = False,
+    steps_per_round: int = 0,
+) -> list[FitResult]:
+    """Fit B scenario lanes sharing one dataset and static config in ONE
+    compiled program (one executable, vmap over lanes, scan over steps).
+
+    Lanes differ in seed (``keys``: (B, 2) or a list of PRNG keys) and
+    optionally in initial hyperparameters (``init_params`` lane-stacked);
+    everything static — kernel kind, solver name, shapes, numeric solver
+    settings — is shared, which is exactly the one-executable-per-group
+    contract ``launch.batch`` partitions sweeps by. Lane ``l`` advances as
+    ``fit(x, y, cfg, key=keys[l], ...)`` would (solver freeze masks), so
+    results are per-cell comparable with single fits.
+
+    ``steps_per_round <= 0`` (default) scans all steps in one dispatch.
+    Checkpointing is not supported here; per-lane eval runs once at the end
+    when ``x_test`` is given. Returned per-lane ``wall_time_s`` is the
+    shared wall clock divided by B (the amortised per-scenario cost);
+    ``solver_time_s`` splits each lane's share by its own epoch accounting.
+    """
+    keys = jnp.asarray(keys)
+    lanes = keys.shape[0]
+    states = init_outer_state_lanes(keys, cfg, x, init_params=init_params)
+    assert num_lanes(states) == lanes
+
+    histories = [_empty_history() for _ in range(lanes)]
+    t0 = time.perf_counter()
+    solver_times = [0.0] * lanes
+
+    step = 0
+    while step < cfg.num_steps:
+        k = _round_size(step, cfg.num_steps, steps_per_round)
+        ts = time.perf_counter()
+        states, metrics = outer_scan(states, x, y, cfg, k, lanes=True)
+        jax.block_until_ready(states.carry_v)
+        dt = time.perf_counter() - ts
+        # One device->host transfer per metric, not one per metric per lane.
+        metrics = {name: np.asarray(v) for name, v in metrics.items()}
+        for lane in range(lanes):
+            solver_times[lane] += _append_round(
+                histories[lane], metrics, dt / lanes, k, lane=lane)
+        step += k
+        if verbose:
+            print(f"[fit_batch] step {step}/{cfg.num_steps} x {lanes} lanes "
+                  f"({dt:.2f}s/{k} steps)")
+
+    wall = time.perf_counter() - t0
+    results = []
+    for lane in range(lanes):
+        lane_state = unstack_state(states, lane)
+        hist = histories[lane]
+        if x_test is not None:
+            m = evaluate(x, lane_state, cfg, x_test, y_test)
+            hist["eval_step"].append(cfg.num_steps)
+            hist["eval_rmse"].append(m["rmse"])
+            hist["eval_llh"].append(m["llh"])
+        hist = {k_: np.asarray(v) for k_, v in hist.items()}
+        results.append(FitResult(
+            state=lane_state, history=hist, wall_time_s=wall / lanes,
+            solver_time_s=solver_times[lane],
+            grad_time_s=float(np.sum(hist["step_time_s"])) - solver_times[lane],
+        ))
+    return results
 
 
 def evaluate(

@@ -10,6 +10,15 @@ One `outer_step` = build targets -> (maybe) warm-start from carry ->
 inner solve (to tolerance and/or epoch budget) -> gradient assembly ->
 Adam update -> new carry. The whole step is a single jitted function;
 the solver's while-loop runs under `lax.while_loop`.
+
+Lane batching and scan chunking: the step body is vmap-safe over
+lane-stacked `OuterState`s (B scenarios differing in seed/inits advance in
+one program — `outer_step_lanes`; the solver freeze masks keep early-
+converging lanes identical to single runs) and `outer_scan` runs K steps
+under one `lax.scan` dispatch, returning stacked metrics instead of one
+host round-trip per step. Static configuration (kernel kind, solver name,
+shapes) stays per-executable; grids over it are partitioned by
+`repro.launch.batch`.
 """
 from __future__ import annotations
 
@@ -155,11 +164,17 @@ def _resample_probes(key: jax.Array, probes: ProbeState, x: jax.Array) -> ProbeS
     )
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def outer_step(
+def _outer_step(
     state: OuterState, x: jax.Array, y: jax.Array, cfg: OuterConfig
 ) -> tuple[OuterState, dict]:
-    """One outer MLL step: solve -> gradient -> Adam -> carry."""
+    """One outer MLL step: solve -> gradient -> Adam -> carry (unjitted).
+
+    Pure in ``state`` given static ``cfg`` and safe to ``jax.vmap`` over
+    lane-stacked states (the solver while-loops carry per-lane freeze
+    masks), so the same body serves :func:`outer_step` (jit),
+    :func:`outer_step_lanes` (jit-of-vmap) and :func:`outer_scan`
+    (jit-of-scan[-of-vmap]).
+    """
     kind = effective_kind(cfg, state.params)
     key, ksolve, kprobe = jax.random.split(state.key, 3)
 
@@ -213,6 +228,95 @@ def outer_step(
         ),
     }
     return new_state, metrics
+
+
+outer_step = partial(jax.jit, static_argnames=("cfg",))(_outer_step)
+
+
+def _outer_step_lanes(
+    states: OuterState, x: jax.Array, y: jax.Array, cfg: OuterConfig
+) -> tuple[OuterState, dict]:
+    return jax.vmap(lambda s: _outer_step(s, x, y, cfg))(states)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def outer_step_lanes(
+    states: OuterState, x: jax.Array, y: jax.Array, cfg: OuterConfig
+) -> tuple[OuterState, dict]:
+    """One outer MLL step for B lane-stacked scenarios in one program.
+
+    ``states`` is an :class:`OuterState` whose leaves carry a leading lane
+    axis (see :func:`stack_states` / :func:`init_outer_state_lanes`); the
+    dataset ``(x, y)`` and the static ``cfg`` — kernel kind, solver name,
+    shapes — are shared by every lane. Returns lane-stacked
+    ``(new_states, metrics)``; each lane advances exactly as it would under
+    a plain :func:`outer_step` (solver freeze masks keep early-converging
+    lanes honest).
+    """
+    return _outer_step_lanes(states, x, y, cfg)
+
+
+@partial(jax.jit, static_argnames=("cfg", "num_steps", "lanes"))
+def outer_scan(
+    state: OuterState,
+    x: jax.Array,
+    y: jax.Array,
+    cfg: OuterConfig,
+    num_steps: int,
+    lanes: bool = False,
+) -> tuple[OuterState, dict]:
+    """Run ``num_steps`` outer MLL steps under one ``lax.scan`` dispatch.
+
+    Kills the per-step host round-trip of the Python driver loop: one
+    device program advances the whole chunk and returns stacked metrics
+    with a leading ``num_steps`` axis (plus a lane axis right after it when
+    ``lanes=True`` and ``state`` is lane-stacked). Step semantics are
+    identical to iterating :func:`outer_step` — the scan body is the same
+    traced function.
+    """
+    step = _outer_step_lanes if lanes else _outer_step
+
+    def body(s, _):
+        return step(s, x, y, cfg)
+
+    return jax.lax.scan(body, state, None, length=num_steps)
+
+
+def stack_states(states) -> OuterState:
+    """Stack single-scenario :class:`OuterState` pytrees into one lane-
+    stacked state (lane axis 0). All states must share static structure
+    (kernel kind, estimator, shapes) — that is the one-executable contract.
+    """
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def unstack_state(states: OuterState, lane: int) -> OuterState:
+    """Extract lane ``lane`` of a lane-stacked state as a single state."""
+    return jax.tree.map(lambda v: v[lane], states)
+
+
+def num_lanes(states: OuterState) -> int:
+    """Lane count of a lane-stacked state."""
+    return states.carry_v.shape[0]
+
+
+def init_outer_state_lanes(
+    keys: jax.Array,
+    cfg: OuterConfig,
+    x: jax.Array,
+    init_params: Optional[HyperParams] = None,
+) -> OuterState:
+    """Initialise B lanes in one shot: ``keys`` is (B, 2); ``init_params``
+    may be lane-stacked (per-lane inits) or unstacked (shared init).
+    Lane ``l`` is initialised exactly as ``init_outer_state(keys[l], ...)``.
+    """
+    if init_params is None:
+        return jax.vmap(lambda k: init_outer_state(k, cfg, x))(keys)
+    p_axis = 0 if jnp.ndim(init_params.raw_signal) > 0 else None
+    return jax.vmap(
+        lambda k, p: init_outer_state(k, cfg, x, init_params=p),
+        in_axes=(0, p_axis),
+    )(keys, init_params)
 
 
 def exact_outer_step(

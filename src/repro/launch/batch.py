@@ -1,0 +1,361 @@
+"""One-program multi-scenario sweeps: kernel x seed grids as vmap lanes.
+
+Partitions a ``configs.gp_iterative.KERNEL_SWEEP`` x seed grid by static
+signature — kernel kind, solver name, estimator, shapes — and runs each
+group as ONE process and ONE compiled executable: seeds become vmap lanes
+inside a single scan-of-steps program (``core.driver.fit_batch``), instead
+of the one-subprocess-per-cell pattern of ``launch.sweep``. Per-cell JSON
+artifacts and the ``_sweep_status.json`` summary keep the sweep-output
+conventions (done cells are skipped on re-run, so the sweep is resumable).
+
+    PYTHONPATH=src python -m repro.launch.batch --out artifacts/batch \
+        --dataset pol --max-n 512 --kernels matern12,matern32 --seeds 2 \
+        --steps 5 --smoke
+
+``--isolate`` falls back to one subprocess per cell (jax memory hygiene /
+fault isolation, as in ``launch.sweep``); the artifacts are identical, so
+the two modes are interchangeable and A/B-able (benchmarks/batched_sweep).
+``--expect-one-compile-per-group`` asserts the one-executable contract via
+jit-cache retrace counting and fails the run when it is violated.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs.gp_iterative import KERNEL_SWEEP, SMOKE, GPArchConfig
+
+
+def cell_filename(arch_name: str, seed: int) -> str:
+    return f"{arch_name}__s{seed}.json"
+
+
+def cell_done(out_dir: str, arch_name: str, seed: int) -> bool:
+    return os.path.exists(os.path.join(out_dir, cell_filename(arch_name, seed)))
+
+
+def sweep_archs(kernels: list[str] | None, smoke: bool) -> list[GPArchConfig]:
+    """KERNEL_SWEEP entries (optionally filtered), at SMOKE sizes if asked."""
+    archs = list(KERNEL_SWEEP)
+    if kernels:
+        archs = [a for a in archs if a.kind in kernels]
+        missing = set(kernels) - {a.kind for a in archs}
+        if missing:
+            raise KeyError(f"kernels not in KERNEL_SWEEP: {sorted(missing)}")
+    if smoke:
+        archs = [
+            dataclasses.replace(
+                a, num_probes=SMOKE.num_probes,
+                num_rff_pairs=SMOKE.num_rff_pairs,
+                solver_epochs=SMOKE.solver_epochs,
+            )
+            for a in archs
+        ]
+    return archs
+
+
+def outer_config_for(arch: GPArchConfig, args):
+    """The (static, hashable) OuterConfig of one sweep cell."""
+    from repro.core import OuterConfig
+    from repro.solvers import SolverConfig
+
+    solver = args.solver or arch.solver
+    scfg = SolverConfig(
+        name=solver,
+        tolerance=args.tolerance,
+        kind=arch.kind,
+        max_epochs=float(arch.solver_epochs),
+        precond_rank=arch.precond_rank,
+        block_size=args.block_size,
+        batch_size=args.batch_size,
+        learning_rate=args.sgd_lr,
+    )
+    return OuterConfig(
+        estimator=arch.estimator,
+        warm_start=arch.warm_start,
+        num_probes=arch.num_probes,
+        num_rff_pairs=arch.num_rff_pairs,
+        kind=arch.kind,
+        solver=scfg,
+        num_steps=args.steps,
+        bm=args.bm,
+        bn=args.bn,
+    )
+
+
+def group_cells(archs: list[GPArchConfig], args):
+    """Static signature -> member archs.
+
+    The signature is the jit static argument itself (the hashable
+    OuterConfig); cells that share it share one executable. With a shared
+    dataset that means one group per kernel kind here, but the partition
+    stays correct for any future per-cell config divergence.
+    """
+    groups: dict = {}
+    for arch in archs:
+        groups.setdefault(outer_config_for(arch, args), []).append(arch)
+    return groups
+
+
+def _load_data(archs: list[GPArchConfig], args):
+    """Shared (x, y), padded for every block solver any cell will run."""
+    import math
+
+    from repro.data.synthetic import load_dataset, pad_to_block_multiple
+
+    ds = load_dataset(args.dataset, max_n=args.max_n, split=args.split)
+    x, y = ds.x_train, ds.y_train
+    solvers = {args.solver or a.solver for a in archs}
+    blocks = [args.block_size if s == "ap" else args.batch_size
+              for s in solvers if s in ("ap", "sgd")]
+    if blocks:
+        x, y, _ = pad_to_block_multiple(x, y, math.lcm(*blocks))
+    return x, y
+
+
+def _cell_record(arch: GPArchConfig, seed: int, res, mode: str,
+                 group_size: int) -> dict:
+    hist = res.history
+    return {
+        "arch": arch.name,
+        "kernel": arch.kind,
+        "seed": seed,
+        "mode": mode,
+        "lanes": group_size,
+        "wall_time_s": res.wall_time_s,
+        "solver_time_s": res.solver_time_s,
+        "grad_time_s": res.grad_time_s,
+        "final_hypers": [float(v) for v in hist["hypers"][-1]],
+        "history": {
+            "res_y": [float(v) for v in hist["res_y"]],
+            "res_z": [float(v) for v in hist["res_z"]],
+            "iters": [int(v) for v in hist["iters"]],
+            "epochs": [float(v) for v in hist["epochs"]],
+            "solver_frac_iters": [float(v) for v in hist["solver_frac_iters"]],
+        },
+    }
+
+
+def _write_cell(out_dir: str, arch: GPArchConfig, seed: int, record: dict):
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, cell_filename(arch.name, seed)), "w") as f:
+        json.dump(record, f, indent=2)
+
+
+def _scan_cache_size():
+    """jit-cache size of ``core.outer.outer_scan`` — the retrace counter.
+
+    Returns None (never 0) when the private jit introspection API is
+    unavailable, so one-compile-per-group checks cannot pass vacuously
+    (same contract as ``serve.engine.num_compiles``)."""
+    from repro.core.outer import outer_scan
+
+    try:
+        return int(outer_scan._cache_size())
+    except Exception:  # noqa: BLE001 - private API; absence is not an error
+        return None
+
+
+def run_batched(archs, seeds, x, y, args) -> dict:
+    """All groups in-process: one fit_batch (= one executable) per group.
+
+    Every cell of a group — across member archs, not just across seeds —
+    joins the same fit_batch call, so a group really is one program."""
+    import jax
+
+    from repro.core import fit_batch
+
+    compiles0 = _scan_cache_size()
+    failures, num_groups, num_cells = [], 0, 0
+    groups = group_cells(archs, args)
+    for cfg, members in groups.items():
+        cells = [(arch, s) for arch in members for s in seeds]
+        todo = [(arch, s) for arch, s in cells
+                if not cell_done(args.out, arch.name, s)]
+        for arch, s in cells:
+            if (arch, s) not in todo:
+                print(f"[batch] skip (done): {arch.name} s{s}")
+        if not todo:
+            continue
+        num_groups += 1
+        label = ",".join(sorted({arch.name for arch, _ in todo}))
+        t0 = time.time()
+        keys = jax.numpy.stack([jax.random.PRNGKey(s) for _, s in todo])
+        try:
+            results = fit_batch(x, y, cfg, keys)
+        except Exception as e:  # noqa: BLE001 - sweep must keep going
+            print(f"[batch] FAIL group {label}: {e}", file=sys.stderr)
+            failures.extend([(arch.name, s) for arch, s in todo])
+            continue
+        dt = time.time() - t0
+        print(f"[batch] OK {label} x {len(todo)} lanes ({dt:.1f}s)",
+              flush=True)
+        for (arch, s), res in zip(todo, results):
+            _write_cell(args.out, arch, s,
+                        _cell_record(arch, s, res, "batched", len(todo)))
+            num_cells += 1
+    compiles1 = _scan_cache_size()
+    num_compiles = (None if compiles0 is None or compiles1 is None
+                    else compiles1 - compiles0)
+    return {
+        "failures": failures,
+        "groups": num_groups,
+        "num_compiles": num_compiles,
+        "cells": num_cells,
+        "mode": "batched",
+    }
+
+
+def run_isolated(archs, seeds, args, argv_passthrough: list[str]) -> dict:
+    """Subprocess-per-cell fallback (the legacy ``launch.sweep`` pattern)."""
+    failures, num_cells = [], 0
+    for arch in archs:
+        for s in seeds:
+            if cell_done(args.out, arch.name, s):
+                print(f"[batch] skip (done): {arch.name} s{s}")
+                continue
+            cmd = [
+                sys.executable, "-m", "repro.launch.batch",
+                "--only-cell", f"{arch.kind}:{s}",
+            ] + argv_passthrough
+            # Workers must import repro regardless of cwd / install mode:
+            # prepend this package's src dir, keep the inherited PYTHONPATH.
+            src = os.path.dirname(os.path.dirname(
+                os.path.dirname(os.path.abspath(__file__))))
+            inherited = os.environ.get("PYTHONPATH")
+            pypath = src + (os.pathsep + inherited if inherited else "")
+            t0 = time.time()
+            r = subprocess.run(
+                cmd, capture_output=True, text=True, timeout=args.timeout,
+                env={**os.environ, "PYTHONPATH": pypath},
+            )
+            dt = time.time() - t0
+            if r.returncode == 0:
+                num_cells += 1
+                print(f"[batch] OK {arch.name} s{s} ({dt:.1f}s)", flush=True)
+            else:
+                failures.append((arch.name, s))
+                print(f"[batch] FAIL {arch.name} s{s} ({dt:.1f}s)\n"
+                      f"{(r.stderr or r.stdout)[-2000:]}", flush=True)
+    return {
+        "failures": failures,
+        "groups": num_cells,  # one executable (and process) per cell
+        "num_compiles": None,  # spread over subprocesses; unknowable here
+        "cells": num_cells,
+        "mode": "isolated",
+    }
+
+
+def run_single_cell(archs, args) -> int:
+    """--only-cell kernel:seed — one cell in this process (isolate worker)."""
+    import jax
+
+    from repro.core import fit
+
+    kind, seed = args.only_cell.rsplit(":", 1)
+    seed = int(seed)
+    matches = [a for a in archs if a.kind == kind]
+    if not matches:
+        print(f"[batch] unknown cell kernel {kind!r}", file=sys.stderr)
+        return 1
+    arch = matches[0]
+    cfg = outer_config_for(arch, args)
+    x, y = _load_data([arch], args)
+    res = fit(x, y, cfg, key=jax.random.PRNGKey(seed), steps_per_round=0)
+    _write_cell(args.out, arch, seed,
+                _cell_record(arch, seed, res, "isolated", 1))
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="artifacts/batch")
+    ap.add_argument("--dataset", default="pol")
+    ap.add_argument("--max-n", type=int, default=512)
+    ap.add_argument("--split", type=int, default=0)
+    ap.add_argument("--kernels", default=None,
+                    help="comma list (default: every KERNEL_SWEEP kernel)")
+    ap.add_argument("--seeds", type=int, default=2,
+                    help="seed grid 0..seeds-1 per kernel")
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--smoke", action="store_true",
+                    help="SMOKE probe/RFF/budget sizes")
+    ap.add_argument("--solver", default=None, choices=[None, "cg", "ap", "sgd"],
+                    help="override the sweep's solver")
+    ap.add_argument("--tolerance", type=float, default=0.01)
+    ap.add_argument("--block-size", type=int, default=64)
+    ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--sgd-lr", type=float, default=2.0)
+    ap.add_argument("--bm", type=int, default=256)
+    ap.add_argument("--bn", type=int, default=256)
+    ap.add_argument("--isolate", action="store_true",
+                    help="legacy one-subprocess-per-cell sweep")
+    ap.add_argument("--timeout", type=int, default=1800)
+    ap.add_argument("--only-cell", default=None,
+                    help="internal: run one kernel:seed cell in-process")
+    ap.add_argument("--expect-one-compile-per-group", action="store_true",
+                    help="fail unless retraces == executed groups")
+    args = ap.parse_args(argv)
+
+    kernels = args.kernels.split(",") if args.kernels else None
+    archs = sweep_archs(kernels, args.smoke)
+    seeds = list(range(args.seeds))
+
+    if args.only_cell:
+        return run_single_cell(archs, args)
+
+    t0 = time.time()
+    if args.isolate:
+        # Reconstruct the cell-relevant flags for the worker subprocesses.
+        passthrough = [
+            "--out", args.out, "--dataset", args.dataset,
+            "--max-n", str(args.max_n), "--split", str(args.split),
+            "--steps", str(args.steps), "--tolerance", str(args.tolerance),
+            "--block-size", str(args.block_size),
+            "--batch-size", str(args.batch_size),
+            "--sgd-lr", str(args.sgd_lr),
+            "--bm", str(args.bm), "--bn", str(args.bn),
+        ]
+        if args.smoke:
+            passthrough.append("--smoke")
+        if args.solver:
+            passthrough += ["--solver", args.solver]
+        status = run_isolated(archs, seeds, args, passthrough)
+    else:
+        x, y = _load_data(archs, args)
+        status = run_batched(archs, seeds, x, y, args)
+
+    status["wall_time_s"] = time.time() - t0
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, "_sweep_status.json"), "w") as f:
+        json.dump(status, f, indent=2)
+    print(f"[batch] {status['cells']} cells in {status['wall_time_s']:.1f}s "
+          f"({status['groups']} groups, compiles={status['num_compiles']}, "
+          f"{len(status['failures'])} failures)")
+
+    ok = not status["failures"]
+    if args.expect_one_compile_per_group and not args.isolate:
+        if status["num_compiles"] is None:
+            # Introspection unavailable must FAIL the check, not pass it
+            # vacuously (cf. serve.engine.num_compiles contract).
+            print("[batch] RETRACE CHECK UNAVAILABLE: jit cache "
+                  "introspection missing", file=sys.stderr)
+            ok = False
+        elif status["num_compiles"] != status["groups"]:
+            print(f"[batch] RETRACE VIOLATION: {status['num_compiles']} "
+                  f"compiles for {status['groups']} groups", file=sys.stderr)
+            ok = False
+        else:
+            print(f"[batch] one executable per group verified "
+                  f"({status['groups']} groups == {status['num_compiles']} "
+                  f"compiles)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,6 +5,7 @@ from dataclasses import replace
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.solvers.base import SolveResult, SolverConfig
 from repro.solvers.cg import solve_cg
@@ -58,9 +59,60 @@ def solve(
     raise ValueError(f"unknown solver {cfg.name!r}")
 
 
+def solve_lanes(
+    x: jax.Array,
+    params,
+    b: jax.Array,
+    v0: Optional[jax.Array],
+    cfg: SolverConfig,
+    *,
+    kind: Optional[str] = None,
+    backend: str = "streamed",
+    bm: int = 1024,
+    bn: int = 1024,
+    keys: Optional[jax.Array] = None,
+) -> SolveResult:
+    """Solve B independent scenario lanes in one vmapped program.
+
+    Each lane is a full batched GP system ``H(theta_l) V_l = B_l`` sharing
+    the training inputs ``x`` and the static solver config but with its own
+    hyperparameters, right-hand sides, and (optionally) warm start. The
+    shared ``while_loop`` keeps running while ANY lane is unconverged; the
+    per-lane freeze masks inside each solver body guarantee lane ``l``'s
+    trajectory — iterates, residuals, and ``iters``/``epochs`` counters —
+    matches a single-lane :func:`solve` of the same system.
+
+    Args:
+      x: (n, d) training inputs shared by all lanes.
+      params: HyperParams pytree, either lane-stacked (leaves with a leading
+        B axis) or shared (unstacked, broadcast to every lane).
+      b: (B, n, t) right-hand sides.
+      v0: (B, n, t) warm starts, or None for cold starts.
+      keys: (B, 2) PRNG keys (SGD batch sampling), or None.
+    Returns:
+      SolveResult with a leading lane axis on every field.
+    """
+    lanes = b.shape[0]
+    # Stacked params have a (B,) raw_signal; shared params a scalar.
+    p_axis = 0 if jnp.ndim(params.raw_signal) > 0 else None
+    if keys is None:
+        keys = jax.random.split(jax.random.PRNGKey(0), lanes)
+
+    def one(p, bl, v0l, kl):
+        op = HOperator(x=x, params=p, kind=kind, backend=backend, bm=bm, bn=bn)
+        return solve(op, bl, v0l, cfg, key=kl)
+
+    if v0 is None:
+        return jax.vmap(
+            lambda p, bl, kl: one(p, bl, None, kl), in_axes=(p_axis, 0, 0)
+        )(params, b, keys)
+    return jax.vmap(one, in_axes=(p_axis, 0, 0, 0))(params, b, v0, keys)
+
+
 __all__ = [
     "SOLVERS",
     "solve",
+    "solve_lanes",
     "solve_cg",
     "solve_ap",
     "solve_sgd",

@@ -26,6 +26,8 @@ from repro.solvers.base import (
     SolveResult,
     SolverConfig,
     denormalise,
+    freeze,
+    lane_active,
     normalise_system,
     not_converged,
     residual_norms,
@@ -74,6 +76,9 @@ def solve_ap(
         )
 
     def body(s: _APState):
+        # Per-lane freeze mask (see solvers.base): no-op single-lane, keeps
+        # converged lanes inert under vmap.
+        active = lane_active(s.t, max_iters, s.res_y, s.res_z, cfg.tolerance)
         # Greedy block selection by block-residual Frobenius norm.
         blk_norms = jnp.sum(
             s.r.reshape(nb, bs, -1) ** 2, axis=(1, 2)
@@ -88,7 +93,13 @@ def solve_ap(
         # r <- r - H[:, blk] @ delta  (one (n x b) kernel slab)
         r = s.r - op.col_block_mvm(start, bs, delta)
         res_y, res_z = residual_norms(r)
-        return _APState(v=v, r=r, t=s.t + 1, res_y=res_y, res_z=res_z)
+        return _APState(
+            v=freeze(active, v, s.v),
+            r=freeze(active, r, s.r),
+            t=s.t + active.astype(jnp.int32),
+            res_y=freeze(active, res_y, s.res_y),
+            res_z=freeze(active, res_z, s.res_z),
+        )
 
     final = jax.lax.while_loop(cond, body, state0)
     return SolveResult(

@@ -13,6 +13,14 @@ Termination (paper §B "Linear System Solver"): BOTH the mean-system residual
 norm ``||r_y||`` and the probe average ``||r_z|| = (1/s) sum_j ||r_j||`` must
 reach tau. (The pseudocode's ``and`` in the while-condition is a typo for the
 text's rule; we follow the text.)
+
+Lane batching: every solver body re-evaluates its OWN continue predicate
+(:func:`lane_active`) and masks every state update through :func:`freeze`.
+Unbatched this is a no-op (the ``while_loop`` cond already admitted the
+body), but under ``jax.vmap`` the loop runs while ANY lane is unconverged
+and the mask is what keeps converged lanes frozen: their solution stops
+mutating and their per-lane ``iters``/``epochs`` counters stop, so each
+lane's trajectory is identical to a single-lane solve.
 """
 from __future__ import annotations
 
@@ -89,3 +97,21 @@ def residual_norms(r: jax.Array) -> tuple[jax.Array, jax.Array]:
 def not_converged(res_y: jax.Array, res_z: jax.Array, tol: float) -> jax.Array:
     """Continue while EITHER system family is above tolerance."""
     return jnp.logical_or(res_y > tol, res_z > tol)
+
+
+def lane_active(
+    t: jax.Array, max_iters: jax.Array, res_y: jax.Array, res_z: jax.Array,
+    tol: float,
+) -> jax.Array:
+    """This lane's own continue predicate — the solver while-loop cond.
+
+    Scalar bool in a single-lane solve (necessarily True inside the body);
+    per-lane bool under ``jax.vmap``, where the loop keeps running until
+    every lane is done and frozen lanes must not mutate.
+    """
+    return jnp.logical_and(t < max_iters, not_converged(res_y, res_z, tol))
+
+
+def freeze(active: jax.Array, new: jax.Array, old: jax.Array) -> jax.Array:
+    """Per-lane freeze mask: take ``new`` only while the lane is active."""
+    return jnp.where(active, new, old)

@@ -23,6 +23,8 @@ from repro.solvers.base import (
     SolveResult,
     SolverConfig,
     denormalise,
+    freeze,
+    lane_active,
     normalise_system,
     not_converged,
     residual_norms,
@@ -71,6 +73,10 @@ def solve_cg(
         )
 
     def body(s: _CGState):
+        # This lane's own cond (freeze mask): a no-op single-lane, but under
+        # vmap the loop runs while ANY lane is live and converged lanes must
+        # stop mutating (and stop counting iterations).
+        active = lane_active(s.t, max_iters, s.res_y, s.res_z, cfg.tolerance)
         hd = op.mvm(s.d)
         denom = jnp.sum(s.d * hd, axis=0)
         # Guard converged columns (denom -> 0) against 0/0.
@@ -84,8 +90,15 @@ def solve_cg(
         beta = jnp.where(s.gamma > 0, beta, 0.0)
         d = p + beta * s.d
         res_y, res_z = residual_norms(r)
-        return _CGState(v=v, r=r, d=d, gamma=gamma_new, t=s.t + 1,
-                        res_y=res_y, res_z=res_z)
+        return _CGState(
+            v=freeze(active, v, s.v),
+            r=freeze(active, r, s.r),
+            d=freeze(active, d, s.d),
+            gamma=freeze(active, gamma_new, s.gamma),
+            t=s.t + active.astype(jnp.int32),
+            res_y=freeze(active, res_y, s.res_y),
+            res_z=freeze(active, res_z, s.res_z),
+        )
 
     final = jax.lax.while_loop(cond, body, state0)
     return SolveResult(

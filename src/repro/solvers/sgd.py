@@ -26,6 +26,8 @@ from repro.solvers.base import (
     SolveResult,
     SolverConfig,
     denormalise,
+    freeze,
+    lane_active,
     normalise_system,
     not_converged,
     residual_norms,
@@ -83,6 +85,11 @@ def solve_sgd(
     bn = sysn.b
 
     def body(s: _SGDState):
+        # Per-lane freeze mask (see solvers.base): no-op single-lane, keeps
+        # converged lanes inert under vmap. The key still advances on frozen
+        # lanes, but their drawn batch index is masked out with everything
+        # else, so each live lane's key sequence matches a single-lane run.
+        active = lane_active(s.t, max_iters, s.res_y, s.res_z, cfg.tolerance)
         # Random contiguous block = random row batch with O(1) index logic;
         # block boundaries are randomised by the data shuffle, and a uniform
         # block is an unbiased minibatch of rows.
@@ -102,8 +109,15 @@ def solve_sgd(
         # Sparse residual refresh: r[idx] <- -g[idx].
         r = jax.lax.dynamic_update_slice(s.r, -gb, (start, 0))
         res_y, res_z = residual_norms(r)
-        return _SGDState(v=v, m=m, r=r, key=key, t=s.t + 1,
-                         res_y=res_y, res_z=res_z)
+        return _SGDState(
+            v=freeze(active, v, s.v),
+            m=freeze(active, m, s.m),
+            r=freeze(active, r, s.r),
+            key=key,
+            t=s.t + active.astype(jnp.int32),
+            res_y=freeze(active, res_y, s.res_y),
+            res_z=freeze(active, res_z, s.res_z),
+        )
 
     final = jax.lax.while_loop(cond, body, state0)
 
