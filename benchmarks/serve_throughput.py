@@ -104,6 +104,8 @@ def main(argv=None):
     now = engine.num_compiles()
     retraces = None if (compiles is None or now is None) else now - compiles
 
+    import json
+
     qps = lambda dt: args.requests * width / dt
     print(f"[serve-bench] width={width} requests={args.requests} "
           f"n={n_fit} buckets={buckets}")
@@ -112,8 +114,9 @@ def main(argv=None):
     print(f"  compat : {qps(compat_dt):9.1f} q/s  p50={compat_p50:7.2f}ms "
           f"p99={compat_p99:7.2f}ms")
     print(f"  engine : {qps(eng_dt):9.1f} q/s  p50={eng_p50:7.2f}ms "
-          f"p99={eng_p99:7.2f}ms  retraces={retraces} "
-          f"stats={engine.stats.per_bucket}")
+          f"p99={eng_p99:7.2f}ms  retraces={retraces}")
+    # the shared stats wire format (same shape as GET /stats "engine")
+    print(f"  stats  : {json.dumps(engine.stats_dict())}")
     speedup = seed_dt / eng_dt
     print(f"  engine speedup over seed path: {speedup:.1f}x")
     if retraces is None:

@@ -21,6 +21,7 @@ Design (fault-tolerance contract, DESIGN.md §6):
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
@@ -31,6 +32,53 @@ import jax
 import numpy as np
 
 _STEP_RE = re.compile(r"step_(\d+)\.npz$")
+
+
+def file_sha256(path: str, chunk_bytes: int = 1 << 20) -> str:
+    """Streaming sha256 of a file (content-addressing for artifact stores)."""
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while block := f.read(chunk_bytes):
+            h.update(block)
+    return h.hexdigest()
+
+
+def checkpoint_manifest(ckpt_dir: str, step: Optional[int] = None) -> dict:
+    """Content-hash manifest of one checkpoint (default: latest).
+
+    Lists every file the checkpoint consists of (the ``.npz`` payload and
+    its JSON sidecar) with size and sha256, so a reader in another process
+    can verify it fetched exactly what the writer published (torn copies,
+    partial rsyncs and bit rot all fail loudly instead of deserialising
+    garbage into a served model).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    files = {}
+    for suffix in (".npz", ".json"):
+        name = f"step_{step}{suffix}"
+        path = os.path.join(ckpt_dir, name)
+        files[name] = {
+            "sha256": file_sha256(path),
+            "bytes": os.path.getsize(path),
+        }
+    return {"step": int(step), "files": files}
+
+
+def verify_manifest(ckpt_dir: str, manifest: dict) -> None:
+    """Raise ValueError if any manifest-listed file is missing or corrupt."""
+    for name, want in manifest["files"].items():
+        path = os.path.join(ckpt_dir, name)
+        if not os.path.exists(path):
+            raise ValueError(f"manifest file missing: {path}")
+        got = file_sha256(path)
+        if got != want["sha256"]:
+            raise ValueError(
+                f"content hash mismatch for {path}: "
+                f"manifest {want['sha256'][:12]}.., file {got[:12]}.."
+            )
 
 
 def _is_writer() -> bool:

@@ -95,6 +95,136 @@ def serve_gp_compat(args, ds, cfg, state):
           f"rmse={float(m['rmse']):.4f} llh={float(m['llh']):.4f}")
 
 
+def _http_smoke_probe(endpoints, xq):
+    """The CI smoke sequence against live endpoints: /healthz and /predict
+    must 200 with finite predictions; a flood past the admission cap must
+    shed 429 WITH a Retry-After hint. Raises SystemExit on any violation."""
+    import numpy as np
+
+    from repro.serve.cluster.replica import _http_json
+
+    for ep in endpoints:
+        status, body = _http_json(ep + "/healthz")
+        if status != 200:
+            raise SystemExit(f"[http-smoke] {ep}/healthz -> {status}: {body}")
+        status, body = _http_json(ep + "/predict",
+                                  {"x": np.asarray(xq).tolist()})
+        if status != 200:
+            raise SystemExit(f"[http-smoke] {ep}/predict -> {status}: {body}")
+        mean = np.asarray(body["mean"])
+        if mean.shape != (xq.shape[0],) or not np.all(np.isfinite(mean)):
+            raise SystemExit(f"[http-smoke] non-finite/misshapen mean: {body}")
+        print(f"[http-smoke] {ep}: healthz ok, predict ok "
+              f"(version={body.get('version')})")
+
+    # Flood one endpoint past the admission cap: sequential requests drain
+    # the token bucket, so with burst B requests B+1.. must shed.
+    import urllib.error
+    import urllib.request
+    import json as _json
+
+    ep = endpoints[0]
+    codes, retry_after = [], None
+    probe = _json.dumps({"x": np.asarray(xq[:1]).tolist()}).encode()
+    for _ in range(10):
+        req = urllib.request.Request(
+            ep + "/predict", data=probe,
+            headers={"Content-Type": "application/json"})
+        try:
+            with urllib.request.urlopen(req, timeout=30) as resp:
+                codes.append(resp.status)
+        except urllib.error.HTTPError as e:
+            codes.append(e.code)
+            if e.code == 429 and retry_after is None:
+                retry_after = e.headers.get("Retry-After")
+    if 429 not in codes:
+        raise SystemExit(f"[http-smoke] flood never shed: {codes}")
+    if retry_after is None or int(retry_after) < 1:
+        raise SystemExit(f"[http-smoke] 429 without Retry-After: {codes}")
+    stats_status, stats = _http_json(ep + "/stats")
+    if stats_status != 200 or stats["admission"]["shed"] < codes.count(429):
+        raise SystemExit(f"[http-smoke] stats disagree with flood: {stats}")
+    print(f"[http-smoke] flood codes={codes} Retry-After={retry_after} "
+          f"shed={stats['admission']['shed']} — OK")
+
+
+def serve_gp_http(args, ds, cfg, state):
+    """HTTP cluster serving: publish the artifact, run 1..N replicas.
+
+    ``--replicas 1`` without ``--artifact-store`` serves in-process (no
+    extra processes, still the full transport/admission stack). With a
+    store, replicas are spawned worker processes that poll ``LATEST`` and
+    pick up every later publish without a restart.
+    """
+    from repro.serve import MultiModelServer, export_servable
+    from repro.serve.cluster import (
+        AdmissionController,
+        ReplicaSupervisor,
+        ServeFrontend,
+        publish_servable,
+        start_http_server,
+    )
+
+    host, port = args.http.rsplit(":", 1)
+    port = int(port)
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    model = export_servable(state, ds.x_train)
+    width = min(16, ds.x_test.shape[0])
+    xq = ds.x_test[:width]
+
+    if args.replicas > 1 and not args.artifact_store:
+        raise SystemExit("--replicas > 1 needs --artifact-store (the store "
+                         "is how worker processes receive the model)")
+
+    if args.artifact_store:
+        version = publish_servable(args.artifact_store, model)
+        print(f"[serve-http] published {version} -> {args.artifact_store}")
+        sup = ReplicaSupervisor(
+            args.artifact_store, num_replicas=args.replicas, host=host,
+            base_port=port, buckets=buckets, bm=cfg.bm, bn=cfg.bn,
+            rate_qps=args.admission_qps, burst=args.admission_burst,
+            max_inflight=args.max_inflight,
+        )
+        endpoints = sup.start()
+        print(f"[serve-http] {args.replicas} replica(s): {endpoints}")
+        try:
+            if args.http_smoke:
+                _http_smoke_probe(endpoints, xq)
+            elif args.serve_seconds:
+                time.sleep(args.serve_seconds)
+            else:
+                while True:
+                    time.sleep(3600)
+        except KeyboardInterrupt:
+            pass
+        finally:
+            sup.stop()
+        return
+
+    server = MultiModelServer(buckets=buckets, bm=cfg.bm, bn=cfg.bn)
+    server.register("default", model, warmup=True)
+    admission = AdmissionController(
+        buckets=buckets, rate_qps=args.admission_qps,
+        burst=args.admission_burst, max_inflight=args.max_inflight,
+    )
+    frontend = ServeFrontend(server, admission)
+    httpd, _ = start_http_server(frontend, host=host, port=port)
+    endpoint = f"http://{host}:{httpd.port}"
+    print(f"[serve-http] in-process replica: {endpoint}")
+    try:
+        if args.http_smoke:
+            _http_smoke_probe([endpoint], xq)
+        elif args.serve_seconds:
+            time.sleep(args.serve_seconds)
+        else:
+            while True:
+                time.sleep(3600)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        httpd.shutdown()
+
+
 def serve_gp(args, ds=None, cfg=None, state=None):
     """Engine-based serving: fit -> export `ServableGP` -> bucketed engine.
 
@@ -111,6 +241,8 @@ def serve_gp(args, ds=None, cfg=None, state=None):
         ds, cfg, state = _fit_gp(args)
     if args.compat:
         return serve_gp_compat(args, ds, cfg, state)
+    if args.http:
+        return serve_gp_http(args, ds, cfg, state)
 
     buckets = tuple(int(b) for b in args.buckets.split(","))
     model = export_servable(state, ds.x_train)
@@ -171,6 +303,26 @@ def main(argv=None):
                     help="legacy per-request GP loop (jit hoisted, tail padded)")
     ap.add_argument("--refresh-every", type=int, default=0,
                     help="if set, run one warm online refresh after serving")
+    ap.add_argument("--http", default=None, metavar="HOST:PORT",
+                    help="serve GP predictions over HTTP (port 0 = ephemeral)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="worker processes behind --http (>1 needs "
+                         "--artifact-store; replica i binds PORT+i)")
+    ap.add_argument("--artifact-store", default=None, metavar="DIR",
+                    help="publish the fitted artifact here and serve from it "
+                         "(replicas poll LATEST and hot-swap new publishes)")
+    ap.add_argument("--admission-qps", type=float, default=None,
+                    help="admitted requests/s per bucket class (None = no "
+                         "rate limit)")
+    ap.add_argument("--admission-burst", type=float, default=None,
+                    help="token-bucket burst (default 2x qps)")
+    ap.add_argument("--max-inflight", type=int, default=64,
+                    help="concurrent in-compute requests before shedding")
+    ap.add_argument("--serve-seconds", type=float, default=0,
+                    help="serve for S seconds then exit (0 = run forever)")
+    ap.add_argument("--http-smoke", action="store_true",
+                    help="probe /healthz + /predict + overload shedding "
+                         "against the live server, then exit (CI smoke)")
     args = ap.parse_args(argv)
     if args.arch == "gp-iterative":
         serve_gp(args)

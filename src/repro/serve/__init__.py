@@ -8,7 +8,11 @@ serving layer between fitting (`repro.core`) and the CLI (`repro.launch`):
   * :mod:`repro.serve.artifact`   — frozen, checkpointable `ServableGP`
   * :mod:`repro.serve.engine`     — shape-bucketed microbatching engine
   * :mod:`repro.serve.refresh`    — warm-started online model refresh
+    (full re-solve or incremental new-row ``mode="block"``)
   * :mod:`repro.serve.multimodel` — several models behind one engine
+  * :mod:`repro.serve.cluster`    — multi-process serving: HTTP transport,
+    admission control, versioned artifact store, replica supervisor
+    (imported explicitly as ``repro.serve.cluster``)
 """
 from repro.serve.artifact import (
     ServableGP,

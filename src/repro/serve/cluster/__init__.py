@@ -1,0 +1,47 @@
+"""Multi-process cluster serving on top of the bucketed engine.
+
+The step from "a library you can call" to "a service you can run":
+
+  * :mod:`repro.serve.cluster.transport` — stdlib HTTP front-end
+    (``/predict``, ``/healthz``, ``/stats``, ``/admin/swap``) with a JSON
+    wire format and per-request deadlines;
+  * :mod:`repro.serve.cluster.admission` — per-bucket token buckets,
+    bounded concurrency, deadline-aware load shedding (429 + Retry-After)
+    and priority classes;
+  * :mod:`repro.serve.cluster.store` — versioned artifact distribution
+    with content-hash manifests and an atomic ``LATEST`` pointer;
+  * :mod:`repro.serve.cluster.replica` — worker processes + a supervisor
+    that spawns, monitors and drains them.
+"""
+from repro.serve.cluster.admission import (
+    AdmissionController,
+    AdmissionStats,
+    Decision,
+    Priority,
+    TokenBucket,
+    parse_priority,
+)
+from repro.serve.cluster.replica import ReplicaSupervisor, run_worker
+from repro.serve.cluster.store import (
+    ArtifactPoller,
+    fetch_servable,
+    latest_version,
+    list_versions,
+    publish_servable,
+    read_manifest,
+)
+from repro.serve.cluster.transport import (
+    GPHTTPServer,
+    ServeFrontend,
+    WireError,
+    start_http_server,
+)
+
+__all__ = [
+    "AdmissionController", "AdmissionStats", "Decision", "Priority",
+    "TokenBucket", "parse_priority",
+    "ReplicaSupervisor", "run_worker",
+    "ArtifactPoller", "fetch_servable", "latest_version", "list_versions",
+    "publish_servable", "read_manifest",
+    "GPHTTPServer", "ServeFrontend", "WireError", "start_http_server",
+]

@@ -1,0 +1,265 @@
+"""Replica workers + supervisor: N processes serving one artifact store.
+
+A *worker* is a fresh process (``multiprocessing`` spawn context, so jax
+state is never forked mid-flight) that:
+
+  1. polls the artifact store until a first version is published,
+  2. builds a `MultiModelServer` (+ admission controller) and warms every
+     bucket executable for the fetched model,
+  3. binds the HTTP front-end (port 0 => ephemeral) and writes the chosen
+     port to a ``replica_<i>.port`` file (write-temp + rename, so the
+     supervisor never reads a half-written port),
+  4. keeps polling ``LATEST`` and atomically swaps new versions in while
+     serving (in-flight requests finish on the model snapshot they
+     started with).
+
+The *supervisor* spawns the workers, waits for them to report healthy,
+restarts any that die, and on ``stop()`` drains them (POST /admin/drain,
+then wait for in-flight to hit zero) before terminating — a swap or a
+shutdown never drops an admitted request.
+"""
+from __future__ import annotations
+
+import json
+import multiprocessing
+import os
+import signal
+import threading
+import time
+import urllib.error
+import urllib.request
+from typing import Optional
+
+DEFAULT_BUCKETS = (16, 64, 256)
+
+
+def _http_json(
+    url: str,
+    payload: Optional[dict] = None,
+    timeout: float = 10.0,
+) -> tuple[int, dict]:
+    """Tiny stdlib HTTP client; returns (status, parsed body)."""
+    data = None if payload is None else json.dumps(payload).encode()
+    req = urllib.request.Request(
+        url, data=data,
+        headers={"Content-Type": "application/json"} if data else {},
+        method="POST" if data is not None else "GET",
+    )
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as resp:
+            return resp.status, json.loads(resp.read() or b"{}")
+    except urllib.error.HTTPError as e:
+        try:
+            body = json.loads(e.read() or b"{}")
+        except json.JSONDecodeError:
+            body = {}
+        return e.code, body
+
+
+def run_worker(cfg: dict) -> None:
+    """Worker process entry point; ``cfg`` is a plain dict of primitives
+    (spawn-pickle friendly). Blocks until SIGTERM/SIGINT, then drains."""
+    # Imports happen here, inside the spawned process.
+    from repro.serve.cluster.admission import AdmissionController
+    from repro.serve.cluster.store import ArtifactPoller, latest_version
+    from repro.serve.cluster.transport import ServeFrontend, start_http_server
+    from repro.serve.multimodel import MultiModelServer
+
+    buckets = tuple(cfg.get("buckets", DEFAULT_BUCKETS))
+    server = MultiModelServer(
+        buckets=buckets, bm=cfg.get("bm", 1024), bn=cfg.get("bn", 1024)
+    )
+    admission = AdmissionController(
+        buckets=buckets,
+        rate_qps=cfg.get("rate_qps"),
+        burst=cfg.get("burst"),
+        max_inflight=cfg.get("max_inflight", 64),
+        default_deadline_ms=cfg.get("default_deadline_ms"),
+    )
+    frontend = ServeFrontend(
+        server, admission, store_dir=cfg["store_dir"],
+        default_model=cfg.get("default_model", "default"),
+    )
+    poller = ArtifactPoller(
+        cfg["store_dir"], server,
+        interval_s=cfg.get("poll_interval_s", 0.5),
+        on_swap=lambda version, manifest: setattr(frontend, "version", version),
+    )
+
+    # Wait for the first published version (the supervisor may start us
+    # before the publisher finishes).
+    deadline = time.monotonic() + cfg.get("wait_for_artifact_s", 120.0)
+    while latest_version(cfg["store_dir"]) is None:
+        if time.monotonic() > deadline:
+            raise TimeoutError(
+                f"no artifact published under {cfg['store_dir']}"
+            )
+        time.sleep(0.2)
+    if not poller.poll_once():
+        raise RuntimeError(
+            f"initial artifact fetch failed: {poller.last_error}"
+        )
+
+    httpd, _ = start_http_server(
+        frontend, host=cfg.get("host", "127.0.0.1"), port=cfg.get("port", 0)
+    )
+    port_file = cfg.get("port_file")
+    if port_file:
+        tmp = port_file + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(f"{httpd.port}\n")
+        os.rename(tmp, port_file)
+
+    stop = threading.Event()
+    for sig in (signal.SIGTERM, signal.SIGINT):
+        signal.signal(sig, lambda *_: stop.set())
+    poller.start()
+    stop.wait()
+
+    # Drain: refuse new work, let in-flight requests finish, then exit.
+    frontend.draining = True
+    drain_deadline = time.monotonic() + cfg.get("drain_timeout_s", 10.0)
+    while admission.inflight > 0 and time.monotonic() < drain_deadline:
+        time.sleep(0.05)
+    poller.stop()
+    httpd.shutdown()
+
+
+class ReplicaSupervisor:
+    """Spawn, monitor and drain N HTTP replica workers over one store."""
+
+    def __init__(
+        self,
+        store_dir: str,
+        num_replicas: int = 2,
+        host: str = "127.0.0.1",
+        base_port: int = 0,
+        run_dir: Optional[str] = None,
+        **worker_kwargs,
+    ):
+        if num_replicas < 1:
+            raise ValueError("need at least one replica")
+        self.store_dir = store_dir
+        self.num_replicas = int(num_replicas)
+        self.host = host
+        self.base_port = int(base_port)  # 0 => ephemeral; else port+i per replica
+        self.run_dir = run_dir if run_dir is not None else os.path.join(
+            store_dir, ".run"
+        )
+        self.worker_kwargs = worker_kwargs
+        self._ctx = multiprocessing.get_context("spawn")
+        self._procs: list = [None] * self.num_replicas
+        self.ports: list = [None] * self.num_replicas
+        self.restarts = 0
+
+    # -- lifecycle -----------------------------------------------------------
+    def _port_file(self, i: int) -> str:
+        return os.path.join(self.run_dir, f"replica_{i}.port")
+
+    def _spawn(self, i: int) -> None:
+        pf = self._port_file(i)
+        if os.path.exists(pf):
+            os.remove(pf)
+        cfg = {
+            "store_dir": self.store_dir,
+            "host": self.host,
+            "port": (self.base_port + i) if self.base_port else 0,
+            "port_file": pf,
+            **self.worker_kwargs,
+        }
+        proc = self._ctx.Process(
+            target=run_worker, args=(cfg,), name=f"gp-replica-{i}", daemon=True
+        )
+        proc.start()
+        self._procs[i] = proc
+        self.ports[i] = None
+
+    def start(self, timeout_s: float = 180.0) -> list:
+        """Spawn all replicas, wait until each reports healthy over HTTP.
+
+        Returns the list of endpoint URLs. Raises on timeout or if a
+        worker dies during startup (its exitcode is in the message).
+        """
+        os.makedirs(self.run_dir, exist_ok=True)
+        for i in range(self.num_replicas):
+            self._spawn(i)
+        deadline = time.monotonic() + timeout_s
+        pending = set(range(self.num_replicas))
+        while pending:
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"replicas {sorted(pending)} not healthy after "
+                    f"{timeout_s:.0f}s"
+                )
+            for i in sorted(pending):
+                proc = self._procs[i]
+                if not proc.is_alive():
+                    raise RuntimeError(
+                        f"replica {i} died during startup "
+                        f"(exitcode={proc.exitcode})"
+                    )
+                if self.ports[i] is None:
+                    try:
+                        with open(self._port_file(i)) as f:
+                            self.ports[i] = int(f.read().strip())
+                    except (FileNotFoundError, ValueError):
+                        continue
+                try:
+                    status, _ = _http_json(
+                        self.endpoint(i) + "/healthz", timeout=2.0
+                    )
+                except OSError:
+                    continue
+                if status == 200:
+                    pending.discard(i)
+            if pending:
+                time.sleep(0.2)
+        return self.endpoints()
+
+    def endpoint(self, i: int) -> str:
+        if self.ports[i] is None:
+            raise RuntimeError(f"replica {i} has not reported a port yet")
+        return f"http://{self.host}:{self.ports[i]}"
+
+    def endpoints(self) -> list:
+        return [self.endpoint(i) for i in range(self.num_replicas)]
+
+    def check(self) -> int:
+        """Respawn any dead replica; returns how many were restarted."""
+        restarted = 0
+        for i, proc in enumerate(self._procs):
+            if proc is not None and not proc.is_alive():
+                self._spawn(i)
+                restarted += 1
+        self.restarts += restarted
+        return restarted
+
+    def stop(self, drain: bool = True, timeout_s: float = 15.0) -> None:
+        """Drain (refuse new work, finish in-flight) then stop every worker."""
+        if drain:
+            for i in range(self.num_replicas):
+                if self.ports[i] is None or not self._procs[i].is_alive():
+                    continue
+                try:
+                    _http_json(self.endpoint(i) + "/admin/drain",
+                               payload={}, timeout=2.0)
+                except OSError:
+                    pass
+        for proc in self._procs:
+            if proc is not None and proc.is_alive():
+                proc.terminate()
+        deadline = time.monotonic() + timeout_s
+        for proc in self._procs:
+            if proc is None:
+                continue
+            proc.join(timeout=max(0.1, deadline - time.monotonic()))
+            if proc.is_alive():
+                proc.kill()
+                proc.join(timeout=5.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.stop()
+        return False

@@ -1,0 +1,355 @@
+"""HTTP front-end for the bucketed serving engine (stdlib only).
+
+Endpoints (JSON in/out):
+
+  * ``POST /predict``  — body ``{"x": [[...], ...], "model": name?,
+    "deadline_ms": int?, "priority": "predict|refresh|admin"?,
+    "samples": bool?}``; replies ``{"mean": [...], "var": [...], "rows": m,
+    "model": name, "version": v, "elapsed_ms": t}`` (+ ``samples``).
+    Sheds with ``429`` + ``Retry-After`` when admission refuses, ``504``
+    when the request's deadline expired before compute could start.
+  * ``GET /healthz``   — liveness + served artifact version (``503`` while
+    draining or before a model is loaded).
+  * ``GET /stats``     — ``EngineStats.as_dict`` + admission counters +
+    per-status HTTP counters; the one stats wire format.
+  * ``POST /admin/swap`` — fetch a version from the artifact store (body
+    ``{"version": v?}``, default LATEST) and atomically swap it in.
+  * ``POST /admin/drain`` — stop admitting, report in-flight count (the
+    supervisor polls until 0 before stopping the process).
+
+Deadlines are budgets from request arrival: admission refuses requests
+whose estimated queue wait already exceeds the budget, and a request that
+aged past its deadline between admission and compute returns ``504``
+instead of burning engine time. In-flight requests hold a reference to the
+model snapshot they started with, so an ``/admin/swap`` (or poller swap)
+never tears a response — the swap is a pointer flip inside the engine.
+"""
+from __future__ import annotations
+
+import json
+import math
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+
+import numpy as np
+
+from repro.serve.cluster.admission import (
+    AdmissionController,
+    Priority,
+    parse_priority,
+)
+from repro.serve.engine import BucketedEngine
+from repro.serve.multimodel import MultiModelServer
+
+DEFAULT_MODEL = "default"
+
+
+class WireError(Exception):
+    """Maps straight to an HTTP status + JSON error body."""
+
+    def __init__(self, status: int, message: str):
+        super().__init__(message)
+        self.status = status
+
+
+class ServeFrontend:
+    """Transport-independent request handling around an engine/registry.
+
+    ``target`` is a `BucketedEngine` (single anonymous model) or a
+    `MultiModelServer` (route by the request's ``model`` field).
+    ``store_dir`` enables ``/admin/swap`` and version reporting.
+    """
+
+    def __init__(
+        self,
+        target,
+        admission: Optional[AdmissionController] = None,
+        store_dir: Optional[str] = None,
+        version: Optional[str] = None,
+        default_model: str = DEFAULT_MODEL,
+    ):
+        self.target = target
+        self.admission = admission if admission is not None else (
+            AdmissionController(
+                buckets=getattr(target, "buckets", None)
+                or getattr(getattr(target, "engine", None), "buckets", ()),
+            )
+        )
+        self.store_dir = store_dir
+        self.version = version
+        self.default_model = default_model
+        self.draining = False
+        self._lock = threading.Lock()
+        self.by_status: dict = {}
+
+    # -- helpers -------------------------------------------------------------
+    @property
+    def _engine(self) -> BucketedEngine:
+        if isinstance(self.target, MultiModelServer):
+            return self.target.engine
+        return self.target
+
+    def _model_names(self) -> list:
+        if isinstance(self.target, MultiModelServer):
+            return list(self.target.names())
+        try:
+            self.target.model
+            return [self.default_model]
+        except RuntimeError:
+            return []
+
+    def _submit(self, name: Optional[str], xq) -> "object":
+        if isinstance(self.target, MultiModelServer):
+            try:
+                model = self.target.get(name or self.default_model)
+            except KeyError as e:
+                raise WireError(404, str(e)) from None
+            self._check_dim(model, xq)
+            return self.target.engine.submit(xq, model=model)
+        if name is not None and name != self.default_model:
+            raise WireError(
+                404, f"unknown model {name!r}; this replica serves a single "
+                f"anonymous model ({self.default_model!r})"
+            )
+        try:
+            model = self.target.model
+        except RuntimeError as e:
+            raise WireError(503, str(e)) from None
+        self._check_dim(model, xq)
+        return self.target.submit(xq, model=model)
+
+    @staticmethod
+    def _check_dim(model, xq) -> None:
+        d = model.x.shape[1]
+        if xq.shape[1] != d:
+            raise WireError(
+                400, f"'x' has {xq.shape[1]} features, model expects {d}"
+            )
+
+    def record_status(self, status: int) -> None:
+        with self._lock:
+            self.by_status[status] = self.by_status.get(status, 0) + 1
+
+    # -- endpoint bodies -----------------------------------------------------
+    def healthz(self) -> tuple[int, dict]:
+        models = self._model_names()
+        if self.draining:
+            return 503, {"status": "draining",
+                         "inflight": self.admission.inflight}
+        if not models:
+            return 503, {"status": "no-model"}
+        return 200, {"status": "ok", "version": self.version,
+                     "models": models}
+
+    def stats(self) -> tuple[int, dict]:
+        with self._lock:
+            by_status = {str(k): v for k, v in sorted(self.by_status.items())}
+        return 200, {
+            "engine": self._engine.stats_dict(),
+            "admission": self.admission.as_dict(),
+            "http": {"by_status": by_status},
+            "version": self.version,
+            "models": self._model_names(),
+            "draining": self.draining,
+        }
+
+    def predict(self, payload: dict, arrival: Optional[float] = None
+                ) -> tuple[int, dict, dict]:
+        """Returns (status, body, extra_headers)."""
+        arrival = time.monotonic() if arrival is None else arrival
+        if self.draining:
+            raise WireError(503, "draining")
+        try:
+            xq = np.asarray(payload["x"], dtype=np.float32)
+        except KeyError:
+            raise WireError(400, "missing required field 'x'") from None
+        except (TypeError, ValueError) as e:
+            raise WireError(400, f"field 'x' is not a numeric matrix: {e}") \
+                from None
+        if xq.ndim == 1:
+            xq = xq[None, :]
+        if xq.ndim != 2 or xq.shape[0] == 0 or xq.shape[1] == 0:
+            raise WireError(400, f"'x' must be a non-empty (rows, d) matrix, "
+                                 f"got shape {tuple(xq.shape)}")
+        if not np.all(np.isfinite(xq)):
+            raise WireError(400, "'x' contains non-finite values")
+        deadline_ms = payload.get("deadline_ms")
+        if deadline_ms is not None and (not isinstance(deadline_ms, (int, float))
+                                        or deadline_ms <= 0):
+            raise WireError(400, f"'deadline_ms' must be a positive number, "
+                                 f"got {deadline_ms!r}")
+        priority = Priority.PREDICT
+        if "priority" in payload:
+            try:
+                priority = parse_priority(str(payload["priority"]))
+            except ValueError as e:
+                raise WireError(400, str(e)) from None
+
+        # Version label snapshot. The label is advisory during a swap
+        # window: the poller swaps the model before it bumps
+        # ``self.version``, so a request racing the swap may carry the
+        # neighbouring label. The prediction itself is never torn (it is
+        # computed from one model snapshot); correlate via /healthz when
+        # exactness matters.
+        version = self.version
+        decision = self.admission.admit(
+            rows=xq.shape[0], deadline_ms=deadline_ms, priority=priority
+        )
+        if not decision.admitted:
+            retry = max(1, math.ceil(decision.retry_after_s))
+            return 429, {
+                "error": "overloaded",
+                "reason": decision.reason,
+                "retry_after_s": decision.retry_after_s,
+            }, {"Retry-After": str(retry)}
+
+        with self.admission.track():
+            if deadline_ms is not None:
+                aged_ms = (time.monotonic() - arrival) * 1e3
+                if aged_ms > deadline_ms:
+                    raise WireError(
+                        504, f"deadline exceeded before compute "
+                             f"({aged_ms:.0f}ms > {deadline_ms}ms)"
+                    )
+            name = payload.get("model")
+            pred = self._submit(name, xq)
+            mean = np.asarray(pred.mean)
+            var = np.asarray(pred.var)
+        body = {
+            "mean": [float(v) for v in mean],
+            "var": [float(v) for v in var],
+            "rows": int(xq.shape[0]),
+            "model": name or self.default_model,
+            "version": version,
+            "elapsed_ms": (time.monotonic() - arrival) * 1e3,
+        }
+        if payload.get("samples"):
+            body["samples"] = np.asarray(pred.samples).tolist()
+        return 200, body, {}
+
+    def admin_swap(self, payload: dict) -> tuple[int, dict]:
+        from repro.serve.cluster.store import fetch_servable
+
+        if self.store_dir is None:
+            raise WireError(400, "no artifact store configured on this replica")
+        version = payload.get("version")
+        try:
+            model, version, manifest = fetch_servable(self.store_dir, version)
+        except FileNotFoundError as e:
+            raise WireError(404, str(e)) from None
+        except ValueError as e:  # integrity failure
+            raise WireError(409, str(e)) from None
+        name = manifest.get("name", self.default_model)
+        if isinstance(self.target, MultiModelServer):
+            self.target.engine.warmup(model)
+            if name in self.target.names():
+                self.target.swap(name, model)
+            else:
+                self.target.register(name, model)
+        else:
+            self.target.warmup(model)
+            self.target.swap_model(model)
+        self.version = version
+        return 200, {"swapped": True, "version": version, "model": name}
+
+    def admin_drain(self) -> tuple[int, dict]:
+        self.draining = True
+        return 200, {"draining": True, "inflight": self.admission.inflight}
+
+
+class _Handler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+    frontend: ServeFrontend = None  # set by the server class
+
+    # Silence the default per-request stderr logging (stats cover it).
+    def log_message(self, fmt, *args):  # pragma: no cover - logging
+        pass
+
+    def _reply(self, status: int, body: dict, headers: Optional[dict] = None):
+        data = json.dumps(body).encode()
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(data)))
+        for k, v in (headers or {}).items():
+            self.send_header(k, v)
+        self.end_headers()
+        self.wfile.write(data)
+        self.frontend.record_status(status)
+
+    def _read_json(self) -> dict:
+        length = int(self.headers.get("Content-Length") or 0)
+        raw = self.rfile.read(length) if length else b""
+        if not raw:
+            return {}
+        try:
+            payload = json.loads(raw)
+        except json.JSONDecodeError as e:
+            raise WireError(400, f"invalid JSON body: {e}") from None
+        if not isinstance(payload, dict):
+            raise WireError(400, "JSON body must be an object")
+        return payload
+
+    def do_GET(self):
+        try:
+            if self.path == "/healthz":
+                status, body = self.frontend.healthz()
+            elif self.path == "/stats":
+                status, body = self.frontend.stats()
+            else:
+                status, body = 404, {"error": f"no route {self.path}"}
+            self._reply(status, body)
+        except Exception as e:  # pragma: no cover - defensive
+            self._reply(500, {"error": f"{type(e).__name__}: {e}"})
+
+    def do_POST(self):
+        arrival = time.monotonic()
+        try:
+            payload = self._read_json()
+            if self.path == "/predict":
+                status, body, headers = self.frontend.predict(
+                    payload, arrival=arrival
+                )
+                self._reply(status, body, headers)
+                return
+            if self.path == "/admin/swap":
+                status, body = self.frontend.admin_swap(payload)
+            elif self.path == "/admin/drain":
+                status, body = self.frontend.admin_drain()
+            else:
+                status, body = 404, {"error": f"no route {self.path}"}
+            self._reply(status, body)
+        except WireError as e:
+            self._reply(e.status, {"error": str(e)})
+        except Exception as e:
+            self._reply(500, {"error": f"{type(e).__name__}: {e}"})
+
+
+class GPHTTPServer(ThreadingHTTPServer):
+    """ThreadingHTTPServer bound to one `ServeFrontend`."""
+
+    daemon_threads = True
+    allow_reuse_address = True
+
+    def __init__(self, frontend: ServeFrontend, host: str = "127.0.0.1",
+                 port: int = 0):
+        handler = type("BoundHandler", (_Handler,), {"frontend": frontend})
+        super().__init__((host, port), handler)
+        self.frontend = frontend
+
+    @property
+    def port(self) -> int:
+        return self.server_address[1]
+
+
+def start_http_server(
+    frontend: ServeFrontend, host: str = "127.0.0.1", port: int = 0
+) -> tuple[GPHTTPServer, threading.Thread]:
+    """Bind (port 0 => ephemeral) and serve on a daemon thread."""
+    server = GPHTTPServer(frontend, host, port)
+    thread = threading.Thread(
+        target=server.serve_forever, name="gp-http", daemon=True
+    )
+    thread.start()
+    return server, thread

@@ -80,6 +80,28 @@ class EngineStats:
                 self.coalesced += num_requests
             self.per_bucket[bucket] = self.per_bucket.get(bucket, 0) + 1
 
+    def as_dict(self, num_compiles: Optional[int] = None) -> dict:
+        """JSON-serialisable snapshot — THE stats wire format.
+
+        One shape shared by ``GET /stats``, ``benchmarks/serve_throughput``
+        and ``benchmarks/serve_cluster``; ``padding_waste`` is the fraction
+        of executed rows that were bucketing phantoms, ``num_compiles`` the
+        engine's executable count (None = introspection unavailable, which
+        consumers must NOT read as zero).
+        """
+        with self._lock:
+            executed = self.rows + self.padded_rows
+            return {
+                "requests": self.requests,
+                "batches": self.batches,
+                "rows": self.rows,
+                "padded_rows": self.padded_rows,
+                "padding_waste": (self.padded_rows / executed) if executed else 0.0,
+                "coalesced": self.coalesced,
+                "per_bucket": {str(b): c for b, c in sorted(self.per_bucket.items())},
+                "num_compiles": num_compiles,
+            }
+
 
 class BucketedEngine:
     """Serve `ServableGP` predictions with bucketed shapes and a request queue.
@@ -161,6 +183,10 @@ class BucketedEngine:
             return int(self._predict._cache_size())
         except Exception:  # pragma: no cover - private API moved
             return None
+
+    def stats_dict(self) -> dict:
+        """`EngineStats.as_dict` with this engine's compile count folded in."""
+        return self.stats.as_dict(num_compiles=self.num_compiles())
 
     # -- synchronous serving ------------------------------------------------
     def bucket_for(self, m: int) -> int:

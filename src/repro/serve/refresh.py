@@ -28,7 +28,7 @@ from repro.core.outer import (
     outer_step,
 )
 from repro.serve.artifact import ServableGP, export_servable
-from repro.solvers import HOperator, solve
+from repro.solvers import HOperator, kernel_mvm_tiled, solve
 
 
 def merge_refined_state(
@@ -63,15 +63,25 @@ def merge_refined_state(
 
 
 class RefreshReport(NamedTuple):
-    """What one `refine` cost and achieved."""
+    """What one `refine` cost and achieved.
+
+    ``epochs`` is always in FULL-system epoch units (one epoch = every
+    entry of the n x n H computed once), so block and full refreshes are
+    directly comparable: a block refresh on k new rows charges k/n of an
+    epoch for the cross MVM plus ``block_epochs * (k/n)^2`` for the solve
+    on the k x k sub-system.
+    """
 
     n: int  # training rows after the refresh
     appended: int  # rows appended since the last refine
-    epochs: float  # solver epochs consumed
+    epochs: float  # solver epochs consumed (full-system units)
     iters: int  # inner iterations
     res_y: float  # final mean-system relative residual
     res_z: float  # final probe-average relative residual
     warm: bool  # warm-started from the extended carry?
+    mode: str = "solve"  # solve | step | block
+    block_rows: int = 0  # rows of the block sub-system (mode="block")
+    block_epochs: float = 0.0  # solver epochs in k-system units (mode="block")
 
 
 class OnlineGP:
@@ -128,6 +138,27 @@ class OnlineGP:
         epoch budget the cap). ``mode="step"`` runs one full `outer_step`
         (hyperparameters move too). ``warm=False`` is the cold-start control
         the throughput benchmark compares against.
+
+        ``mode="block"`` is the incremental refresh: the zero-padded old
+        solution already satisfies the old rows to solver tolerance (the
+        warm-start observation of Dong et al., 2025), so the residual of the
+        enlarged system is concentrated on the k appended rows. The solver
+        therefore runs ONLY on the k x k sub-system
+
+            (K(x_new, x_new) + sigma^2 I) dv = b_new - H[new, :] @ v_old,
+
+        and the correction ``dv`` lands on the new carry rows. The old rows'
+        back-coupling ``H11^{-1} K12 dv`` is deliberately left unpaid — that
+        is the whole saving — so the block refresh is exact up to coupling:
+        machine-level parity with the full re-solve when the appended rows
+        are weakly correlated with the bulk (new input region, or k << n),
+        degrading as coupling grows. The report's ``res_y``/``res_z`` are an
+        honest full-system residual estimate (``||K12 dv|| / ||b||``, the
+        norm of the neglected old-row residual): ~solver tolerance in the
+        valid regime, large when a full ``mode="solve"`` is actually needed.
+        ``epochs`` reports full-system equivalents (2k/n for the two cross
+        MVMs + block epochs scaled by (k/n)^2) so the saving is visible in
+        the same units as ``mode="solve"``.
         """
         with self._lock:
             state, x, y, cfg = self.state, self.x, self.y, self.cfg
@@ -143,7 +174,7 @@ class OnlineGP:
                 n=x.shape[0], appended=appended,
                 epochs=float(metrics["epochs"]), iters=int(metrics["iters"]),
                 res_y=float(metrics["res_y"]), res_z=float(metrics["res_z"]),
-                warm=warm,
+                warm=warm, mode=mode,
             )
         elif mode == "solve":
             targets = build_system_targets(state.probes, x, y, state.params)
@@ -157,11 +188,94 @@ class OnlineGP:
             v0 = state.carry_v if warm else None
             ksolve = key if key is not None else jax.random.fold_in(state.key, 13)
             res = solve(op, targets, v0, scfg, key=ksolve)
-            new_state = state._replace(carry_v=res.v)
+            new_state = state._replace(
+                carry_v=res.v,
+                last_res_y=res.res_y.astype(jnp.float32),
+                last_res_z=res.res_z.astype(jnp.float32),
+                last_iters=res.iters,
+                last_epochs=res.epochs.astype(jnp.float32),
+            )
             report = RefreshReport(
                 n=x.shape[0], appended=appended,
                 epochs=float(res.epochs), iters=int(res.iters),
                 res_y=float(res.res_y), res_z=float(res.res_z), warm=warm,
+                mode=mode,
+            )
+        elif mode == "block":
+            if not warm:
+                raise ValueError(
+                    "block refresh refines the warm carry; it has no "
+                    "cold-start variant (use mode='solve', warm=False)"
+                )
+            n, k = x.shape[0], appended
+            if k == 0:
+                return RefreshReport(
+                    n=n, appended=0, epochs=0.0, iters=0,
+                    res_y=float(state.last_res_y),
+                    res_z=float(state.last_res_z), warm=True, mode=mode,
+                )
+            n0 = n - k
+            targets = build_system_targets(state.probes, x, y, state.params)
+            x_new = x[n0:]
+            # Residual restricted to the new rows: one (k x n) cross MVM
+            # against the FULL carry (k/n of an epoch) — the new carry rows
+            # are zero right after extend_state but may be nonzero after a
+            # previous block refine, so no shortcut is taken.
+            kv = kernel_mvm_tiled(
+                x_new, x, state.carry_v, state.params, kind=kind,
+                bm=cfg.bm, bn=cfg.bn,
+            )
+            noise_var = state.params.noise ** 2
+            r_new = targets[n0:] - kv - noise_var * state.carry_v[n0:]
+            # The k x k sub-system is tiny; CG-to-tolerance is the right
+            # tool regardless of which solver fitted the model (AP/SGD
+            # block sizes need not divide k).
+            scfg = replace(cfg.solver, name="cg", kind=kind)
+            if budget_epochs is not None:
+                # budget is in full-system units; charge BOTH cross MVMs
+                # (residual assembly + coupling estimate), convert the
+                # remainder to k-system epochs.
+                block_budget = max(0.0, budget_epochs - 2 * k / n) * (n / k) ** 2
+                scfg = replace(scfg, max_epochs=block_budget)
+            op = HOperator(x=x_new, params=state.params, kind=kind,
+                           backend=cfg.backend, bm=cfg.bm, bn=cfg.bn)
+            res = solve(op, r_new, None, scfg)
+            new_carry = jnp.concatenate(
+                [state.carry_v[:n0], state.carry_v[n0:] + res.v], axis=0
+            )
+            new_state = state._replace(carry_v=new_carry)
+            block_epochs = float(res.epochs)
+            # The unpaid back-coupling K12 @ dv IS the residual the block
+            # update leaves on the old rows — one more (n0 x k) cross MVM
+            # (another k/n of an epoch) turns it into an honest full-system
+            # residual estimate: ~solver tolerance when the new rows are
+            # weakly coupled to the bulk, large when a full re-solve is
+            # actually needed. Operators alert on this.
+            neglected = kernel_mvm_tiled(
+                x[:n0], x_new, res.v, state.params, kind=kind,
+                bm=cfg.bm, bn=cfg.bn,
+            )
+            bscale = jnp.linalg.norm(targets, axis=0) + 1e-10
+            coupling = jnp.linalg.norm(neglected, axis=0) / bscale
+            res_y = float(coupling[0])
+            res_z = float(jnp.mean(coupling[1:])) if coupling.shape[0] > 1 \
+                else res_y
+            epochs_equiv = 2 * k / n + block_epochs * (k / n) ** 2
+            # Fold the coupling residual into the rolling diagnostics so a
+            # later no-append refine (or a checkpoint reader) sees the
+            # TRUE state of the system, not the pre-append residual.
+            new_state = new_state._replace(
+                last_res_y=jnp.float32(res_y),
+                last_res_z=jnp.float32(res_z),
+                last_iters=res.iters,
+                last_epochs=jnp.float32(epochs_equiv),
+            )
+            report = RefreshReport(
+                n=n, appended=appended,
+                epochs=epochs_equiv,
+                iters=int(res.iters),
+                res_y=res_y, res_z=res_z, warm=True,
+                mode=mode, block_rows=k, block_epochs=block_epochs,
             )
         else:
             raise ValueError(f"unknown refine mode {mode!r}")

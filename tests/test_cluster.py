@@ -1,0 +1,500 @@
+"""Cluster serving layer: admission control, versioned artifact store,
+HTTP transport, replica processes. Process-spawning end-to-end tests are
+slow-marked; everything else runs in the fast lane in-process."""
+import json
+import os
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import OuterConfig, init_outer_state, outer_step
+from repro.data.synthetic import make_gp_regression
+from repro.serve import (
+    BucketedEngine,
+    MultiModelServer,
+    export_servable,
+    servable_predict,
+)
+from repro.serve.cluster import (
+    AdmissionController,
+    ArtifactPoller,
+    Priority,
+    ReplicaSupervisor,
+    ServeFrontend,
+    TokenBucket,
+    WireError,
+    fetch_servable,
+    latest_version,
+    list_versions,
+    publish_servable,
+    start_http_server,
+)
+from repro.serve.cluster.replica import _http_json
+from repro.solvers import SolverConfig
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    x, y = make_gp_regression(jax.random.PRNGKey(0), 160, 2, noise=0.2)
+    xq = x[128:]
+    x, y = x[:128], y[:128]
+    cfg = OuterConfig(
+        estimator="pathwise", warm_start=True, num_probes=8, num_rff_pairs=64,
+        solver=SolverConfig(name="cg", max_epochs=200, precond_rank=0),
+        num_steps=2, bm=64, bn=64,
+    )
+    state = init_outer_state(jax.random.PRNGKey(1), cfg, x)
+    for _ in range(cfg.num_steps):
+        state, _ = outer_step(state, x, y, cfg)
+    return {"x": x, "y": y, "xq": xq, "cfg": cfg, "state": state}
+
+
+@pytest.fixture(scope="module")
+def model(fitted):
+    return export_servable(fitted["state"], fitted["x"])
+
+
+# -- admission ---------------------------------------------------------------
+def test_token_bucket_refill_and_retry_hint():
+    tb = TokenBucket(rate=2.0, burst=3.0)
+    t = 100.0
+    for _ in range(3):
+        ok, _ = tb.try_acquire(now=t)
+        assert ok
+    ok, retry = tb.try_acquire(now=t)
+    assert not ok and retry == pytest.approx(0.5)  # 1 token / 2 per s
+    ok, _ = tb.try_acquire(now=t + 0.5)  # refilled exactly one token
+    assert ok
+    with pytest.raises(ValueError):
+        TokenBucket(rate=0.0, burst=1.0)
+
+
+def test_admission_rate_shed_with_retry_after():
+    adm = AdmissionController(buckets=(8, 32), rate_qps=1.0, burst=2.0,
+                              max_inflight=100)
+    t = 50.0
+    assert adm.admit(rows=4, now=t).admitted
+    assert adm.admit(rows=4, now=t).admitted
+    d = adm.admit(rows=4, now=t)
+    assert not d.admitted and d.reason == "rate" and d.retry_after_s > 0
+    # a different bucket class has its own tokens
+    assert adm.admit(rows=20, now=t).admitted
+    assert adm.as_dict()["shed_rate"] == 1
+
+
+def test_admission_inflight_cap_and_release():
+    adm = AdmissionController(max_inflight=2)
+    assert adm.admit().admitted
+    assert adm.admit().admitted
+    d = adm.admit()
+    assert not d.admitted and d.reason == "inflight"
+    adm.release(0.01)
+    assert adm.admit().admitted
+    assert adm.inflight == 2
+
+
+def test_admission_deadline_shed_uses_service_ewma():
+    adm = AdmissionController(max_inflight=100)
+    # Seed the EWMA: one request that took 2s, while another is in flight.
+    assert adm.admit().admitted
+    assert adm.admit().admitted
+    adm.release(2.0)
+    # 1 inflight x ~2s wait >> 100ms deadline => shed before queueing.
+    d = adm.admit(deadline_ms=100)
+    assert not d.admitted and d.reason == "deadline"
+    # A generous deadline is admitted.
+    assert adm.admit(deadline_ms=60_000).admitted
+    assert adm.as_dict()["shed_deadline"] == 1
+
+
+def test_admission_priority_never_sheds_admin():
+    adm = AdmissionController(rate_qps=0.001, burst=1.0, max_inflight=1)
+    assert adm.admit().admitted  # spends the only token, fills the cap
+    assert not adm.admit().admitted
+    for prio in (Priority.REFRESH, Priority.ADMIN):
+        d = adm.admit(priority=prio)
+        assert d.admitted and d.reason == "bypass"
+    assert adm.as_dict()["bypassed"] == 2
+
+
+# -- engine stats wire format ------------------------------------------------
+def test_engine_stats_as_dict_is_json_and_counts_waste(fitted, model):
+    engine = BucketedEngine(model, buckets=(8, 32), bm=64, bn=64)
+    compiles = engine.warmup()
+    engine.submit(fitted["xq"][:5])   # 3 padded rows in the 8 bucket
+    engine.submit(fitted["xq"][:32])  # exact fit
+    d = engine.stats_dict()
+    json.dumps(d)  # must be JSON-serialisable as-is
+    assert d["requests"] == 2 and d["rows"] == 37 and d["padded_rows"] == 3
+    assert d["per_bucket"] == {"8": 1, "32": 1}
+    assert d["padding_waste"] == pytest.approx(3 / 40)
+    assert d["num_compiles"] == compiles
+
+
+# -- artifact store ----------------------------------------------------------
+def test_store_publish_fetch_roundtrip(tmp_path, fitted, model):
+    store = str(tmp_path)
+    assert latest_version(store) is None
+    v1 = publish_servable(store, model, name="pol")
+    assert latest_version(store) == v1 == "v0000001"
+    loaded, version, manifest = fetch_servable(store)
+    assert version == v1 and manifest["name"] == "pol"
+    for a, b in zip(jax.tree.leaves(model), jax.tree.leaves(loaded)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    v2 = publish_servable(store, model._replace(correction=model.correction * 2))
+    assert latest_version(store) == v2 and list_versions(store) == [v1, v2]
+    old, _, _ = fetch_servable(store, version=v1)  # old versions stay readable
+    np.testing.assert_allclose(np.asarray(old.correction),
+                               np.asarray(model.correction), rtol=1e-6)
+
+
+def test_store_verify_detects_corruption(tmp_path, model):
+    store = str(tmp_path)
+    v1 = publish_servable(store, model)
+    payload = os.path.join(store, v1, "step_0.npz")
+    with open(payload, "r+b") as f:
+        f.seek(100)
+        f.write(b"\x00\x01\x02\x03")
+    with pytest.raises(ValueError, match="hash mismatch"):
+        fetch_servable(store)
+
+
+def test_store_poller_swaps_without_retrace(tmp_path, fitted, model):
+    store = str(tmp_path)
+    publish_servable(store, model)
+    engine = BucketedEngine(None, buckets=(8, 32), bm=64, bn=64)
+    poller = ArtifactPoller(store, engine, interval_s=60.0)
+    assert poller.poll_once()
+    compiles = engine.num_compiles()
+    before = engine.submit(fitted["xq"][:5])
+    publish_servable(store, model._replace(correction=model.correction * 2))
+    assert poller.poll_once()
+    after = engine.submit(fitted["xq"][:5])
+    # same static shapes + kernel => warm executables reused, no retrace
+    assert engine.num_compiles() == compiles
+    np.testing.assert_allclose(np.asarray(after.mean),
+                               np.asarray(before.mean) * 2, rtol=1e-5)
+    assert not poller.poll_once()  # no new version => no swap
+    assert poller.swaps == 2
+
+
+# -- transport (in-process server) ------------------------------------------
+@pytest.fixture()
+def http_server(tmp_path, model):
+    store = str(tmp_path / "store")
+    publish_servable(store, model)
+    server = MultiModelServer(buckets=(8, 32), bm=64, bn=64)
+    adm = AdmissionController(buckets=(8, 32), max_inflight=64)
+    frontend = ServeFrontend(server, adm, store_dir=store)
+    poller = ArtifactPoller(store, server, interval_s=60.0,
+                            on_swap=lambda v, m: setattr(frontend, "version", v))
+    assert poller.poll_once()
+    frontend.version = poller.version
+    httpd, _ = start_http_server(frontend)
+    yield {"url": f"http://127.0.0.1:{httpd.port}", "frontend": frontend,
+           "store": store, "server": server}
+    httpd.shutdown()
+
+
+def test_http_predict_parity_and_health(http_server, fitted, model):
+    url = http_server["url"]
+    status, body = _http_json(url + "/healthz")
+    assert status == 200 and body["status"] == "ok"
+    assert body["version"] == "v0000001"
+    xq = fitted["xq"][:7]
+    status, body = _http_json(url + "/predict",
+                              {"x": np.asarray(xq).tolist(), "samples": True})
+    assert status == 200 and body["rows"] == 7
+    want = servable_predict(model, xq, bm=64, bn=64)
+    np.testing.assert_allclose(body["mean"], np.asarray(want.mean),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(body["var"], np.asarray(want.var),
+                               rtol=1e-5, atol=1e-6)
+    assert np.asarray(body["samples"]).shape == want.samples.shape
+
+
+def test_http_wire_errors(http_server):
+    url = http_server["url"]
+    for payload, match in [
+        ({}, "missing required field"),
+        ({"x": "nope"}, "not a numeric matrix"),
+        ({"x": [[1.0, float("nan")]]}, "non-finite"),
+        ({"x": [[0.1, 0.2]], "deadline_ms": -5}, "positive"),
+        ({"x": [[0.1, 0.2]], "priority": "bogus"}, "unknown priority"),
+    ]:
+        status, body = _http_json(url + "/predict", payload)
+        assert status == 400 and match in body["error"], (payload, body)
+    status, body = _http_json(url + "/predict",
+                              {"x": [[0.1, 0.2]], "model": "nope"})
+    assert status == 404
+    status, body = _http_json(url + "/predict", {"x": [[0.1, 0.2, 0.3]]})
+    assert status == 400 and "features" in body["error"]
+    status, _ = _http_json(url + "/nope")
+    assert status == 404
+
+
+def test_predict_deadline_expired_is_504(http_server, fitted):
+    frontend = http_server["frontend"]
+    with pytest.raises(WireError) as e:
+        frontend.predict({"x": np.asarray(fitted["xq"][:2]).tolist(),
+                          "deadline_ms": 50},
+                         arrival=time.monotonic() - 1.0)
+    assert e.value.status == 504
+    # the slot must have been released despite the 504
+    assert frontend.admission.inflight == 0
+
+
+def test_http_flood_sheds_429_with_retry_after(tmp_path, model):
+    store = str(tmp_path / "store")
+    publish_servable(store, model)
+    engine = BucketedEngine(model, buckets=(8,), bm=64, bn=64)
+    adm = AdmissionController(buckets=(8,), rate_qps=1.0, burst=2.0)
+    frontend = ServeFrontend(engine, adm, store_dir=store)
+    httpd, _ = start_http_server(frontend)
+    try:
+        url = f"http://127.0.0.1:{httpd.port}"
+        xq = [[0.1, 0.2]]
+        codes = []
+        retry_after = None
+        for _ in range(5):
+            req = urllib.request.Request(
+                url + "/predict", data=json.dumps({"x": xq}).encode(),
+                headers={"Content-Type": "application/json"})
+            try:
+                with urllib.request.urlopen(req, timeout=30) as resp:
+                    codes.append(resp.status)
+            except urllib.error.HTTPError as e:
+                codes.append(e.code)
+                if e.code == 429:
+                    retry_after = e.headers.get("Retry-After")
+        assert codes.count(429) >= 2 and codes.count(200) >= 1, codes
+        assert retry_after is not None and int(retry_after) >= 1
+        status, body = _http_json(url + "/stats")
+        assert status == 200
+        assert body["admission"]["shed_rate"] == codes.count(429)
+        assert body["engine"]["requests"] == codes.count(200)
+        # admin traffic is never rate-shed
+        status, body = _http_json(
+            url + "/predict", {"x": xq, "priority": "admin"})
+        assert status == 200
+    finally:
+        httpd.shutdown()
+
+
+def test_http_admin_swap_and_drain(http_server, fitted, model):
+    url = http_server["url"]
+    publish_servable(http_server["store"],
+                     model._replace(correction=model.correction * 2))
+    status, body = _http_json(url + "/admin/swap", {})
+    assert status == 200 and body["version"] == "v0000002"
+    status, body = _http_json(url + "/healthz")
+    assert body["version"] == "v0000002"
+    xq = fitted["xq"][:4]
+    status, body = _http_json(url + "/predict", {"x": np.asarray(xq).tolist()})
+    want = servable_predict(model, xq, bm=64, bn=64)
+    np.testing.assert_allclose(body["mean"], 2 * np.asarray(want.mean),
+                               rtol=1e-5, atol=1e-6)
+    # drain: refuses new predictions, healthz flips to 503
+    status, body = _http_json(url + "/admin/drain", {})
+    assert status == 200 and body["draining"]
+    status, _ = _http_json(url + "/predict", {"x": np.asarray(xq).tolist()})
+    assert status == 503
+    status, _ = _http_json(url + "/healthz")
+    assert status == 503
+
+
+# -- concurrent swap vs in-flight traffic ------------------------------------
+def test_concurrent_swap_during_enqueue(fitted, model):
+    """No request may see a half-swapped model: every response must equal
+    the prediction of exactly one published model version, and same-shape
+    swaps must not retrace."""
+    model2 = model._replace(correction=model.correction * 2)
+    engine = BucketedEngine(model, buckets=(8, 32), bm=64, bn=64)
+    compiles = engine.warmup()
+    xq = fitted["xq"][:4]
+    want1 = np.asarray(servable_predict(model, xq, bm=64, bn=64).mean)
+    want2 = np.asarray(servable_predict(model2, xq, bm=64, bn=64).mean)
+
+    stop = threading.Event()
+
+    def swapper():
+        flip = False
+        while not stop.is_set():
+            engine.swap_model(model2 if flip else model)
+            flip = not flip
+
+    th = threading.Thread(target=swapper, daemon=True)
+    th.start()
+    try:
+        futs = [engine.enqueue(xq) for _ in range(40)]
+        results = [np.asarray(f.result(timeout=60).mean) for f in futs]
+    finally:
+        stop.set()
+        th.join(timeout=10)
+        engine.stop()
+    for got in results:
+        match1 = np.allclose(got, want1, rtol=1e-5, atol=1e-6)
+        match2 = np.allclose(got, want2, rtol=1e-5, atol=1e-6)
+        assert match1 or match2, "response matches neither model version"
+    assert engine.num_compiles() == compiles  # same static shapes: no retrace
+
+
+# -- cross-process distribution ---------------------------------------------
+@pytest.mark.slow
+def test_store_publish_poll_swap_across_processes(tmp_path, fitted, model):
+    """publish (this process) -> poll + swap (worker process) round-trip."""
+    store = str(tmp_path / "store")
+    publish_servable(store, model)
+    sup = ReplicaSupervisor(store, num_replicas=1, buckets=(8, 32),
+                            bm=64, bn=64, poll_interval_s=0.2)
+    try:
+        (url,) = sup.start(timeout_s=180)
+        xq = fitted["xq"][:5]
+        status, body = _http_json(url + "/predict",
+                                  {"x": np.asarray(xq).tolist()})
+        assert status == 200 and body["version"] == "v0000001"
+        want = np.asarray(servable_predict(model, xq, bm=64, bn=64).mean)
+        np.testing.assert_allclose(body["mean"], want, rtol=1e-4, atol=1e-5)
+
+        v2 = publish_servable(store,
+                              model._replace(correction=model.correction * 2))
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            status, body = _http_json(url + "/healthz")
+            if body.get("version") == v2:
+                break
+            time.sleep(0.2)
+        assert body.get("version") == v2, "worker never picked up v2"
+        status, body = _http_json(url + "/predict",
+                                  {"x": np.asarray(xq).tolist()})
+        np.testing.assert_allclose(body["mean"], 2 * want, rtol=1e-4,
+                                   atol=1e-5)
+
+        # supervision: kill the worker; check() must respawn it and the
+        # replacement must come up serving the CURRENT version.
+        sup._procs[0].kill()
+        sup._procs[0].join(timeout=30)
+        assert sup.check() == 1
+        deadline = time.monotonic() + 120
+        healthy = False
+        while time.monotonic() < deadline and not healthy:
+            try:
+                with open(sup._port_file(0)) as f:
+                    sup.ports[0] = int(f.read().strip())
+                status, body = _http_json(sup.endpoint(0) + "/healthz",
+                                          timeout=2.0)
+                healthy = status == 200 and body.get("version") == v2
+            except (FileNotFoundError, ValueError, OSError):
+                pass
+            time.sleep(0.3)
+        assert healthy, "respawned replica never became healthy on v2"
+    finally:
+        sup.stop()
+
+
+@pytest.mark.slow
+def test_cluster_two_replicas_swap_and_overload(tmp_path, fitted, model):
+    """The acceptance scenario: two replicas serve one versioned artifact;
+    a publish propagates to both without dropping in-flight requests;
+    overload sheds 429 while admitted requests stay correct."""
+    store = str(tmp_path / "store")
+    publish_servable(store, model)
+    model2 = model._replace(correction=model.correction * 2)
+    xq = fitted["xq"][:4]
+    want1 = np.asarray(servable_predict(model, xq, bm=64, bn=64).mean)
+    want2 = np.asarray(servable_predict(model2, xq, bm=64, bn=64).mean)
+
+    sup = ReplicaSupervisor(store, num_replicas=2, buckets=(8, 32),
+                            bm=64, bn=64, poll_interval_s=0.2)
+    try:
+        urls = sup.start(timeout_s=240)
+
+        # Drive traffic from both endpoints while v2 is published mid-flight.
+        errors, bad = [], []
+        statuses = []
+
+        def client(url, n):
+            for i in range(n):
+                try:
+                    status, body = _http_json(
+                        url + "/predict", {"x": np.asarray(xq).tolist()},
+                        timeout=30)
+                    statuses.append(status)
+                    if status == 200:
+                        got = np.asarray(body["mean"])
+                        if not (np.allclose(got, want1, rtol=1e-4, atol=1e-5)
+                                or np.allclose(got, want2, rtol=1e-4,
+                                               atol=1e-5)):
+                            bad.append(got)
+                except Exception as e:  # pragma: no cover - diagnostics
+                    errors.append(repr(e))
+
+        threads = [threading.Thread(target=client, args=(u, 15))
+                   for u in urls for _ in range(2)]
+        for t in threads:
+            t.start()
+        v2 = publish_servable(store, model2)
+        for t in threads:
+            t.join(timeout=120)
+        assert not errors, errors[:3]
+        assert not bad, "a response matched neither artifact version"
+        assert statuses.count(200) == len(statuses), statuses
+
+        # both replicas converge on v2
+        deadline = time.monotonic() + 60
+        seen = set()
+        while len(seen) < 2 and time.monotonic() < deadline:
+            for u in urls:
+                _, body = _http_json(u + "/healthz")
+                if body.get("version") == v2:
+                    seen.add(u)
+            time.sleep(0.2)
+        assert len(seen) == 2, "v2 did not propagate to every replica"
+
+        # overload: hammer replica 0 with impossible deadlines while
+        # background traffic keeps its queue non-empty — admission must
+        # shed (429 + Retry-After / 504 if admitted but aged out) instead
+        # of parking doomed work, and admitted requests stay correct.
+        stop_bg = threading.Event()
+
+        def background():
+            while not stop_bg.is_set():
+                try:
+                    _http_json(urls[0] + "/predict",
+                               {"x": np.asarray(xq).tolist()}, timeout=30)
+                except OSError:
+                    pass
+
+        flood_codes = []
+
+        def flooder():
+            for _ in range(20):
+                try:
+                    s, _ = _http_json(
+                        urls[0] + "/predict",
+                        {"x": np.asarray(xq).tolist(), "deadline_ms": 1},
+                        timeout=30)
+                    flood_codes.append(s)
+                except OSError:
+                    pass
+
+        bg = [threading.Thread(target=background) for _ in range(2)]
+        fl = [threading.Thread(target=flooder) for _ in range(6)]
+        for t in bg + fl:
+            t.start()
+        for t in fl:
+            t.join(timeout=120)
+        stop_bg.set()
+        for t in bg:
+            t.join(timeout=30)
+        assert set(flood_codes) <= {200, 429, 504}, sorted(set(flood_codes))
+        assert 429 in flood_codes, "overload never shed"
+        _, stats = _http_json(urls[0] + "/stats")
+        assert stats["admission"]["shed_deadline"] >= flood_codes.count(429)
+    finally:
+        sup.stop()

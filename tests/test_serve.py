@@ -243,6 +243,91 @@ def test_multimodel_registry_routes_and_swaps(fitted):
         server.submit("nope", fitted["xq"][:8])
 
 
+@pytest.fixture(scope="module")
+def block_fit():
+    """Tight-tolerance fit whose carry is synced to the final
+    hyperparameters (an outer step leaves the carry one Adam update
+    behind; the sync isolates the block-vs-full comparison)."""
+    xall, yall = make_gp_regression(jax.random.PRNGKey(0), 208, 2, noise=0.2)
+    x, y = xall[:128], yall[:128]
+    cfg = OuterConfig(
+        estimator="pathwise", warm_start=True, num_probes=8, num_rff_pairs=64,
+        solver=SolverConfig(name="cg", max_epochs=400, precond_rank=0,
+                            tolerance=1e-5),
+        num_steps=3, bm=64, bn=64,
+    )
+    state = init_outer_state(jax.random.PRNGKey(1), cfg, x)
+    for _ in range(cfg.num_steps):
+        state, _ = outer_step(state, x, y, cfg)
+    sync = OnlineGP(x, y, state, cfg)
+    sync.refine(mode="solve")
+    return {"x": x, "y": y, "xq": xall[144:], "cfg": cfg,
+            "state": sync.state, "overlap": (xall[128:144], yall[128:144])}
+
+
+def test_block_refresh_matches_full_resolve_weak_coupling(block_fit):
+    """Acceptance: block refine matches the full re-solve within tolerance
+    while its solver only runs on the new-row block (epoch accounting).
+
+    Weak coupling (an appended cluster ~10 lengthscales away) is the block
+    mode's validity regime: there the neglected back-coupling K12 dv is
+    ~zero and the parity is at solver-tolerance level."""
+    k = 16
+    x_new = block_fit["x"][:k] + 8.0
+    y_new = jax.random.normal(jax.random.PRNGKey(3), (k,)) * 0.5
+    online = {}
+    for mode in ("block", "solve"):
+        o = OnlineGP(block_fit["x"], block_fit["y"], block_fit["state"],
+                     block_fit["cfg"])
+        o.append(x_new, y_new)
+        online[mode] = (o, o.refine(mode=mode))
+    rb, rf = online["block"][1], online["solve"][1]
+    assert rb.mode == "block" and rb.block_rows == k
+    # epoch accounting: the block path pays 2k/n cross-MVM epochs plus the
+    # k-system solve scaled by (k/n)^2 — a tiny fraction of the full solve.
+    assert rb.epochs < 0.1 * rf.epochs, (rb.epochs, rf.epochs)
+    assert rb.block_epochs > 0  # the k x k solver actually ran
+    # the neglected-coupling residual is at solver-tolerance scale here
+    assert rb.res_y < 1e-3, rb.res_y
+    # parity on predictions, old region and new region
+    for xq in (block_fit["xq"], x_new + 0.1):
+        pb = servable_predict(export_servable(online["block"][0].state,
+                                              online["block"][0].x),
+                              xq, bm=64, bn=64)
+        pf = servable_predict(export_servable(online["solve"][0].state,
+                                              online["solve"][0].x),
+                              xq, bm=64, bn=64)
+        scale = float(jnp.std(pf.mean)) + 1e-6
+        assert float(jnp.max(jnp.abs(pb.mean - pf.mean))) / scale < 0.01
+        assert float(jnp.max(jnp.abs(pb.var - pf.var))) < 0.01
+
+
+def test_block_refresh_coupling_residual_flags_overlap(block_fit):
+    """Strongly coupled appends (same region as the bulk) are OUTSIDE the
+    block mode's validity regime; the reported residual must say so loudly
+    instead of pretending the system is solved."""
+    x_new, y_new = block_fit["overlap"]
+    o = OnlineGP(block_fit["x"], block_fit["y"], block_fit["state"],
+                 block_fit["cfg"])
+    o.append(x_new, y_new)
+    report = o.refine(mode="block")
+    assert report.res_y > 0.01, (
+        f"overlapping appends must surface a large coupling residual, "
+        f"got {report.res_y}"
+    )
+
+
+def test_block_refresh_requires_warm_and_noop_without_appends(block_fit):
+    o = OnlineGP(block_fit["x"], block_fit["y"], block_fit["state"],
+                 block_fit["cfg"])
+    with pytest.raises(ValueError, match="warm"):
+        o.refine(mode="block", warm=False)
+    report = o.refine(mode="block")  # nothing appended => no-op
+    assert report.appended == 0 and report.epochs == 0.0
+    np.testing.assert_allclose(np.asarray(o.state.carry_v),
+                               np.asarray(block_fit["state"].carry_v))
+
+
 def test_single_sample_variance_raises(fitted):
     """Regression: s=1 used to silently return a zero-information variance
     through jnp.maximum(s - 1, 1); it must fail loudly now."""
