@@ -29,6 +29,7 @@ MODULES = [
     "fig9_budget",
     "kernel_microbench",
     "batched_sweep",
+    "sharded_sweep",
     "serve_cluster",
 ]
 

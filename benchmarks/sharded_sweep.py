@@ -1,0 +1,171 @@
+"""Solver-config-grid sweeps: traced numerics vs per-cell compiles, and
+lane sharding across 1 vs N virtual devices.
+
+Two A/Bs over the SAME seed x tolerance x lr grid (8 cells, one kernel,
+SGD — a sweep over the paper's early-stopping/budget knobs):
+
+  1. grouped-traced-numerics (one process, ONE executable for the whole
+     numeric grid: tolerance/lr ride as a lane-stacked SolverNumerics) vs
+     ``--isolate`` (one subprocess AND one executable per cell — the
+     compile cost the traced path amortises away). Asserts the grouped
+     path compiled exactly once and is >= 2x faster end-to-end.
+  2. the same grouped sweep with ``--shard-lanes`` on 1 vs 8 virtual host
+     devices (``XLA_FLAGS=--xla_force_host_platform_device_count``), with
+     cell-level parity asserted across the two runs. Virtual CPU devices
+     share the same physical cores, so the wall-clock ratio is REPORTED
+     but not asserted — on real accelerators each device is real silicon
+     and this ratio is the point of the lane mesh.
+
+Each timed run is a fresh top-level process so interpreter + jax startup
+is charged where it is actually paid. Writes BENCH_sharded_sweep.json.
+
+    PYTHONPATH=src python benchmarks/sharded_sweep.py [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+KERNEL = "matern32"
+SEEDS = 2
+TOLS = "0.05,0.01"
+LRS = "0.5,1.0"  # x 2 seeds = 8 lanes, one static group
+MIN_SPEEDUP = 2.0
+SHARD_DEVICES = 8
+
+
+def _run_sweep(out_dir: str, max_n: int, steps: int, isolate: bool = False,
+               shard: bool = False, devices: int = 0) -> float:
+    cmd = [
+        sys.executable, "-m", "repro.launch.batch",
+        "--out", out_dir, "--dataset", "pol", "--max-n", str(max_n),
+        "--kernels", KERNEL, "--seeds", str(SEEDS), "--steps", str(steps),
+        "--smoke", "--solver", "sgd", "--tolerances", TOLS,
+        "--sgd-lrs", LRS,
+    ]
+    if isolate:
+        cmd.append("--isolate")
+    if shard:
+        cmd.append("--shard-lanes")
+    src = os.path.join(REPO, "src")
+    inherited = os.environ.get("PYTHONPATH")
+    env = {**os.environ, "PYTHONPATH":
+           src + (os.pathsep + inherited if inherited else "")}
+    if devices:
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={devices}"
+        ).strip()
+    t0 = time.perf_counter()
+    r = subprocess.run(cmd, capture_output=True, text=True, cwd=REPO,
+                       env=env, timeout=3600)
+    dt = time.perf_counter() - t0
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"sweep failed ({cmd}):\n{(r.stderr or r.stdout)[-3000:]}"
+        )
+    return dt
+
+
+def _cells(out_dir: str) -> dict:
+    cells = {}
+    for name in os.listdir(out_dir):
+        if name.startswith("_"):
+            continue
+        with open(os.path.join(out_dir, name)) as f:
+            cells[name] = json.load(f)
+    return cells
+
+
+def csv_line(name: str, value: float, derived: str):
+    print(f"{name},{value:.1f},{derived}")
+
+
+def main(small: bool = True, out_dir: str = "artifacts/bench"):
+    max_n, steps = (256, 3) if small else (512, 5)
+    with tempfile.TemporaryDirectory() as d_grp, \
+            tempfile.TemporaryDirectory() as d_iso, \
+            tempfile.TemporaryDirectory() as d_s1, \
+            tempfile.TemporaryDirectory() as d_s8:
+        t_grouped = _run_sweep(d_grp, max_n, steps)
+        t_isolated = _run_sweep(d_iso, max_n, steps, isolate=True)
+        with open(os.path.join(d_grp, "_sweep_status.json")) as f:
+            status = json.load(f)
+
+        t_shard1 = _run_sweep(d_s1, max_n, steps, shard=True, devices=1)
+        t_shard8 = _run_sweep(d_s8, max_n, steps, shard=True,
+                              devices=SHARD_DEVICES)
+        with open(os.path.join(d_s8, "_sweep_status.json")) as f:
+            status8 = json.load(f)
+        cells1, cells8 = _cells(d_s1), _cells(d_s8)
+
+    # cell-level parity between the 1-device and 8-device sharded runs
+    assert sorted(cells1) == sorted(cells8), (sorted(cells1), sorted(cells8))
+    max_dev = 0.0
+    for name, rec in cells1.items():
+        a = rec["final_hypers"]
+        b = cells8[name]["final_hypers"]
+        denom = max(max(abs(v) for v in a), 1e-6)
+        max_dev = max(max_dev, max(abs(p - q) for p, q in zip(a, b)) / denom)
+    assert max_dev < 1e-3, f"1-vs-8-device hypers deviate: {max_dev}"
+
+    grid_speedup = t_isolated / t_grouped
+    shard_speedup = t_shard1 / t_shard8
+    report = {
+        "bench": "sharded_sweep",
+        "grid": {"kernel": KERNEL, "seeds": SEEDS,
+                 "tolerances": TOLS.split(","), "lrs": LRS.split(","),
+                 "max_n": max_n, "steps": steps},
+        "lanes": status["cells"],
+        "groups": status["groups"],
+        "num_compiles": status["num_compiles"],
+        "wall_grouped_s": t_grouped,
+        "wall_isolated_s": t_isolated,
+        "grid_speedup": grid_speedup,
+        "wall_shard1_s": t_shard1,
+        "wall_shard8_s": t_shard8,
+        "shard_devices": status8["shard_devices"],
+        "shard_speedup": shard_speedup,
+        "shard_parity_max_rel_dev": max_dev,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "BENCH_sharded_sweep.json"), "w") as f:
+        json.dump(report, f, indent=2)
+
+    csv_line("sharded_sweep_grouped_numerics", t_grouped * 1e6,
+             f"lanes={status['cells']} groups={status['groups']} "
+             f"compiles={status['num_compiles']}")
+    csv_line("sharded_sweep_per_cell_compiles", t_isolated * 1e6,
+             f"cells={status['cells']}")
+    csv_line("sharded_sweep_grid_speedup", grid_speedup,
+             "x (per-cell / traced-numerics)")
+    csv_line("sharded_sweep_1_device", t_shard1 * 1e6, "sharded, 1 device")
+    csv_line("sharded_sweep_8_devices", t_shard8 * 1e6,
+             f"sharded, {SHARD_DEVICES} virtual devices "
+             f"(parity {max_dev:.1e})")
+    csv_line("sharded_sweep_device_speedup", shard_speedup,
+             "x (1 / 8 virtual CPU devices; informational)")
+
+    assert status["cells"] == 2 * SEEDS * 2, status
+    assert status["num_compiles"] == status["groups"] == 1, status
+    assert status8["shard_devices"] == SHARD_DEVICES, status8
+    assert grid_speedup >= MIN_SPEEDUP, (
+        f"traced-numerics sweep only {grid_speedup:.2f}x faster than "
+        f"per-cell compiles (need >= {MIN_SPEEDUP}x): "
+        f"grouped={t_grouped:.1f}s isolated={t_isolated:.1f}s"
+    )
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default="artifacts/bench")
+    args = ap.parse_args()
+    main(small=not args.full, out_dir=args.out)

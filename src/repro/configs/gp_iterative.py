@@ -33,8 +33,18 @@ CONFIG = GPArchConfig()
 
 SMOKE = GPArchConfig(num_probes=8, num_rff_pairs=64, solver_epochs=5)
 
+
+def _sweep_entry(kind: str) -> GPArchConfig:
+    # Per-kernel RFF feature counts (gp.rff.DEFAULT_NUM_PAIRS): matern12's
+    # Cauchy-tailed spectrum needs 4x the pairs of the light-tailed kernels
+    # for the same covariance error, and the sweep is where that matters.
+    from repro.gp.rff import default_num_pairs
+
+    return GPArchConfig(name=f"gp-iterative-{kind}", kind=kind,
+                        num_rff_pairs=default_num_pairs(kind))
+
+
 # One sweep entry per registered kernel — the multi-kernel scenario grid.
 KERNEL_SWEEP = tuple(
-    GPArchConfig(name=f"gp-iterative-{k}", kind=k)
-    for k in ("matern12", "matern32", "matern52", "rbf")
+    _sweep_entry(k) for k in ("matern12", "matern32", "matern52", "rbf")
 )

@@ -34,7 +34,13 @@ from repro.distributed.checkpoint import (
     save_checkpoint,
 )
 from repro.gp.hyperparams import HyperParams
-from repro.solvers import HOperator, SolverConfig, solve
+from repro.solvers import (
+    HOperator,
+    SolverConfig,
+    SolverNumerics,
+    broadcast_numerics,
+    solve,
+)
 from repro.train.adam import AdamConfig, adam_init, adam_update
 
 SGD_LR_GRID = [5.0, 10.0, 20.0, 30.0, 50.0, 60.0, 70.0, 80.0, 90.0, 100.0]
@@ -78,7 +84,12 @@ def pick_sgd_learning_rate(
     """Paper protocol: largest grid lr whose first-step solve does not
     diverge; ``halve=True`` returns half of it (large-dataset rule).
     "Diverged" means ``res_y + res_z`` is non-finite or exceeds
-    ``divergence_threshold`` (see :data:`SGD_DIVERGENCE_THRESHOLD`)."""
+    ``divergence_threshold`` (see :data:`SGD_DIVERGENCE_THRESHOLD`),
+    evaluated on the FINAL probe residual (paper protocol) — the threshold
+    is deliberately NOT baked into the probe solver config, because
+    freezing at the first crossing would reject learning rates whose noisy
+    early residual estimate transiently overshoots but recovers within the
+    probe budget."""
     grid = sorted(grid or SGD_LR_GRID)
     n, d = x.shape
     kind = effective_kind(cfg, params)
@@ -91,8 +102,11 @@ def pick_sgd_learning_rate(
                    bm=cfg.bm, bn=cfg.bn)
     best = grid[0]
     for lr in grid:
+        # Pin the probe's divergence freeze OFF even if the caller's config
+        # sets one: the decision must read the FINAL residual (see above).
         scfg = replace(cfg.solver, name="sgd", learning_rate=lr,
-                       max_epochs=probe_epochs, kind=kind)
+                       max_epochs=probe_epochs, kind=kind,
+                       divergence_threshold=float("inf"))
         res = solve(op, targets, None, scfg, key=key)
         r = float(res.res_y) + float(res.res_z)
         if np.isfinite(r) and r < divergence_threshold:
@@ -213,6 +227,7 @@ def fit(
     resume: bool = True,
     verbose: bool = False,
     steps_per_round: int = 8,
+    numerics: Optional[SolverNumerics] = None,
 ) -> FitResult:
     """Run ``cfg.num_steps`` outer MLL steps with optional eval/checkpointing.
 
@@ -234,6 +249,11 @@ def fit(
     Restart semantics: if ``ckpt_dir`` holds a checkpoint and ``resume``,
     training continues from it — including warm-start carry and probe draws,
     so solver progress survives preemption (DESIGN.md §6).
+
+    ``numerics`` (a scalar-leaf :class:`SolverNumerics`) overrides the
+    numeric solver settings as TRACED values: runs differing only in
+    tolerance/budget/lr share one executable (same maths as baking them
+    into ``cfg.solver``).
     """
     key = key if key is not None else jax.random.PRNGKey(0)
     state = init_outer_state(key, cfg, x, init_params=init_params)
@@ -251,14 +271,14 @@ def fit(
                         eval_every if x_test is not None else 0,
                         ckpt_every if ckpt_dir else 0)
         ts = time.perf_counter()
-        state, metrics = outer_scan(state, x, y, cfg, k)
+        state, metrics = outer_scan(state, x, y, cfg, k, numerics=numerics)
         jax.block_until_ready(state.carry_v)
         dt = time.perf_counter() - ts
         solver_time += _append_round(history, metrics, dt, k)
         step += k
 
         if eval_every and x_test is not None and step % eval_every == 0:
-            m = evaluate(x, state, cfg, x_test, y_test)
+            m = evaluate(x, state, cfg, x_test, y_test, numerics=numerics)
             history["eval_step"].append(step)
             history["eval_rmse"].append(m["rmse"])
             history["eval_llh"].append(m["llh"])
@@ -294,17 +314,29 @@ def fit_batch(
     y_test: Optional[jax.Array] = None,
     verbose: bool = False,
     steps_per_round: int = 0,
+    numerics: Optional[SolverNumerics] = None,
+    mesh=None,
 ) -> list[FitResult]:
     """Fit B scenario lanes sharing one dataset and static config in ONE
     compiled program (one executable, vmap over lanes, scan over steps).
 
-    Lanes differ in seed (``keys``: (B, 2) or a list of PRNG keys) and
-    optionally in initial hyperparameters (``init_params`` lane-stacked);
-    everything static — kernel kind, solver name, shapes, numeric solver
-    settings — is shared, which is exactly the one-executable-per-group
-    contract ``launch.batch`` partitions sweeps by. Lane ``l`` advances as
-    ``fit(x, y, cfg, key=keys[l], ...)`` would (solver freeze masks), so
-    results are per-cell comparable with single fits.
+    Lanes differ in seed (``keys``: (B, 2) or a list of PRNG keys),
+    optionally in initial hyperparameters (``init_params`` lane-stacked),
+    and optionally in NUMERIC solver settings (``numerics`` lane-stacked:
+    per-lane tolerance/budget/lr ride as traced values, so a solver-config
+    grid is lanes of this one program too). Everything static — kernel
+    kind, solver name, shapes — is shared, which is exactly the
+    one-executable-per-group contract ``launch.batch`` partitions sweeps
+    by. Lane ``l`` advances as ``fit(x, y, cfg, key=keys[l], ...)`` would
+    (solver freeze masks), so results are per-cell comparable with single
+    fits.
+
+    ``mesh`` (a 1-D lane mesh, see ``repro.launch.mesh.make_lane_mesh``)
+    shards the lane axis across devices: lane-stacked state/numerics are
+    placed with ``NamedSharding`` over the mesh's axis, the dataset is
+    replicated, and the SAME ``outer_scan`` program runs data-parallel over
+    lanes (B must be a multiple of the device count). Per-lane results are
+    unchanged up to fp32 accumulation order.
 
     ``steps_per_round <= 0`` (default) scans all steps in one dispatch.
     Checkpointing is not supported here; per-lane eval runs once at the end
@@ -316,6 +348,24 @@ def fit_batch(
     lanes = keys.shape[0]
     states = init_outer_state_lanes(keys, cfg, x, init_params=init_params)
     assert num_lanes(states) == lanes
+    if numerics is not None:
+        numerics = broadcast_numerics(numerics, lanes)
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        ndev = mesh.devices.size
+        if lanes % ndev != 0:
+            raise ValueError(
+                f"lanes={lanes} must be a multiple of the lane-mesh device "
+                f"count {ndev} (pad the grid or drop --shard-lanes)"
+            )
+        lane_sharding = NamedSharding(mesh, PartitionSpec(mesh.axis_names[0]))
+        replicated = NamedSharding(mesh, PartitionSpec())
+        states = jax.device_put(states, lane_sharding)
+        x = jax.device_put(x, replicated)
+        y = jax.device_put(y, replicated)
+        if numerics is not None:
+            numerics = jax.device_put(numerics, lane_sharding)
 
     histories = [_empty_history() for _ in range(lanes)]
     t0 = time.perf_counter()
@@ -325,7 +375,8 @@ def fit_batch(
     while step < cfg.num_steps:
         k = _round_size(step, cfg.num_steps, steps_per_round)
         ts = time.perf_counter()
-        states, metrics = outer_scan(states, x, y, cfg, k, lanes=True)
+        states, metrics = outer_scan(states, x, y, cfg, k, lanes=True,
+                                     numerics=numerics)
         jax.block_until_ready(states.carry_v)
         dt = time.perf_counter() - ts
         # One device->host transfer per metric, not one per metric per lane.
@@ -344,7 +395,9 @@ def fit_batch(
         lane_state = unstack_state(states, lane)
         hist = histories[lane]
         if x_test is not None:
-            m = evaluate(x, lane_state, cfg, x_test, y_test)
+            lane_num = (None if numerics is None
+                        else jax.tree.map(lambda v: v[lane], numerics))
+            m = evaluate(x, lane_state, cfg, x_test, y_test, numerics=lane_num)
             hist["eval_step"].append(cfg.num_steps)
             hist["eval_rmse"].append(m["rmse"])
             hist["eval_llh"].append(m["llh"])
@@ -363,6 +416,7 @@ def evaluate(
     cfg: OuterConfig,
     x_test: jax.Array,
     y_test: jax.Array,
+    numerics: Optional[SolverNumerics] = None,
 ) -> dict:
     """Test RMSE / mean predictive LLH.
 
@@ -391,7 +445,7 @@ def evaluate(
                        backend=cfg.backend, bm=cfg.bm, bn=cfg.bn)
         scfg = (cfg.solver if cfg.solver.kind == kind
                 else replace(cfg.solver, kind=kind))
-        res = solve(op, targets[:, 1:], None, scfg, key=key)
+        res = solve(op, targets[:, 1:], None, scfg, key=key, numerics=numerics)
         v = jnp.concatenate([state.carry_v[:, :1], res.v], axis=1)
         pred = pathwise_predict(x, x_test, v, eval_probes, state.params,
                                 kind=kind, bm=cfg.bm, bn=cfg.bn)

@@ -38,7 +38,7 @@ from repro.core.estimators import (
 )
 from repro.core.gradients import mll_grad_estimate
 from repro.gp.hyperparams import HyperParams
-from repro.solvers import HOperator, SolverConfig, solve
+from repro.solvers import HOperator, SolverConfig, SolverNumerics, solve
 from repro.train.adam import AdamConfig, AdamState, adam_init, adam_update
 
 
@@ -165,7 +165,8 @@ def _resample_probes(key: jax.Array, probes: ProbeState, x: jax.Array) -> ProbeS
 
 
 def _outer_step(
-    state: OuterState, x: jax.Array, y: jax.Array, cfg: OuterConfig
+    state: OuterState, x: jax.Array, y: jax.Array, cfg: OuterConfig,
+    numerics: Optional[SolverNumerics] = None,
 ) -> tuple[OuterState, dict]:
     """One outer MLL step: solve -> gradient -> Adam -> carry (unjitted).
 
@@ -174,6 +175,10 @@ def _outer_step(
     masks), so the same body serves :func:`outer_step` (jit),
     :func:`outer_step_lanes` (jit-of-vmap) and :func:`outer_scan`
     (jit-of-scan[-of-vmap]).
+
+    ``numerics`` (traced) overrides the numeric solver settings of
+    ``cfg.solver`` — per-lane under vmap, so tolerance/budget/lr grids share
+    one executable; None reads them from the static config (same maths).
     """
     kind = effective_kind(cfg, state.params)
     key, ksolve, kprobe = jax.random.split(state.key, 3)
@@ -193,7 +198,7 @@ def _outer_step(
     # precedence (OuterConfig.kind > SolverConfig.kind) holds; solve()'s
     # conflict check then only fires for hand-built operator/config pairs.
     scfg = cfg.solver if cfg.solver.kind == kind else replace(cfg.solver, kind=kind)
-    res = solve(op, targets, v0, scfg, key=ksolve)
+    res = solve(op, targets, v0, scfg, key=ksolve, numerics=numerics)
 
     grads, aux = mll_grad_estimate(
         x, y, state.params, res.v, targets, cfg.estimator,
@@ -234,26 +239,34 @@ outer_step = partial(jax.jit, static_argnames=("cfg",))(_outer_step)
 
 
 def _outer_step_lanes(
-    states: OuterState, x: jax.Array, y: jax.Array, cfg: OuterConfig
+    states: OuterState, x: jax.Array, y: jax.Array, cfg: OuterConfig,
+    numerics: Optional[SolverNumerics] = None,
 ) -> tuple[OuterState, dict]:
-    return jax.vmap(lambda s: _outer_step(s, x, y, cfg))(states)
+    if numerics is None:
+        return jax.vmap(lambda s: _outer_step(s, x, y, cfg))(states)
+    return jax.vmap(
+        lambda s, nm: _outer_step(s, x, y, cfg, nm)
+    )(states, numerics)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
 def outer_step_lanes(
-    states: OuterState, x: jax.Array, y: jax.Array, cfg: OuterConfig
+    states: OuterState, x: jax.Array, y: jax.Array, cfg: OuterConfig,
+    numerics: Optional[SolverNumerics] = None,
 ) -> tuple[OuterState, dict]:
     """One outer MLL step for B lane-stacked scenarios in one program.
 
     ``states`` is an :class:`OuterState` whose leaves carry a leading lane
     axis (see :func:`stack_states` / :func:`init_outer_state_lanes`); the
     dataset ``(x, y)`` and the static ``cfg`` — kernel kind, solver name,
-    shapes — are shared by every lane. Returns lane-stacked
-    ``(new_states, metrics)``; each lane advances exactly as it would under
-    a plain :func:`outer_step` (solver freeze masks keep early-converging
-    lanes honest).
+    shapes — are shared by every lane. ``numerics`` (optional) must be
+    lane-stacked with (B,) leaves: lane ``l`` then solves under its OWN
+    tolerance/budget/lr, so solver-config grids are lanes of this one
+    executable. Returns lane-stacked ``(new_states, metrics)``; each lane
+    advances exactly as it would under a plain :func:`outer_step` (solver
+    freeze masks keep early-converging lanes honest).
     """
-    return _outer_step_lanes(states, x, y, cfg)
+    return _outer_step_lanes(states, x, y, cfg, numerics)
 
 
 @partial(jax.jit, static_argnames=("cfg", "num_steps", "lanes"))
@@ -264,6 +277,7 @@ def outer_scan(
     cfg: OuterConfig,
     num_steps: int,
     lanes: bool = False,
+    numerics: Optional[SolverNumerics] = None,
 ) -> tuple[OuterState, dict]:
     """Run ``num_steps`` outer MLL steps under one ``lax.scan`` dispatch.
 
@@ -272,12 +286,14 @@ def outer_scan(
     with a leading ``num_steps`` axis (plus a lane axis right after it when
     ``lanes=True`` and ``state`` is lane-stacked). Step semantics are
     identical to iterating :func:`outer_step` — the scan body is the same
-    traced function.
+    traced function. ``numerics`` is threaded to every step (lane-stacked
+    when ``lanes=True``); with lane-sharded inputs (``NamedSharding`` over
+    the lane axis) the same program runs data-parallel across devices.
     """
     step = _outer_step_lanes if lanes else _outer_step
 
     def body(s, _):
-        return step(s, x, y, cfg)
+        return step(s, x, y, cfg, numerics)
 
     return jax.lax.scan(body, state, None, length=num_steps)
 

@@ -11,6 +11,7 @@ convention the paper uses (inputs and targets z-scored on the train split).
 from __future__ import annotations
 
 import os
+import zlib
 from typing import NamedTuple, Optional
 
 import jax
@@ -98,7 +99,12 @@ def load_dataset(
         raw = np.loadtxt(csv, delimiter=",", skiprows=1)
         xy = raw
     else:
-        key = key if key is not None else jax.random.PRNGKey(hash(name) % (2**31))
+        # Deterministic across processes: Python's str hash is salted per
+        # interpreter (PYTHONHASHSEED), which silently gave every process a
+        # DIFFERENT synthetic dataset and broke cross-process parity checks
+        # (benchmarks/sharded_sweep asserts 1-vs-N-device cell parity).
+        if key is None:
+            key = jax.random.PRNGKey(zlib.crc32(name.encode()) % (2**31))
         gen_n = min(n, max_n) if max_n else n
         x, y = make_gp_regression(key, gen_n, d, dtype=dtype)
         xy = np.concatenate([np.asarray(x), np.asarray(y)[:, None]], axis=1)

@@ -21,13 +21,31 @@ prior sample").
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.gp.hyperparams import HyperParams
 from repro.kernels.registry import get_kernel
+
+# Per-kernel default sin/cos pair counts (AUTO_NUM_PAIRS / num_pairs=None
+# resolves here). The paper's m=1000 suits the light-tailed spectra;
+# Matérn-1/2's Cauchy spectrum needs more features for the same covariance
+# error even with the stratified mixture draws (kernels.registry), so its
+# default is 4x. Kernels registered later fall back to 1000.
+DEFAULT_NUM_PAIRS = {
+    "rbf": 1000,
+    "matern32": 1000,
+    "matern52": 1000,
+    "matern12": 4000,
+}
+AUTO_NUM_PAIRS = -1
+
+
+def default_num_pairs(kind: str) -> int:
+    """The kernel's default feature-pair count (1000 for unlisted kernels)."""
+    return DEFAULT_NUM_PAIRS.get(kind, 1000)
 
 
 class RFFState(NamedTuple):
@@ -52,13 +70,15 @@ jax.tree_util.register_pytree_node(
 
 def init_rff(
     key: jax.Array,
-    num_pairs: int,
+    num_pairs: Optional[int],
     d: int,
     num_samples: int,
     kind: str = "matern32",
     dtype=jnp.float32,
 ) -> RFFState:
     spec = get_kernel(kind)  # raises on unknown kernel
+    if num_pairs is None or num_pairs == AUTO_NUM_PAIRS:
+        num_pairs = default_num_pairs(kind)
     kz, ku, kw = jax.random.split(key, 3)
     z = jax.random.normal(kz, (num_pairs, d), dtype=dtype)
     u = spec.mixture_sample(ku, num_pairs, dtype=dtype)

@@ -41,7 +41,9 @@ SQRT5 = 2.23606797749979
 # which only cancels under favourable XLA fusion orders and otherwise
 # poisons lengthscale gradients. Matérn-1/2 uses a larger floor: its
 # dkappa/dr^2 ~ -1/(2r) diverges as r -> 0 and amplifies diagonal round-off
-# in the fused backward tile accumulation.
+# in the fused backward tile accumulation; its registered dkappa is
+# additionally zeroed on the clamped region (see _m12_dkappa) so coincident
+# points contribute exactly nothing instead of the floored slope.
 _R2_FLOOR = 1e-30
 _R2_FLOOR_M12 = 1e-12
 
@@ -110,8 +112,24 @@ def _m12_kappa(r2):
 
 
 def _m12_dkappa(r2):
+    """Subgradient-aware Matérn-1/2 derivative.
+
+    exp(-r) is non-smooth at r=0 and dkappa/dr2 = -exp(-r)/(2r) diverges
+    there. On the clamped region (r2 <= floor — exact duplicates and the
+    tile diagonal, where the distance computation lands at hard zero) the
+    true contribution to any hyperparameter gradient is zero: dr2/dtheta
+    vanishes quadratically while the profile subdifferential stays bounded.
+    Returning the FLOORED slope -1/(2*sqrt(floor)) ~ -5e5 instead (as the
+    pre-fix code did) plants huge entries in the fused backward tile's
+    D = (g v^T) . dkappa, whose row-sum/GEMM cancellation then amplifies
+    fp32 round-off into a visible lengthscale-gradient bias on clustered or
+    duplicated inputs. So: exact zero below the floor — matching what plain
+    AD of ``kappa_from_r2`` produces through the ``maximum`` clamp — and
+    the true slope above it.
+    """
     r = jnp.sqrt(jnp.maximum(r2, _R2_FLOOR_M12))
-    return -jnp.exp(-r) / (2.0 * r)
+    slope = -jnp.exp(-r) / (2.0 * r)
+    return jnp.where(r2 > _R2_FLOOR_M12, slope, jnp.zeros_like(slope))
 
 
 def _m32_kappa(r2):
@@ -149,6 +167,32 @@ def _chi2_sample(dof: float):
     return sample
 
 
+def _chi2_1_sample_stratified(key, num_pairs, dtype=jnp.float32):
+    """Stratified (randomised-QMC) chi^2_1 mixture draws for Matérn-1/2.
+
+    The Matérn-1/2 spectral density is Cauchy: the mixture scale
+    ``sqrt(1/u)`` has no mean, so iid ``u ~ chi^2_1`` draws under- or
+    over-represent the frequency tail at any practical feature count and
+    the RFF covariance estimate converges slowly. One jittered
+    inverse-CDF draw per probability stratum fixes the tail coverage by
+    construction — exactly one frequency per quantile bin, every seed —
+    while staying unbiased (the jitter is uniform within each stratum).
+    chi^2_1 inverts through the normal CDF: ``u = Phi^{-1}((1+p)/2)^2``.
+    Deterministic given ``key``, so the warm-start fixed-base-draw
+    contract (gp.rff) is untouched.
+    """
+    jitter = jax.random.uniform(key, (num_pairs,), dtype=dtype)
+    p = (jnp.arange(num_pairs, dtype=dtype) + jitter) / num_pairs
+    # Keep ndtri's argument strictly inside (0.5, 1): in float32 the top
+    # stratum's (1+p)/2 can round to exactly 1.0 (ndtri -> inf, poisoning
+    # the stored u and every downstream feature map).
+    q = jnp.minimum((1.0 + p) / 2.0, 1.0 - jnp.finfo(dtype).epsneg)
+    z = jax.scipy.special.ndtri(q).astype(dtype)
+    # First stratum can land at p ~ 0 -> u ~ 0 -> an infinite mixture
+    # scale; clamp to the smallest positive normal (still a ~1e19x scale).
+    return jnp.maximum(z * z, jnp.finfo(dtype).tiny)
+
+
 def _student_scale(dof: float):
     def scale(u):
         return jnp.sqrt(dof / u)
@@ -170,7 +214,10 @@ register_kernel(KernelSpec(
     nu=0.5,
     kappa_from_r2=_m12_kappa,
     dkappa_dr2=_m12_dkappa,
-    mixture_sample=_chi2_sample(1.0),
+    # Stratified, not iid: the Cauchy spectrum's tail is too heavy for
+    # plain chi^2_1 draws at practical feature counts (see gp.rff, which
+    # also gives matern12 a larger default feature count).
+    mixture_sample=_chi2_1_sample_stratified,
     mixture_scale=_student_scale(1.0),
 ))
 

@@ -1,22 +1,34 @@
-"""One-program multi-scenario sweeps: kernel x seed grids as vmap lanes.
+"""One-program multi-scenario sweeps: kernel x seed x solver-config grids
+as vmap lanes.
 
-Partitions a ``configs.gp_iterative.KERNEL_SWEEP`` x seed grid by static
-signature — kernel kind, solver name, estimator, shapes — and runs each
-group as ONE process and ONE compiled executable: seeds become vmap lanes
-inside a single scan-of-steps program (``core.driver.fit_batch``), instead
-of the one-subprocess-per-cell pattern of ``launch.sweep``. Per-cell JSON
-artifacts and the ``_sweep_status.json`` summary keep the sweep-output
-conventions (done cells are skipped on re-run, so the sweep is resumable).
+Partitions a ``configs.gp_iterative.KERNEL_SWEEP`` x seed x numerics grid
+by STATIC signature — kernel kind, solver name, estimator, shapes — and
+runs each group as ONE process and ONE compiled executable: seeds become
+vmap lanes inside a single scan-of-steps program (``core.driver.fit_batch``)
+instead of the one-subprocess-per-cell pattern of ``launch.sweep``, and
+numeric solver settings (tolerance / epoch budget / SGD lr — a sweep over
+the paper's early-stopping and compute-budget knobs) ride as a lane-stacked
+traced ``SolverNumerics`` pytree, so a tolerance x lr grid does NOT retrace.
+Per-cell JSON artifacts and the ``_sweep_status.json`` summary keep the
+sweep-output conventions (done cells are skipped on re-run, so the sweep is
+resumable).
 
     PYTHONPATH=src python -m repro.launch.batch --out artifacts/batch \
         --dataset pol --max-n 512 --kernels matern12,matern32 --seeds 2 \
-        --steps 5 --smoke
+        --steps 5 --smoke --tolerances 0.01,0.05 --sgd-lrs 0.5,1.0
+
+``--shard-lanes`` additionally shards the lane axis of every group across
+the local devices (1-D lane mesh, ``launch.mesh.make_lane_mesh``): the same
+one-executable program runs data-parallel over lanes, which is how a TPU
+slice runs the whole grid at full occupancy. Groups whose lane count does
+not divide the device count fall back to the unsharded path with a note.
 
 ``--isolate`` falls back to one subprocess per cell (jax memory hygiene /
 fault isolation, as in ``launch.sweep``); the artifacts are identical, so
-the two modes are interchangeable and A/B-able (benchmarks/batched_sweep).
-``--expect-one-compile-per-group`` asserts the one-executable contract via
-jit-cache retrace counting and fails the run when it is violated.
+the two modes are interchangeable and A/B-able (benchmarks/batched_sweep,
+benchmarks/sharded_sweep). ``--expect-one-compile-per-group`` asserts the
+one-executable contract via jit-cache retrace counting and fails the run
+when it is violated.
 """
 from __future__ import annotations
 
@@ -27,16 +39,30 @@ import os
 import subprocess
 import sys
 import time
+from typing import NamedTuple, Optional
 
 from repro.configs.gp_iterative import KERNEL_SWEEP, SMOKE, GPArchConfig
 
 
-def cell_filename(arch_name: str, seed: int) -> str:
-    return f"{arch_name}__s{seed}.json"
+class Cell(NamedTuple):
+    """One sweep cell: an arch at one seed and one numeric solver setting."""
+
+    arch: GPArchConfig
+    seed: int
+    tolerance: float
+    lr: float
+    epochs: float
+    tag: str  # filename suffix for the numeric axes ("" for 1-point grids)
 
 
-def cell_done(out_dir: str, arch_name: str, seed: int) -> bool:
-    return os.path.exists(os.path.join(out_dir, cell_filename(arch_name, seed)))
+def cell_filename(arch_name: str, seed: int, tag: str = "") -> str:
+    return f"{arch_name}__s{seed}{tag}.json"
+
+
+def cell_done(out_dir: str, arch_name: str, seed: int, tag: str = "") -> bool:
+    return os.path.exists(
+        os.path.join(out_dir, cell_filename(arch_name, seed, tag))
+    )
 
 
 def sweep_archs(kernels: list[str] | None, smoke: bool) -> list[GPArchConfig]:
@@ -59,22 +85,90 @@ def sweep_archs(kernels: list[str] | None, smoke: bool) -> list[GPArchConfig]:
     return archs
 
 
-def outer_config_for(arch: GPArchConfig, args):
-    """The (static, hashable) OuterConfig of one sweep cell."""
-    from repro.core import OuterConfig
+def _parse_grid(text: Optional[str], default: float) -> list[float]:
+    if not text:
+        return [default]
+    return [float(v) for v in text.split(",")]
+
+
+def make_cells(archs: list[GPArchConfig], seeds: list[int], args) -> list[Cell]:
+    """arch x seed x tolerance x lr x epoch-budget grid, with filename tags
+    only for the numeric axes that actually have more than one point (so
+    plain kernel x seed sweeps keep their legacy artifact names)."""
+    tols = _parse_grid(args.tolerances, args.tolerance)
+    lrs = _parse_grid(args.sgd_lrs, args.sgd_lr)
+    budgets = _parse_grid(getattr(args, "epoch_budgets", None), 0.0)
+    cells = []
+    seen: set = set()  # colliding grid points (e.g. "0.01,0.01", or an
+    # explicit budget equal to the arch default with 0 also given) would
+    # otherwise run redundant lanes AND write the same artifact path twice.
+    for arch in archs:
+        for seed in seeds:
+            for tol in tols:
+                for lr in lrs:
+                    for ep in budgets:
+                        epochs = ep or float(arch.solver_epochs)
+                        parts = []
+                        if len(tols) > 1:
+                            parts.append(f"tol{tol:g}")
+                        if len(lrs) > 1:
+                            parts.append(f"lr{lr:g}")
+                        if len(budgets) > 1:
+                            parts.append(f"ep{epochs:g}")
+                        tag = "".join("__" + p for p in parts)
+                        cell = Cell(arch, seed, tol, lr, epochs, tag)
+                        if cell not in seen:
+                            seen.add(cell)
+                            cells.append(cell)
+    # Distinct cells must not share an artifact path (the %g tags keep 6
+    # significant digits): a silent collision would overwrite one cell's
+    # JSON with another's and make the loser unrecoverable on resume.
+    by_path: dict = {}
+    for c in cells:
+        path = cell_filename(c.arch.name, c.seed, c.tag)
+        if path in by_path:
+            raise ValueError(
+                f"grid cells {by_path[path][2:-1]} and {c[2:-1]} collide on "
+                f"artifact name {path!r}; choose grid values that differ "
+                f"within 6 significant digits"
+            )
+        by_path[path] = c
+    return cells
+
+
+def solver_config_for(arch: GPArchConfig, args, cell: Optional[Cell] = None):
+    """The FULL per-cell SolverConfig (numeric values included)."""
     from repro.solvers import SolverConfig
 
     solver = args.solver or arch.solver
-    scfg = SolverConfig(
+    return SolverConfig(
         name=solver,
-        tolerance=args.tolerance,
+        tolerance=cell.tolerance if cell else args.tolerance,
         kind=arch.kind,
-        max_epochs=float(arch.solver_epochs),
+        max_epochs=float(cell.epochs if cell else arch.solver_epochs),
         precond_rank=arch.precond_rank,
         block_size=args.block_size,
         batch_size=args.batch_size,
-        learning_rate=args.sgd_lr,
+        learning_rate=cell.lr if cell else args.sgd_lr,
     )
+
+
+def outer_config_for(arch: GPArchConfig, args, cell: Optional[Cell] = None,
+                     static: bool = False):
+    """The OuterConfig of one sweep cell.
+
+    ``static=True`` strips the solver's numeric fields to their canonical
+    defaults (``solvers.strip_numerics``): the result is the hashable GROUP
+    KEY — and the jit static argument — under which every numeric cell of
+    the grid shares one executable, with the actual numbers delivered as a
+    lane-stacked traced ``SolverNumerics``.
+    """
+    from repro.core import OuterConfig
+    from repro.solvers import strip_numerics
+
+    scfg = solver_config_for(arch, args, cell)
+    if static:
+        scfg = strip_numerics(scfg)
     return OuterConfig(
         estimator=arch.estimator,
         warm_start=arch.warm_start,
@@ -88,17 +182,27 @@ def outer_config_for(arch: GPArchConfig, args):
     )
 
 
-def group_cells(archs: list[GPArchConfig], args):
-    """Static signature -> member archs.
+def cell_numerics(cell: Cell, args):
+    """The cell's traced numeric settings (scalar-leaf SolverNumerics)."""
+    from repro.solvers import numerics_of
+
+    return numerics_of(solver_config_for(cell.arch, args, cell))
+
+
+def group_cells(cells: list[Cell], args):
+    """Static signature -> member cells.
 
     The signature is the jit static argument itself (the hashable
-    OuterConfig); cells that share it share one executable. With a shared
-    dataset that means one group per kernel kind here, but the partition
-    stays correct for any future per-cell config divergence.
+    numerics-stripped OuterConfig); cells that share it share one
+    executable. With a shared dataset that means one group per kernel kind
+    — REGARDLESS of the tolerance/lr/budget grid, which rides as traced
+    lane data — but the partition stays correct for any future per-cell
+    static divergence.
     """
     groups: dict = {}
-    for arch in archs:
-        groups.setdefault(outer_config_for(arch, args), []).append(arch)
+    for cell in cells:
+        key = outer_config_for(cell.arch, args, cell, static=True)
+        groups.setdefault(key, []).append(cell)
     return groups
 
 
@@ -118,13 +222,15 @@ def _load_data(archs: list[GPArchConfig], args):
     return x, y
 
 
-def _cell_record(arch: GPArchConfig, seed: int, res, mode: str,
-                 group_size: int) -> dict:
+def _cell_record(cell: Cell, res, mode: str, group_size: int) -> dict:
     hist = res.history
     return {
-        "arch": arch.name,
-        "kernel": arch.kind,
-        "seed": seed,
+        "arch": cell.arch.name,
+        "kernel": cell.arch.kind,
+        "seed": cell.seed,
+        "tolerance": cell.tolerance,
+        "learning_rate": cell.lr,
+        "max_epochs": cell.epochs,
         "mode": mode,
         "lanes": group_size,
         "wall_time_s": res.wall_time_s,
@@ -141,9 +247,12 @@ def _cell_record(arch: GPArchConfig, seed: int, res, mode: str,
     }
 
 
-def _write_cell(out_dir: str, arch: GPArchConfig, seed: int, record: dict):
+def _write_cell(out_dir: str, cell: Cell, record: dict):
     os.makedirs(out_dir, exist_ok=True)
-    with open(os.path.join(out_dir, cell_filename(arch.name, seed)), "w") as f:
+    path = os.path.join(
+        out_dir, cell_filename(cell.arch.name, cell.seed, cell.tag)
+    )
+    with open(path, "w") as f:
         json.dump(record, f, indent=2)
 
 
@@ -161,43 +270,66 @@ def _scan_cache_size():
         return None
 
 
-def run_batched(archs, seeds, x, y, args) -> dict:
+def run_batched(cells, x, y, args) -> dict:
     """All groups in-process: one fit_batch (= one executable) per group.
 
-    Every cell of a group — across member archs, not just across seeds —
-    joins the same fit_batch call, so a group really is one program."""
+    Every cell of a group — across member archs AND across the numeric
+    tolerance/lr/budget grid, not just across seeds — joins the same
+    fit_batch call, so a group really is one program. ``--shard-lanes``
+    additionally places the lane axis on a 1-D device mesh."""
     import jax
 
     from repro.core import fit_batch
+    from repro.solvers import stack_numerics
+
+    mesh = None
+    if args.shard_lanes:
+        from repro.launch.mesh import make_lane_mesh
+
+        mesh = make_lane_mesh()
+        print(f"[batch] lane mesh: {mesh.devices.size} device(s)")
 
     compiles0 = _scan_cache_size()
     failures, num_groups, num_cells = [], 0, 0
-    groups = group_cells(archs, args)
+    sharded_groups = 0
+    groups = group_cells(cells, args)
     for cfg, members in groups.items():
-        cells = [(arch, s) for arch in members for s in seeds]
-        todo = [(arch, s) for arch, s in cells
-                if not cell_done(args.out, arch.name, s)]
-        for arch, s in cells:
-            if (arch, s) not in todo:
-                print(f"[batch] skip (done): {arch.name} s{s}")
+        todo = [c for c in members
+                if not cell_done(args.out, c.arch.name, c.seed, c.tag)]
+        for c in members:
+            if c not in todo:
+                print(f"[batch] skip (done): {c.arch.name} s{c.seed}{c.tag}")
         if not todo:
             continue
         num_groups += 1
-        label = ",".join(sorted({arch.name for arch, _ in todo}))
+        label = ",".join(sorted({c.arch.name for c in todo}))
         t0 = time.time()
-        keys = jax.numpy.stack([jax.random.PRNGKey(s) for _, s in todo])
+        keys = jax.numpy.stack([jax.random.PRNGKey(c.seed) for c in todo])
+        nums = stack_numerics([cell_numerics(c, args) for c in todo])
+        group_mesh = mesh
+        if mesh is not None and len(todo) % mesh.devices.size != 0:
+            print(f"[batch] note: group {label} has {len(todo)} lanes, not "
+                  f"a multiple of {mesh.devices.size} devices; running "
+                  f"unsharded")
+            group_mesh = None
         try:
-            results = fit_batch(x, y, cfg, keys)
+            results = fit_batch(x, y, cfg, keys, numerics=nums,
+                                mesh=group_mesh)
         except Exception as e:  # noqa: BLE001 - sweep must keep going
             print(f"[batch] FAIL group {label}: {e}", file=sys.stderr)
-            failures.extend([(arch.name, s) for arch, s in todo])
+            failures.extend(
+                [(c.arch.name, c.seed, c.tag) for c in todo])
             continue
         dt = time.time() - t0
-        print(f"[batch] OK {label} x {len(todo)} lanes ({dt:.1f}s)",
-              flush=True)
-        for (arch, s), res in zip(todo, results):
-            _write_cell(args.out, arch, s,
-                        _cell_record(arch, s, res, "batched", len(todo)))
+        if group_mesh is not None:
+            sharded_groups += 1
+        shard_note = (f", sharded x{mesh.devices.size}"
+                      if group_mesh is not None else "")
+        print(f"[batch] OK {label} x {len(todo)} lanes ({dt:.1f}s"
+              f"{shard_note})", flush=True)
+        for c, res in zip(todo, results):
+            _write_cell(args.out, c, _cell_record(c, res, "batched",
+                                                  len(todo)))
             num_cells += 1
     compiles1 = _scan_cache_size()
     num_compiles = (None if compiles0 is None or compiles1 is None
@@ -208,51 +340,71 @@ def run_batched(archs, seeds, x, y, args) -> dict:
         "num_compiles": num_compiles,
         "cells": num_cells,
         "mode": "batched",
+        # Only claim sharding that actually happened: a mesh was built AND
+        # at least one executed group used it (groups whose lane count does
+        # not divide the device count fall back to unsharded).
+        "shard_devices": (mesh.devices.size
+                          if mesh is not None and sharded_groups else 0),
+        "sharded_groups": sharded_groups,
     }
 
 
-def run_isolated(archs, seeds, args, argv_passthrough: list[str]) -> dict:
-    """Subprocess-per-cell fallback (the legacy ``launch.sweep`` pattern)."""
+def run_isolated(cells, args, argv_passthrough: list[str]) -> dict:
+    """Subprocess-per-cell fallback (the legacy ``launch.sweep`` pattern).
+
+    Each cell's numeric settings travel as plain worker flags — one process
+    AND one executable per numeric cell, which is exactly the compile cost
+    the traced-numerics batched path amortises away
+    (benchmarks/sharded_sweep A/Bs the two)."""
     failures, num_cells = [], 0
-    for arch in archs:
-        for s in seeds:
-            if cell_done(args.out, arch.name, s):
-                print(f"[batch] skip (done): {arch.name} s{s}")
-                continue
-            cmd = [
-                sys.executable, "-m", "repro.launch.batch",
-                "--only-cell", f"{arch.kind}:{s}",
-            ] + argv_passthrough
-            # Workers must import repro regardless of cwd / install mode:
-            # prepend this package's src dir, keep the inherited PYTHONPATH.
-            src = os.path.dirname(os.path.dirname(
-                os.path.dirname(os.path.abspath(__file__))))
-            inherited = os.environ.get("PYTHONPATH")
-            pypath = src + (os.pathsep + inherited if inherited else "")
-            t0 = time.time()
-            r = subprocess.run(
-                cmd, capture_output=True, text=True, timeout=args.timeout,
-                env={**os.environ, "PYTHONPATH": pypath},
-            )
-            dt = time.time() - t0
-            if r.returncode == 0:
-                num_cells += 1
-                print(f"[batch] OK {arch.name} s{s} ({dt:.1f}s)", flush=True)
-            else:
-                failures.append((arch.name, s))
-                print(f"[batch] FAIL {arch.name} s{s} ({dt:.1f}s)\n"
-                      f"{(r.stderr or r.stdout)[-2000:]}", flush=True)
+    for c in cells:
+        if cell_done(args.out, c.arch.name, c.seed, c.tag):
+            print(f"[batch] skip (done): {c.arch.name} s{c.seed}{c.tag}")
+            continue
+        cmd = [
+            sys.executable, "-m", "repro.launch.batch",
+            "--only-cell", f"{c.arch.kind}:{c.seed}",
+            "--tolerance", str(c.tolerance),
+            "--sgd-lr", str(c.lr),
+            "--solver-epochs", str(c.epochs),
+        ] + (["--cell-tag", c.tag] if c.tag else []) + argv_passthrough
+        # Workers must import repro regardless of cwd / install mode:
+        # prepend this package's src dir, keep the inherited PYTHONPATH.
+        src = os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))))
+        inherited = os.environ.get("PYTHONPATH")
+        pypath = src + (os.pathsep + inherited if inherited else "")
+        t0 = time.time()
+        r = subprocess.run(
+            cmd, capture_output=True, text=True, timeout=args.timeout,
+            env={**os.environ, "PYTHONPATH": pypath},
+        )
+        dt = time.time() - t0
+        if r.returncode == 0:
+            num_cells += 1
+            print(f"[batch] OK {c.arch.name} s{c.seed}{c.tag} ({dt:.1f}s)",
+                  flush=True)
+        else:
+            failures.append((c.arch.name, c.seed, c.tag))
+            print(f"[batch] FAIL {c.arch.name} s{c.seed}{c.tag} ({dt:.1f}s)\n"
+                  f"{(r.stderr or r.stdout)[-2000:]}", flush=True)
     return {
         "failures": failures,
         "groups": num_cells,  # one executable (and process) per cell
         "num_compiles": None,  # spread over subprocesses; unknowable here
         "cells": num_cells,
         "mode": "isolated",
+        "shard_devices": 0,
+        "sharded_groups": 0,
     }
 
 
 def run_single_cell(archs, args) -> int:
-    """--only-cell kernel:seed — one cell in this process (isolate worker)."""
+    """--only-cell kernel:seed — one cell in this process (isolate worker).
+
+    The cell's numeric settings arrive as the worker's --tolerance /
+    --sgd-lr / --solver-epochs scalars and are baked into the static config
+    (a single cell has nothing to group with)."""
     import jax
 
     from repro.core import fit
@@ -264,11 +416,14 @@ def run_single_cell(archs, args) -> int:
         print(f"[batch] unknown cell kernel {kind!r}", file=sys.stderr)
         return 1
     arch = matches[0]
-    cfg = outer_config_for(arch, args)
+    epochs = float(args.solver_epochs) if args.solver_epochs else float(
+        arch.solver_epochs)
+    cell = Cell(arch, seed, args.tolerance, args.sgd_lr, epochs,
+                args.cell_tag)
+    cfg = outer_config_for(arch, args, cell)
     x, y = _load_data([arch], args)
     res = fit(x, y, cfg, key=jax.random.PRNGKey(seed), steps_per_round=0)
-    _write_cell(args.out, arch, seed,
-                _cell_record(arch, seed, res, "isolated", 1))
+    _write_cell(args.out, cell, _cell_record(cell, res, "isolated", 1))
     return 0
 
 
@@ -288,9 +443,20 @@ def main(argv=None) -> int:
     ap.add_argument("--solver", default=None, choices=[None, "cg", "ap", "sgd"],
                     help="override the sweep's solver")
     ap.add_argument("--tolerance", type=float, default=0.01)
+    ap.add_argument("--tolerances", default=None,
+                    help="comma floats: solver-tolerance grid (traced — "
+                         "every point shares the group's one executable)")
     ap.add_argument("--block-size", type=int, default=64)
     ap.add_argument("--batch-size", type=int, default=64)
     ap.add_argument("--sgd-lr", type=float, default=2.0)
+    ap.add_argument("--sgd-lrs", default=None,
+                    help="comma floats: SGD learning-rate grid (traced)")
+    ap.add_argument("--epoch-budgets", default=None,
+                    help="comma floats: solver epoch-budget grid (traced); "
+                         "0 means the arch's default budget")
+    ap.add_argument("--shard-lanes", action="store_true",
+                    help="shard each group's lane axis across local devices "
+                         "(1-D lane mesh)")
     ap.add_argument("--bm", type=int, default=256)
     ap.add_argument("--bn", type=int, default=256)
     ap.add_argument("--isolate", action="store_true",
@@ -298,6 +464,10 @@ def main(argv=None) -> int:
     ap.add_argument("--timeout", type=int, default=1800)
     ap.add_argument("--only-cell", default=None,
                     help="internal: run one kernel:seed cell in-process")
+    ap.add_argument("--solver-epochs", type=float, default=0.0,
+                    help="internal (isolate worker): the cell's epoch budget")
+    ap.add_argument("--cell-tag", default="",
+                    help="internal (isolate worker): artifact filename tag")
     ap.add_argument("--expect-one-compile-per-group", action="store_true",
                     help="fail unless retraces == executed groups")
     args = ap.parse_args(argv)
@@ -309,26 +479,27 @@ def main(argv=None) -> int:
     if args.only_cell:
         return run_single_cell(archs, args)
 
+    cells = make_cells(archs, seeds, args)
     t0 = time.time()
     if args.isolate:
-        # Reconstruct the cell-relevant flags for the worker subprocesses.
+        # Reconstruct the cell-relevant flags for the worker subprocesses
+        # (numeric settings are appended per cell by run_isolated).
         passthrough = [
             "--out", args.out, "--dataset", args.dataset,
             "--max-n", str(args.max_n), "--split", str(args.split),
-            "--steps", str(args.steps), "--tolerance", str(args.tolerance),
+            "--steps", str(args.steps),
             "--block-size", str(args.block_size),
             "--batch-size", str(args.batch_size),
-            "--sgd-lr", str(args.sgd_lr),
             "--bm", str(args.bm), "--bn", str(args.bn),
         ]
         if args.smoke:
             passthrough.append("--smoke")
         if args.solver:
             passthrough += ["--solver", args.solver]
-        status = run_isolated(archs, seeds, args, passthrough)
+        status = run_isolated(cells, args, passthrough)
     else:
         x, y = _load_data(archs, args)
-        status = run_batched(archs, seeds, x, y, args)
+        status = run_batched(cells, x, y, args)
 
     status["wall_time_s"] = time.time() - t0
     os.makedirs(args.out, exist_ok=True)

@@ -21,6 +21,20 @@ def make_host_mesh():
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
+def make_lane_mesh(num_devices: int | None = None):
+    """1-D mesh over a ``"lanes"`` axis for data-parallel scenario sweeps.
+
+    Each device owns a contiguous slice of the vmap lane axis of a batched
+    sweep (``core.driver.fit_batch(mesh=...)``): lanes are embarrassingly
+    parallel, so a ``NamedSharding`` over this mesh turns the one-program
+    grid into one program PER DEVICE worth of lanes with no collectives on
+    the hot path. Defaults to every local device; CPU tests force virtual
+    devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    n = num_devices or len(jax.devices())
+    return jax.make_mesh((n,), ("lanes",))
+
+
 # TPU v5e hardware model for the roofline (per chip).
 PEAK_BF16_FLOPS = 197e12  # FLOP/s
 HBM_BW = 819e9  # B/s

@@ -23,12 +23,18 @@ from repro.serve.artifact import (
 )
 from repro.serve.engine import BucketedEngine, EngineStats, pad_to_bucket
 from repro.serve.multimodel import MultiModelServer
-from repro.serve.refresh import OnlineGP, RefreshReport, merge_refined_state
+from repro.serve.refresh import (
+    AUTO_COUPLING_FACTOR,
+    OnlineGP,
+    RefreshReport,
+    merge_refined_state,
+)
 
 __all__ = [
     "ServableGP", "export_servable", "load_servable", "save_servable",
     "servable_predict",
     "BucketedEngine", "EngineStats", "pad_to_bucket",
     "MultiModelServer",
-    "OnlineGP", "RefreshReport", "merge_refined_state",
+    "AUTO_COUPLING_FACTOR", "OnlineGP", "RefreshReport",
+    "merge_refined_state",
 ]

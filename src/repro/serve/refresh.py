@@ -62,6 +62,16 @@ def merge_refined_state(
     )
 
 
+
+# refine(mode="auto") escalation threshold, in units of the solver
+# tolerance: the block refresh's reported coupling residual sits at ~1-2x
+# tolerance in its validity regime (weakly coupled appends) and orders of
+# magnitude above it when the appended rows overlap the bulk, so a few
+# tolerances cleanly separates the two (measured: ~2x vs ~9000x on the
+# regression fixtures). Override per call with ``coupling_threshold``.
+AUTO_COUPLING_FACTOR = 5.0
+
+
 class RefreshReport(NamedTuple):
     """What one `refine` cost and achieved.
 
@@ -69,7 +79,8 @@ class RefreshReport(NamedTuple):
     entry of the n x n H computed once), so block and full refreshes are
     directly comparable: a block refresh on k new rows charges k/n of an
     epoch for the cross MVM plus ``block_epochs * (k/n)^2`` for the solve
-    on the k x k sub-system.
+    on the k x k sub-system. An escalated ``mode="auto"`` charges the block
+    attempt PLUS the full re-solve it triggered.
     """
 
     n: int  # training rows after the refresh
@@ -79,9 +90,10 @@ class RefreshReport(NamedTuple):
     res_y: float  # final mean-system relative residual
     res_z: float  # final probe-average relative residual
     warm: bool  # warm-started from the extended carry?
-    mode: str = "solve"  # solve | step | block
-    block_rows: int = 0  # rows of the block sub-system (mode="block")
-    block_epochs: float = 0.0  # solver epochs in k-system units (mode="block")
+    mode: str = "solve"  # solve | step | block | auto
+    block_rows: int = 0  # rows of the block sub-system (mode="block"/"auto")
+    block_epochs: float = 0.0  # solver epochs in k-system units (block/auto)
+    escalated: bool = False  # auto mode fell back to a full re-solve?
 
 
 class OnlineGP:
@@ -130,6 +142,7 @@ class OnlineGP:
         warm: bool = True,
         mode: str = "solve",
         key: Optional[jax.Array] = None,
+        coupling_threshold: Optional[float] = None,
     ) -> RefreshReport:
         """Budgeted refinement of the enlarged system (paper §5 budgets).
 
@@ -159,6 +172,16 @@ class OnlineGP:
         ``epochs`` reports full-system equivalents (2k/n for the two cross
         MVMs + block epochs scaled by (k/n)^2) so the saving is visible in
         the same units as ``mode="solve"``.
+
+        ``mode="auto"`` makes the block-vs-full decision itself: it runs
+        the block refresh and, when the reported coupling residual
+        ``max(res_y, res_z)`` exceeds ``coupling_threshold`` (default
+        ``AUTO_COUPLING_FACTOR x`` the solver tolerance), escalates to a
+        full re-solve — warm-started from the block-corrected carry, so the
+        block work is a head start, not waste. In the weak-coupling regime
+        auto costs the same as "block"; under strongly coupled appends it
+        pays the full solve instead of silently leaving a large ``res_y``.
+        The report's ``escalated`` flag says which path ran.
         """
         with self._lock:
             state, x, y, cfg = self.state, self.x, self.y, self.cfg
@@ -201,7 +224,7 @@ class OnlineGP:
                 res_y=float(res.res_y), res_z=float(res.res_z), warm=warm,
                 mode=mode,
             )
-        elif mode == "block":
+        elif mode in ("block", "auto"):
             if not warm:
                 raise ValueError(
                     "block refresh refines the warm carry; it has no "
@@ -277,6 +300,36 @@ class OnlineGP:
                 res_y=res_y, res_z=res_z, warm=True,
                 mode=mode, block_rows=k, block_epochs=block_epochs,
             )
+            threshold = (coupling_threshold if coupling_threshold is not None
+                         else AUTO_COUPLING_FACTOR * cfg.solver.tolerance)
+            if mode == "auto" and max(res_y, res_z) > threshold:
+                # The appends are too strongly coupled for the block
+                # update: pay the full warm re-solve, starting from the
+                # block-corrected carry (strictly closer than the
+                # zero-padded one, so nothing was wasted).
+                op = HOperator(x=x, params=state.params, kind=kind,
+                               backend=cfg.backend, bm=cfg.bm, bn=cfg.bn)
+                fcfg = cfg.solver if cfg.solver.kind == kind else replace(
+                    cfg.solver, kind=kind
+                )
+                if budget_epochs is not None:
+                    fcfg = replace(fcfg, max_epochs=budget_epochs)
+                fkey = key if key is not None else jax.random.fold_in(
+                    state.key, 17)
+                fres = solve(op, targets, new_state.carry_v, fcfg, key=fkey)
+                new_state = state._replace(
+                    carry_v=fres.v,
+                    last_res_y=fres.res_y.astype(jnp.float32),
+                    last_res_z=fres.res_z.astype(jnp.float32),
+                    last_iters=fres.iters,
+                    last_epochs=fres.epochs.astype(jnp.float32),
+                )
+                report = report._replace(
+                    epochs=epochs_equiv + float(fres.epochs),
+                    iters=int(res.iters) + int(fres.iters),
+                    res_y=float(fres.res_y), res_z=float(fres.res_z),
+                    escalated=True,
+                )
         else:
             raise ValueError(f"unknown refine mode {mode!r}")
         with self._lock:
@@ -300,6 +353,7 @@ class OnlineGP:
         budget_epochs: Optional[float] = None,
         mode: str = "solve",
         background: bool = False,
+        coupling_threshold: Optional[float] = None,
     ):
         """Refine, then atomically swap the new artifact into ``engine``.
 
@@ -313,7 +367,8 @@ class OnlineGP:
         """
 
         def _do():
-            report = self.refine(budget_epochs=budget_epochs, mode=mode)
+            report = self.refine(budget_epochs=budget_epochs, mode=mode,
+                                 coupling_threshold=coupling_threshold)
             model = self.export()
             if name is not None:
                 engine.swap(name, model)

@@ -7,7 +7,15 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.solvers.base import SolveResult, SolverConfig
+from repro.solvers.base import (
+    SolveResult,
+    SolverConfig,
+    SolverNumerics,
+    broadcast_numerics,
+    numerics_of,
+    stack_numerics,
+    strip_numerics,
+)
 from repro.solvers.cg import solve_cg
 from repro.solvers.ap import solve_ap
 from repro.solvers.sgd import solve_sgd
@@ -31,6 +39,7 @@ def solve(
     v0: Optional[jax.Array],
     cfg: SolverConfig,
     key: Optional[jax.Array] = None,
+    numerics: Optional[SolverNumerics] = None,
 ) -> SolveResult:
     """Solve H [v_y, v_1..v_s] = b with the configured solver.
 
@@ -41,6 +50,12 @@ def solve(
     agree with the operator's effective kernel (explicit ``op.kind`` or
     ``params.kernel``); any disagreement is an error rather than a silent
     override.
+
+    ``numerics`` overrides the config's numeric settings (tolerance, epoch
+    budget, lr, momentum, divergence threshold) with TRACED values — under
+    ``jax.vmap`` each lane may carry its own (see :func:`solve_lanes`).
+    ``None`` reads them from ``cfg`` — identical maths, and still one
+    executable per static config.
     """
     if cfg.kind is not None:
         if cfg.kind != op.kernel_kind:
@@ -51,11 +66,11 @@ def solve(
         if op.kind is None:
             op = replace(op, kind=cfg.kind)
     if cfg.name == "cg":
-        return solve_cg(op, b, v0, cfg)
+        return solve_cg(op, b, v0, cfg, numerics=numerics)
     if cfg.name == "ap":
-        return solve_ap(op, b, v0, cfg)
+        return solve_ap(op, b, v0, cfg, numerics=numerics)
     if cfg.name == "sgd":
-        return solve_sgd(op, b, v0, cfg, key=key)
+        return solve_sgd(op, b, v0, cfg, key=key, numerics=numerics)
     raise ValueError(f"unknown solver {cfg.name!r}")
 
 
@@ -71,6 +86,7 @@ def solve_lanes(
     bm: int = 1024,
     bn: int = 1024,
     keys: Optional[jax.Array] = None,
+    numerics: Optional[SolverNumerics] = None,
 ) -> SolveResult:
     """Solve B independent scenario lanes in one vmapped program.
 
@@ -89,24 +105,34 @@ def solve_lanes(
       b: (B, n, t) right-hand sides.
       v0: (B, n, t) warm starts, or None for cold starts.
       keys: (B, 2) PRNG keys (SGD batch sampling), or None.
+      numerics: SolverNumerics pytree — lane-stacked ((B,) leaves: each lane
+        gets its own tolerance/budget/lr) or shared (scalar leaves); None
+        reads the config's values. Numeric grids ride as lanes of this one
+        executable instead of retracing per cell.
     Returns:
       SolveResult with a leading lane axis on every field.
     """
     lanes = b.shape[0]
     # Stacked params have a (B,) raw_signal; shared params a scalar.
     p_axis = 0 if jnp.ndim(params.raw_signal) > 0 else None
+    # Numerics may arrive with MIXED leaves (say a stacked lr but a shared
+    # scalar tolerance); broadcast every leaf to (B,) so one in_axes=0
+    # covers the whole pytree.
+    if numerics is not None:
+        numerics = broadcast_numerics(numerics, lanes)
+    n_axis = None if numerics is None else 0
     if keys is None:
         keys = jax.random.split(jax.random.PRNGKey(0), lanes)
 
-    def one(p, bl, v0l, kl):
+    def one(p, bl, v0l, kl, nm):
         op = HOperator(x=x, params=p, kind=kind, backend=backend, bm=bm, bn=bn)
-        return solve(op, bl, v0l, cfg, key=kl)
+        return solve(op, bl, v0l, cfg, key=kl, numerics=nm)
 
-    if v0 is None:
-        return jax.vmap(
-            lambda p, bl, kl: one(p, bl, None, kl), in_axes=(p_axis, 0, 0)
-        )(params, b, keys)
-    return jax.vmap(one, in_axes=(p_axis, 0, 0, 0))(params, b, v0, keys)
+    # v0=None / numerics=None are empty pytrees: in_axes=None broadcasts them.
+    v_axis = None if v0 is None else 0
+    return jax.vmap(one, in_axes=(p_axis, 0, v_axis, 0, n_axis))(
+        params, b, v0, keys, numerics
+    )
 
 
 __all__ = [
@@ -118,6 +144,11 @@ __all__ = [
     "solve_sgd",
     "SolveResult",
     "SolverConfig",
+    "SolverNumerics",
+    "numerics_of",
+    "strip_numerics",
+    "stack_numerics",
+    "broadcast_numerics",
     "HOperator",
     "kernel_mvm_tiled",
     "AUTO_RANK",

@@ -25,11 +25,14 @@ import jax.numpy as jnp
 from repro.solvers.base import (
     SolveResult,
     SolverConfig,
+    SolverNumerics,
     denormalise,
     freeze,
     lane_active,
+    max_iters_from_epochs,
     normalise_system,
     not_converged,
+    numerics_of,
     residual_norms,
 )
 from repro.solvers.operator import HOperator
@@ -49,7 +52,9 @@ def solve_ap(
     v0: Optional[jax.Array],
     cfg: SolverConfig,
     block_chols: Optional[jax.Array] = None,
+    numerics: Optional[SolverNumerics] = None,
 ) -> SolveResult:
+    num = numerics if numerics is not None else numerics_of(cfg)
     n = op.n
     bs = cfg.block_size
     if n % bs != 0:
@@ -59,9 +64,7 @@ def solve_ap(
         block_chols = op.all_block_cholesky(bs)
 
     sysn = normalise_system(b, v0)
-    max_iters = jnp.asarray(
-        min(nb * cfg.max_epochs, 2**31 - 1), dtype=jnp.int32
-    )
+    max_iters = max_iters_from_epochs(num.max_epochs, float(nb))
 
     r0 = sysn.b - op.mvm(sysn.v0)
     res_y0, res_z0 = residual_norms(r0)
@@ -72,13 +75,13 @@ def solve_ap(
 
     def cond(s: _APState):
         return jnp.logical_and(
-            s.t < max_iters, not_converged(s.res_y, s.res_z, cfg.tolerance)
+            s.t < max_iters, not_converged(s.res_y, s.res_z, num.tolerance)
         )
 
     def body(s: _APState):
         # Per-lane freeze mask (see solvers.base): no-op single-lane, keeps
         # converged lanes inert under vmap.
-        active = lane_active(s.t, max_iters, s.res_y, s.res_z, cfg.tolerance)
+        active = lane_active(s.t, max_iters, s.res_y, s.res_z, num.tolerance)
         # Greedy block selection by block-residual Frobenius norm.
         blk_norms = jnp.sum(
             s.r.reshape(nb, bs, -1) ** 2, axis=(1, 2)

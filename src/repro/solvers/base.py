@@ -21,9 +21,20 @@ body), but under ``jax.vmap`` the loop runs while ANY lane is unconverged
 and the mask is what keeps converged lanes frozen: their solution stops
 mutating and their per-lane ``iters``/``epochs`` counters stop, so each
 lane's trajectory is identical to a single-lane solve.
+
+Static vs traced configuration: :class:`SolverConfig` is the hashable,
+jit-static half (solver kind, shapes, flags — anything that changes the
+compiled program), while :class:`SolverNumerics` is the TRACED half
+(tolerance, epoch budget, learning rate, momentum, divergence threshold —
+values the program merely reads). Solvers accept an optional ``numerics``
+pytree and fall back to the config's scalar values, so a grid over numeric
+settings can ride as lane-stacked traced inputs of ONE executable instead
+of retracing per cell (see :func:`repro.solvers.solve_lanes` and
+``launch.batch``).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import NamedTuple, Optional
 
@@ -31,6 +42,10 @@ import jax
 import jax.numpy as jnp
 
 NORM_EPS = 1e-10
+
+# int32-safe iteration cap for traced epoch budgets: exactly representable
+# in float32 (2**31 - 1 is NOT — it rounds up and overflows the int32 cast).
+MAX_SOLVER_ITERS = 2**30
 
 
 @dataclass(frozen=True)
@@ -51,8 +66,88 @@ class SolverConfig:
     batch_size: int = 500
     learning_rate: float = 30.0
     momentum: float = 0.9
+    # Early-stop once res_y + res_z blows past this (or goes non-finite):
+    # a diverging lane freezes instead of burning its remaining budget.
+    # inf preserves the run-to-budget behaviour (SGD only).
+    divergence_threshold: float = float("inf")
     # Numerics
     exact_final_residual: bool = False  # extra full MVM for reporting
+
+
+# The numeric fields of SolverConfig — everything a compiled solver merely
+# READS, never specialises on. These become the SolverNumerics pytree.
+NUMERIC_FIELDS = (
+    "tolerance", "max_epochs", "learning_rate", "momentum",
+    "divergence_threshold",
+)
+
+
+class SolverNumerics(NamedTuple):
+    """Traced numeric solver settings (a pytree; lane-stackable).
+
+    The traced half of :class:`SolverConfig`: tolerance, epoch budget,
+    SGD learning rate / momentum, and the divergence cut-off. None of these
+    affect shapes or control-flow *structure*, so a sweep over them is data,
+    not a retrace: stack each leaf along a leading lane axis (see
+    :func:`stack_numerics`) and every cell of a tolerance x lr x budget grid
+    runs inside one executable. Scalar leaves broadcast to every lane.
+    """
+
+    tolerance: jax.Array
+    max_epochs: jax.Array
+    learning_rate: jax.Array
+    momentum: jax.Array
+    divergence_threshold: jax.Array
+
+
+def numerics_of(cfg: SolverConfig, dtype=jnp.float32) -> SolverNumerics:
+    """The config's numeric fields as a traced pytree (scalar leaves)."""
+    return SolverNumerics(*(
+        jnp.asarray(getattr(cfg, f), dtype) for f in NUMERIC_FIELDS
+    ))
+
+
+def strip_numerics(cfg: SolverConfig) -> SolverConfig:
+    """Canonical static signature: numeric fields reset to class defaults.
+
+    Two configs that agree after stripping compile to the SAME executable
+    when their numeric settings ride in as a :class:`SolverNumerics` pytree
+    — this is the group key ``launch.batch`` partitions solver-config
+    sweeps by.
+    """
+    defaults = {
+        f.name: f.default for f in dataclasses.fields(SolverConfig)
+        if f.name in NUMERIC_FIELDS
+    }
+    return dataclasses.replace(cfg, **defaults)
+
+
+def stack_numerics(nums: "list[SolverNumerics]") -> SolverNumerics:
+    """Stack per-cell numerics into one lane-stacked pytree (lane axis 0)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *nums)
+
+
+def broadcast_numerics(num: SolverNumerics, lanes: int) -> SolverNumerics:
+    """Broadcast scalar leaves to ``(lanes,)``; validates stacked leaves."""
+    def one(v):
+        v = jnp.asarray(v)
+        if v.ndim == 0:
+            return jnp.broadcast_to(v, (lanes,))
+        if v.shape != (lanes,):
+            raise ValueError(
+                f"numerics leaf shape {v.shape} does not match lanes={lanes}"
+            )
+        return v
+
+    return jax.tree.map(one, num)
+
+
+def max_iters_from_epochs(max_epochs: jax.Array, iters_per_epoch: float
+                          ) -> jax.Array:
+    """Traced iteration cap: ``iters_per_epoch * max_epochs``, int32-safe."""
+    cap = jnp.minimum(iters_per_epoch * max_epochs,
+                      jnp.float32(MAX_SOLVER_ITERS))
+    return cap.astype(jnp.int32)
 
 
 class SolveResult(NamedTuple):
@@ -94,14 +189,27 @@ def residual_norms(r: jax.Array) -> tuple[jax.Array, jax.Array]:
     return res_y, res_z
 
 
-def not_converged(res_y: jax.Array, res_z: jax.Array, tol: float) -> jax.Array:
-    """Continue while EITHER system family is above tolerance."""
+def not_converged(res_y: jax.Array, res_z: jax.Array, tol) -> jax.Array:
+    """Continue while EITHER system family is above tolerance.
+
+    ``tol`` may be a Python float or a traced (per-lane) array.
+    """
     return jnp.logical_or(res_y > tol, res_z > tol)
+
+
+def lane_diverged(res_y: jax.Array, res_z: jax.Array, threshold) -> jax.Array:
+    """Divergence cut-off: the summed residual blew past ``threshold`` or
+    went non-finite. With the default ``threshold=inf`` only the non-finite
+    arm can fire — and a non-finite iterate can never recover, so freezing
+    it early only saves budget without changing any decision made on the
+    final residual."""
+    total = res_y + res_z
+    return jnp.logical_or(~jnp.isfinite(total), total > threshold)
 
 
 def lane_active(
     t: jax.Array, max_iters: jax.Array, res_y: jax.Array, res_z: jax.Array,
-    tol: float,
+    tol,
 ) -> jax.Array:
     """This lane's own continue predicate — the solver while-loop cond.
 

@@ -22,11 +22,14 @@ import jax.numpy as jnp
 from repro.solvers.base import (
     SolveResult,
     SolverConfig,
+    SolverNumerics,
     denormalise,
     freeze,
     lane_active,
+    max_iters_from_epochs,
     normalise_system,
     not_converged,
+    numerics_of,
     residual_norms,
 )
 from repro.solvers.operator import HOperator
@@ -49,14 +52,14 @@ def solve_cg(
     v0: Optional[jax.Array],
     cfg: SolverConfig,
     precond: Optional[Preconditioner] = None,
+    numerics: Optional[SolverNumerics] = None,
 ) -> SolveResult:
+    num = numerics if numerics is not None else numerics_of(cfg)
     if precond is None:
         precond = build_preconditioner(op, cfg.precond_rank)
 
     sysn = normalise_system(b, v0)
-    max_iters = jnp.asarray(
-        min(cfg.max_epochs, 2**31 - 1), dtype=jnp.int32
-    )
+    max_iters = max_iters_from_epochs(num.max_epochs, 1.0)
 
     r0 = sysn.b - op.mvm(sysn.v0)
     p0 = precond.apply(r0)
@@ -69,14 +72,14 @@ def solve_cg(
 
     def cond(s: _CGState):
         return jnp.logical_and(
-            s.t < max_iters, not_converged(s.res_y, s.res_z, cfg.tolerance)
+            s.t < max_iters, not_converged(s.res_y, s.res_z, num.tolerance)
         )
 
     def body(s: _CGState):
         # This lane's own cond (freeze mask): a no-op single-lane, but under
         # vmap the loop runs while ANY lane is live and converged lanes must
         # stop mutating (and stop counting iterations).
-        active = lane_active(s.t, max_iters, s.res_y, s.res_z, cfg.tolerance)
+        active = lane_active(s.t, max_iters, s.res_y, s.res_z, num.tolerance)
         hd = op.mvm(s.d)
         denom = jnp.sum(s.d * hd, axis=0)
         # Guard converged columns (denom -> 0) against 0/0.

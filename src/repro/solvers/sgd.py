@@ -14,6 +14,11 @@ search (config value). Following Algorithm 3 the residual estimate is
 initialised at ``b`` (stale under warm starts until refreshed); set
 ``cfg.exact_final_residual=True`` to spend one extra epoch on an exact
 residual for reporting.
+
+Divergence cut-off: a lane whose summed residual blows past
+``divergence_threshold`` (or goes non-finite) freezes instead of spending
+its remaining budget — the early-stop arm of the lr grid search and of
+per-lane numeric sweeps. The default threshold is inf (non-finite-only).
 """
 from __future__ import annotations
 
@@ -25,11 +30,14 @@ import jax.numpy as jnp
 from repro.solvers.base import (
     SolveResult,
     SolverConfig,
+    SolverNumerics,
     denormalise,
     freeze,
     lane_active,
+    lane_diverged,
+    max_iters_from_epochs,
     normalise_system,
-    not_converged,
+    numerics_of,
     residual_norms,
 )
 from repro.solvers.operator import HOperator
@@ -51,7 +59,9 @@ def solve_sgd(
     v0: Optional[jax.Array],
     cfg: SolverConfig,
     key: Optional[jax.Array] = None,
+    numerics: Optional[SolverNumerics] = None,
 ) -> SolveResult:
+    num = numerics if numerics is not None else numerics_of(cfg)
     n = op.n
     bs = cfg.batch_size
     if n % bs != 0:
@@ -61,9 +71,7 @@ def solve_sgd(
         key = jax.random.PRNGKey(0)
 
     sysn = normalise_system(b, v0)
-    max_iters = jnp.asarray(
-        min(nb * cfg.max_epochs, 2**31 - 1), dtype=jnp.int32
-    )
+    max_iters = max_iters_from_epochs(num.max_epochs, float(nb))
 
     r0 = sysn.b  # Alg. 3 line 4: r <- b (stale under warm start until refreshed)
     res_y0, res_z0 = residual_norms(r0)
@@ -77,10 +85,18 @@ def solve_sgd(
         res_z=res_z0,
     )
 
-    def cond(s: _SGDState):
+    def _active(s: _SGDState):
+        # Converged-or-budget-exhausted OR diverged past the cut-off: either
+        # way this lane is done. The same predicate serves as the while-loop
+        # cond and the per-lane freeze mask so lane and single-lane
+        # trajectories agree.
         return jnp.logical_and(
-            s.t < max_iters, not_converged(s.res_y, s.res_z, cfg.tolerance)
+            lane_active(s.t, max_iters, s.res_y, s.res_z, num.tolerance),
+            ~lane_diverged(s.res_y, s.res_z, num.divergence_threshold),
         )
+
+    def cond(s: _SGDState):
+        return _active(s)
 
     bn = sysn.b
 
@@ -89,7 +105,7 @@ def solve_sgd(
         # converged lanes inert under vmap. The key still advances on frozen
         # lanes, but their drawn batch index is masked out with everything
         # else, so each live lane's key sequence matches a single-lane run.
-        active = lane_active(s.t, max_iters, s.res_y, s.res_z, cfg.tolerance)
+        active = _active(s)
         # Random contiguous block = random row batch with O(1) index logic;
         # block boundaries are randomised by the data shuffle, and a uniform
         # block is an unbiased minibatch of rows.
@@ -104,7 +120,7 @@ def solve_sgd(
         # touches every row (as in Alg. 3: m <- rho m - (gamma/b) g).
         g_full = jnp.zeros_like(s.v)
         g_full = jax.lax.dynamic_update_slice(g_full, gb, (start, 0))
-        m = cfg.momentum * mb_prev - (cfg.learning_rate / bs) * g_full
+        m = num.momentum * mb_prev - (num.learning_rate / bs) * g_full
         v = s.v + m
         # Sparse residual refresh: r[idx] <- -g[idx].
         r = jax.lax.dynamic_update_slice(s.r, -gb, (start, 0))

@@ -101,6 +101,55 @@ def test_pallas_vjp_matches_dense_ad(kind):
                                    rtol=2e-4, atol=2e-4)
 
 
+def test_m12_dkappa_exact_zero_on_clamped_diagonal():
+    """Matérn-1/2 subgradient at coincident points: the registered dkappa
+    must be EXACTLY zero on the clamped region (r2 <= floor) — the floored
+    slope -1/(2*sqrt(floor)) ~ -5e5 it used to return there is what biased
+    lengthscale gradients on duplicated inputs — and the true (negative)
+    slope above it."""
+    spec = get_kernel("matern12")
+    for r2 in (0.0, 1e-14, 1e-13, 1e-12):
+        assert float(spec.dkappa_dr2(jnp.float32(r2))) == 0.0, r2
+    assert float(spec.dkappa_dr2(jnp.float32(1e-10))) < -1e3  # steep, not 0
+    assert float(spec.dkappa_dr2(jnp.float32(1.0))) < -0.1
+
+
+def _m12_mvm_direct(x1, x2, v, p):
+    """f32 oracle with per-pair differences: duplicate rows land at r2
+    EXACTLY 0 (no expanded-quadratic round-off) and the where-gate gives
+    them an exactly-zero gradient contribution."""
+    diff = (x1[:, None, :] - x2[None, :, :]) / p.lengthscales
+    r2 = jnp.sum(diff * diff, -1)
+    safe = jnp.where(r2 > 0, r2, 1.0)
+    kappa = jnp.where(r2 > 0, jnp.exp(-jnp.sqrt(safe)), 1.0)
+    return (p.signal**2 * kappa) @ v
+
+
+def test_m12_lengthscale_grads_unbiased_on_duplicate_rows():
+    """Regression (ROADMAP: Matérn-1/2 gradients at coincident points):
+    on data containing duplicate rows, lengthscale gradients through the
+    production MVM paths must match the direct-difference oracle. With the
+    pre-fix floored dkappa slope the fused-backward-tile error here was
+    ~2.1 on a gradient of magnitude ~7 (a 30% bias); subgradient-aware
+    dkappa brings it to fp32 round-off."""
+    base = jnp.round(jax.random.normal(jax.random.PRNGKey(0), (24, 2)) * 4) / 4.0
+    x = jnp.concatenate([base, base], axis=0)  # every row duplicated exactly
+    v = jax.random.normal(jax.random.PRNGKey(1), (48, 3))
+    p = HyperParams.create(2, lengthscale=0.9, signal=1.2, noise=0.3,
+                           kernel="matern12")
+
+    def loss(fn):
+        return lambda pp: jnp.sum(jnp.sin(fn(x, x, v, pp)))
+
+    g_oracle = jax.grad(loss(_m12_mvm_direct))(p)
+    for fn in (lambda a, b, c, pp: kernel_mvm(a, b, c, pp, bm=16, bn=16),
+               kernel_mvm_ref):
+        g = jax.grad(loss(fn))(p)
+        for leaf, ref in zip(jax.tree.leaves(g), jax.tree.leaves(g_oracle)):
+            np.testing.assert_allclose(np.asarray(leaf), np.asarray(ref),
+                                       rtol=1e-2, atol=5e-3)
+
+
 @pytest.mark.parametrize("kind", SMOOTH_KERNELS)
 def test_pallas_vjp_symmetric_inputs(kind):
     """x1 is x2 (the GP case): gradients flow through both roles."""
@@ -147,8 +196,10 @@ def test_h_mvm_adds_noise_diagonal(kind):
 def test_rff_covariance_recovery(kind):
     """phi(x) phi(x)^T ~= K(x, x) for the kernel's spectral sampler.
 
-    Matérn-1/2's Cauchy-tailed spectrum converges slowest; the shared bound
-    is calibrated to m=8000 pairs at these seeds.
+    Bounds calibrated to m=8000 pairs at these seeds. Matérn-1/2's
+    Cauchy-tailed spectrum used to converge slowest and carried the loosest
+    bound; with the stratified mixture draws its tail coverage is exact by
+    construction and its bound is now the TIGHTEST of the family.
     """
     d = 2
     x = jax.random.normal(jax.random.PRNGKey(0), (30, d))
@@ -157,7 +208,8 @@ def test_rff_covariance_recovery(kind):
     phi = rff_features(x, st, p)
     k_hat = phi @ phi.T
     k = kernel_matrix(x, x, p)
-    assert float(jnp.max(jnp.abs(k_hat - k))) < 0.1 * float(p.signal) ** 2
+    bound = 0.05 if kind == "matern12" else 0.1
+    assert float(jnp.max(jnp.abs(k_hat - k))) < bound * float(p.signal) ** 2
 
 
 def test_hyperparams_kernel_field_survives_tree_maps():

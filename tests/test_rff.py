@@ -60,6 +60,58 @@ def test_lengthscale_reparameterisation_deterministic():
     assert 0 < float(jnp.max(jnp.abs(f3 - f1))) < 0.5
 
 
+def test_m12_mixture_draws_are_stratified():
+    """Matérn-1/2 mixture draws are stratified inverse-CDF (QMC): exactly
+    one draw per probability stratum of the chi^2_1 law, every seed — the
+    tail-coverage property iid Cauchy-spectrum sampling cannot give."""
+    from jax.scipy.stats import norm
+
+    from repro.kernels.registry import get_kernel
+
+    m = 512
+    for seed in (0, 1, 2):
+        u = np.sort(np.asarray(
+            get_kernel("matern12").mixture_sample(jax.random.PRNGKey(seed), m)
+        ))
+        # chi^2_1 CDF: F(u) = 2 Phi(sqrt(u)) - 1; draw i must land in
+        # stratum (i/m, (i+1)/m).
+        f = 2.0 * np.asarray(norm.cdf(jnp.sqrt(u))) - 1.0
+        bins = np.floor(f * m).astype(int)
+        np.testing.assert_array_equal(np.clip(bins, 0, m - 1), np.arange(m))
+    # still random: different seeds jitter within strata
+    u0 = get_kernel("matern12").mixture_sample(jax.random.PRNGKey(0), m)
+    u1 = get_kernel("matern12").mixture_sample(jax.random.PRNGKey(1), m)
+    assert float(jnp.max(jnp.abs(u0 - u1))) > 0
+    # strictly positive and finite at every stratum: the two clamps guard
+    # u -> 0 (infinite mixture scale) and the top stratum's (1+p)/2
+    # rounding to 1.0 in f32 (ndtri -> inf).
+    for seed in range(8):
+        u = get_kernel("matern12").mixture_sample(
+            jax.random.PRNGKey(seed), 4096)
+        assert bool(jnp.all(jnp.isfinite(u))) and bool(jnp.all(u > 0))
+
+
+def test_per_kernel_default_feature_counts():
+    """init_rff resolves num_pairs=None / AUTO to the kernel's default; the
+    Cauchy-tailed matern12 gets more features than the light-tailed rest."""
+    from repro.gp.rff import AUTO_NUM_PAIRS, default_num_pairs
+
+    assert default_num_pairs("matern12") > default_num_pairs("rbf")
+    assert default_num_pairs("not-registered-yet") == 1000
+    st = init_rff(jax.random.PRNGKey(0), None, 2, 1, kind="matern12")
+    assert st.z.shape[0] == default_num_pairs("matern12")
+    st = init_rff(jax.random.PRNGKey(0), AUTO_NUM_PAIRS, 2, 1, kind="rbf")
+    assert st.z.shape[0] == default_num_pairs("rbf")
+    st = init_rff(jax.random.PRNGKey(0), 64, 2, 1, kind="matern12")
+    assert st.z.shape[0] == 64  # explicit counts still win
+    # the production sweep path actually uses the per-kernel defaults
+    from repro.configs.gp_iterative import KERNEL_SWEEP
+
+    by_kind = {a.kind: a.num_rff_pairs for a in KERNEL_SWEEP}
+    assert by_kind["matern12"] == default_num_pairs("matern12")
+    assert by_kind["rbf"] == default_num_pairs("rbf")
+
+
 def test_matern_frequency_tails_heavier_than_gaussian():
     """Matérn-3/2 spectral density is a t_3 — heavier tails than RBF."""
     d = 1

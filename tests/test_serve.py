@@ -317,6 +317,58 @@ def test_block_refresh_coupling_residual_flags_overlap(block_fit):
     )
 
 
+def test_auto_refresh_stays_block_under_weak_coupling(block_fit):
+    """ROADMAP follow-up (b): mode="auto" triggers block-vs-full off the
+    reported coupling residual. Weakly coupled appends (a far-away cluster)
+    leave the residual at ~tolerance scale, so auto must keep the cheap
+    block path: no escalation, block-refresh epoch accounting."""
+    k = 16
+    x_new = block_fit["x"][:k] + 8.0
+    y_new = jax.random.normal(jax.random.PRNGKey(3), (k,)) * 0.5
+    o = OnlineGP(block_fit["x"], block_fit["y"], block_fit["state"],
+                 block_fit["cfg"])
+    o.append(x_new, y_new)
+    report = o.refine(mode="auto")
+    assert report.mode == "auto" and not report.escalated
+    assert report.block_rows == k and report.block_epochs > 0
+    # still the incremental price: a tiny fraction of a full epoch
+    assert report.epochs < 1.0, report.epochs
+    tol = block_fit["cfg"].solver.tolerance
+    assert max(report.res_y, report.res_z) <= 5.0 * tol
+
+
+def test_auto_refresh_escalates_under_strong_coupling(block_fit):
+    """Strongly coupled appends (same region as the bulk) push the coupling
+    residual orders of magnitude past tolerance: auto must pay the full
+    re-solve — warm from the block-corrected carry — and report both the
+    escalation and a residual back at solver tolerance, instead of
+    silently returning a large res_y as plain mode="block" does."""
+    x_new, y_new = block_fit["overlap"]
+    blocked = OnlineGP(block_fit["x"], block_fit["y"], block_fit["state"],
+                       block_fit["cfg"])
+    blocked.append(x_new, y_new)
+    block_report = blocked.refine(mode="block")  # the silent-residual path
+
+    o = OnlineGP(block_fit["x"], block_fit["y"], block_fit["state"],
+                 block_fit["cfg"])
+    o.append(x_new, y_new)
+    report = o.refine(mode="auto")
+    tol = block_fit["cfg"].solver.tolerance
+    assert report.mode == "auto" and report.escalated
+    assert block_report.res_y > 5.0 * tol  # block alone left it unsolved
+    assert max(report.res_y, report.res_z) <= tol * 1.01  # auto solved it
+    # escalation charges block attempt + full solve: more than either alone
+    assert report.epochs > block_report.epochs
+    assert report.block_rows == x_new.shape[0]
+    # an explicit lax threshold keeps the block path instead
+    o2 = OnlineGP(block_fit["x"], block_fit["y"], block_fit["state"],
+                  block_fit["cfg"])
+    o2.append(x_new, y_new)
+    lax_report = o2.refine(mode="auto", coupling_threshold=10.0)
+    assert not lax_report.escalated
+    assert lax_report.epochs < report.epochs
+
+
 def test_block_refresh_requires_warm_and_noop_without_appends(block_fit):
     o = OnlineGP(block_fit["x"], block_fit["y"], block_fit["state"],
                  block_fit["cfg"])
