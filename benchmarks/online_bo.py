@@ -1,0 +1,160 @@
+"""Online sequential inference: a BO loop on the serving engine, warm vs cold.
+
+The sequential regime is where the paper's warm-start machinery compounds:
+every acquisition round appends ONE observation, so re-solving the linear
+systems from scratch (the cold baseline) repays nearly the full solve cost
+for a rank-one change, while the warm path reuses the carry — block
+refresh on the appended row, damped old-row correction, auto-escalation
+only when the corrected residual stays above threshold (see
+``repro.online.bo.run_bo`` and Dong et al., 2025).
+
+One A/B on a Gaussian-bumps objective, both arms running the IDENTICAL
+loop (same engine, same candidate draws, same tolerance, same geometric
+capacity reservation — so shapes, compiles, and acquisition behaviour
+match) differing only in the refresh policy:
+
+  * **warm** — ``refine(mode="auto", correction="damped")`` per round;
+  * **cold** — ``refine(mode="solve", warm=False)`` per round (full
+    re-solve from zero initialisation).
+
+Asserted (the tentpole's acceptance bars):
+
+  * warm cumulative solver epochs <= 0.5 x cold;
+  * ZERO engine retraces after bucket warmup, both arms;
+  * the warm arm compiles O(log N) solver executables for its N appends
+    (with up-front reservation: exactly one full + one block executable).
+
+Emits ``BENCH_online_bo.json`` (merged by ``benchmarks/run.py``) and the
+``name,us_per_call,derived`` CSV lines the runner parses. Preconditioning
+is disabled in both arms: at benchmark sizes a rank-100 preconditioner is
+essentially exact, which would hide the cold arm's true per-round cost.
+
+Run: PYTHONPATH=src python benchmarks/online_bo.py [--full]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from repro.core import OuterConfig, fit
+from repro.gp.hyperparams import HyperParams
+from repro.online import BOConfig, make_gaussian_bumps, run_bo
+from repro.solvers import SolverConfig
+
+from common import csv_line
+
+
+def _fit_initial(objective, key, n0, d, cfg):
+    x0 = jax.random.uniform(
+        jax.random.fold_in(key, 0), (n0, d), minval=-1.0, maxval=1.0,
+        dtype=jax.numpy.float32,
+    )
+    y0 = objective(x0)
+    params = HyperParams.create(d, lengthscale=0.3, signal=1.0, noise=0.1)
+    res = fit(x0, y0, cfg, key=jax.random.fold_in(key, 1),
+              init_params=params)
+    return x0, y0, res.state
+
+
+def main(small: bool = True, out_dir: str = "artifacts/bench",
+         smoke: bool = False):
+    if smoke:  # CI tier: same loop and asserts, minutes -> seconds
+        rounds, n0, num_candidates = 60, 128, 256
+    else:
+        rounds = 200 if small else 400
+        n0 = 256 if small else 512
+        num_candidates = 512 if small else 2048
+    d = 2
+    key = jax.random.PRNGKey(0)
+    objective, f_opt = make_gaussian_bumps(jax.random.fold_in(key, 7), d=d)
+
+    scfg = SolverConfig(name="cg", tolerance=1e-2, precond_rank=0)
+    cfg = OuterConfig(
+        estimator="pathwise", num_probes=8, num_rff_pairs=128,
+        solver=scfg, num_steps=5, bm=256, bn=256,
+    )
+    x0, y0, state = _fit_initial(objective, key, n0, d, cfg)
+
+    arms = {
+        "warm": BOConfig(rounds=rounds, num_candidates=num_candidates,
+                         refresh_mode="auto", correction="damped"),
+        "cold": BOConfig(rounds=rounds, num_candidates=num_candidates,
+                         warm=False),
+    }
+    results = {}
+    for name, bo in arms.items():
+        t0 = time.perf_counter()
+        out = run_bo(objective, x0, y0, state, cfg, bo=bo,
+                     bounds=(-1.0, 1.0), f_opt=f_opt)
+        wall = time.perf_counter() - t0
+        results[name] = out
+        csv_line(
+            f"online_bo_{name}_round", wall / rounds * 1e6,
+            f"epochs={out.cum_epochs:.1f} escalations={out.escalations} "
+            f"corrections={out.corrections} regret={out.regret:.4f} "
+            f"retraces={out.engine_retraces}",
+        )
+
+    warm, cold = results["warm"], results["cold"]
+    ratio = warm.cum_epochs / max(cold.cum_epochs, 1e-9)
+    print(f"# online-bo: {rounds} rounds x {num_candidates} candidates, "
+          f"n0={n0}: warm {warm.cum_epochs:.1f} epochs vs cold "
+          f"{cold.cum_epochs:.1f} ({ratio:.3f}x), "
+          f"warm {warm.rounds_per_sec:.1f} rounds/s, "
+          f"escalations={warm.escalations}, regret={warm.regret:.4f}")
+
+    # Acceptance bars — a regression in the warm path fails the benchmark
+    # loudly rather than drifting.
+    assert ratio <= 0.5, (
+        f"warm cumulative epochs {warm.cum_epochs:.1f} > 0.5x cold "
+        f"{cold.cum_epochs:.1f} (ratio {ratio:.3f})"
+    )
+    for name, out in results.items():
+        assert out.engine_retraces in (None, 0), (
+            f"{name}: {out.engine_retraces} engine retraces after warmup"
+        )
+    if warm.solve_compiles is not None:
+        # One full-system + one block executable: capacity is reserved up
+        # front, so N appends never change a traced shape.
+        assert warm.solve_compiles <= 4, (
+            f"warm arm compiled {warm.solve_compiles} solver executables; "
+            f"expected O(1) with reserved capacity"
+        )
+
+    def arm_report(out):
+        return {
+            "cum_epochs": out.cum_epochs,
+            "escalations": out.escalations,
+            "corrections": out.corrections,
+            "rounds_per_sec": out.rounds_per_sec,
+            "engine_retraces": out.engine_retraces,
+            "solve_compiles": out.solve_compiles,
+            "best_y": out.best_y,
+            "regret": out.regret,
+            "refresh_stats": out.refresh_stats,
+        }
+
+    report = {
+        "rounds": rounds, "num_candidates": num_candidates, "n0": n0,
+        "d": d, "f_opt": f_opt, "tolerance": scfg.tolerance,
+        "epoch_ratio_warm_over_cold": ratio,
+        "warm": arm_report(warm), "cold": arm_report(cold),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "BENCH_online_bo.json"), "w") as f:
+        json.dump(report, f, indent=2, default=str)
+    print("[online-bo] OK")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized loop (60 rounds); asserts still apply")
+    ap.add_argument("--out-dir", default="artifacts/bench")
+    args = ap.parse_args()
+    main(small=not args.full, out_dir=args.out_dir, smoke=args.smoke)

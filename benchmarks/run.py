@@ -31,6 +31,7 @@ MODULES = [
     "batched_sweep",
     "sharded_sweep",
     "serve_cluster",
+    "online_bo",
 ]
 
 

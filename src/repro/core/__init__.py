@@ -20,6 +20,7 @@ from repro.core.outer import (
     effective_kind,
     exact_outer_step,
     extend_state,
+    grow_capacity,
     init_outer_state,
     init_outer_state_lanes,
     num_lanes,
@@ -53,7 +54,8 @@ __all__ = [
     "expected_initial_sqdistance", "init_probes", "probe_targets",
     "exact_grad_reference", "mll_grad_estimate",
     "OuterConfig", "OuterState", "effective_kind", "exact_outer_step",
-    "extend_state", "init_outer_state", "init_outer_state_lanes",
+    "extend_state", "grow_capacity", "init_outer_state",
+    "init_outer_state_lanes",
     "num_lanes", "outer_scan", "outer_step", "outer_step_lanes",
     "stack_states", "unstack_state",
     "Predictions", "correction_matrix", "mean_only_predict",

@@ -63,6 +63,8 @@ GRAD_EPOCH_EQUIV = 3.0
 
 @dataclass
 class FitResult:
+    """What `fit`/`fit_batch` return: final state + per-step history."""
+
     state: OuterState
     history: dict  # str -> np.ndarray over steps
     wall_time_s: float

@@ -63,6 +63,18 @@ def init_probes(
     kind: str = "matern32",
     dtype=jnp.float32,
 ) -> ProbeState:
+    """Draw the probe randomness for one fit.
+
+    Args:
+      key: PRNG key.
+      estimator: `STANDARD` (n-dim Gaussian probes z) or `PATHWISE` (RFF
+        prior-sample state + (n, s) base noise w_eps).
+      n: training rows; d: input dimension; num_probes: s.
+      num_rff_pairs: sin/cos feature pairs for the pathwise prior samples.
+      kind: registered kernel name (selects the RFF spectral sampler).
+    Returns:
+      A `ProbeState` pytree (estimator name rides as static aux data).
+    """
     if estimator == STANDARD:
         z = jax.random.normal(key, (n, num_probes), dtype=dtype)
         return ProbeState(estimator=STANDARD, z=z, rff=None, w_eps=None)

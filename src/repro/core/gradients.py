@@ -32,6 +32,8 @@ from repro.solvers.operator import kernel_mvm_tiled
 
 
 class GradAux(NamedTuple):
+    """Diagnostics returned alongside the MLL gradient estimate."""
+
     data_fit: jax.Array  # -1/2 y^T v_y (the quadratic MLL term, for logging)
     quad_value: jax.Array  # value of the surrogate S (diagnostic)
 

@@ -22,6 +22,7 @@ shapes) stays per-executable; grids over it are partitioned by
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field, replace
 from functools import partial
 from typing import NamedTuple, Optional
@@ -44,6 +45,13 @@ from repro.train.adam import AdamConfig, AdamState, adam_init, adam_update
 
 @dataclass(frozen=True)
 class OuterConfig:
+    """Static configuration of the outer MLL loop (hashable, jit-static).
+
+    Composes the paper's three-level hierarchy: the gradient estimator
+    (standard | pathwise), warm starting, and the inner `SolverConfig`,
+    around Adam on the marginal likelihood.
+    """
+
     estimator: str = PATHWISE  # standard | pathwise
     warm_start: bool = True
     num_probes: int = 64  # s (paper default)
@@ -89,6 +97,17 @@ def init_outer_state(
     x: jax.Array,
     init_params: Optional[HyperParams] = None,
 ) -> OuterState:
+    """Fresh `OuterState`: hyperparameters, Adam, probes, zero carry.
+
+    Args:
+      key: PRNG key (split for hypers / probes / the evolving state key).
+      cfg: outer-loop config (probe counts, estimator, kernel precedence).
+      x: (n, d) training inputs (fixes shapes and dtype).
+      init_params: starting `HyperParams`; a kernel-matched default when
+        None.
+    Returns:
+      An `OuterState` with (n, 1+s) zero warm-start carry.
+    """
     n, d = x.shape
     kp, kprobe, krest = jax.random.split(key, 3)
     if init_params is not None:
@@ -113,6 +132,46 @@ def init_outer_state(
         last_res_y=z, last_res_z=z,
         last_iters=jnp.zeros((), jnp.int32), last_epochs=z,
     )
+
+
+# Geometric capacity-growth factor for sequential appends (online serving /
+# BO loops): growing the carry to factor^j * base instead of by the exact
+# append size keeps the number of DISTINCT system shapes — and therefore the
+# number of compiled solver executables — at O(log N) over N appended rows,
+# instead of one retrace per round.
+GROWTH_FACTOR = 2.0
+MIN_CAPACITY = 16
+
+
+def grow_capacity(
+    current: int,
+    needed: int,
+    factor: float = GROWTH_FACTOR,
+    minimum: int = MIN_CAPACITY,
+) -> int:
+    """Geometric capacity schedule for append-heavy workloads.
+
+    Returns the smallest capacity ``>= needed`` on the geometric ladder
+    ``max(current, minimum) * factor^j`` (j >= 0). Repeated calls over N
+    one-row appends therefore return O(log N) distinct values — the compile
+    count of any shape-specialised consumer (solvers, the serving engine)
+    stays logarithmic in the stream length.
+
+    Args:
+      current: the present capacity (row count) of the padded arrays.
+      needed: the minimum capacity that must be accommodated.
+      factor: geometric growth factor (> 1).
+      minimum: floor for the first allocation.
+    Returns:
+      int capacity ``>= max(needed, current)``.
+    """
+    if factor <= 1.0:
+        raise ValueError(f"growth factor must be > 1, got {factor}")
+    cap = max(int(current), int(minimum))
+    needed = int(needed)
+    while cap < needed:
+        cap = max(cap + 1, int(math.ceil(cap * factor)))
+    return cap
 
 
 def extend_state(

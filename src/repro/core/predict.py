@@ -26,6 +26,8 @@ from repro.solvers.operator import kernel_mvm_tiled
 
 
 class Predictions(NamedTuple):
+    """Posterior at query points: mean, variance, and sample paths."""
+
     mean: jax.Array  # (m,) latent posterior mean k(xs,x) v_y
     var: jax.Array  # (m,) latent variance (sample estimate over s paths)
     samples: jax.Array  # (m, s) posterior function samples at xs

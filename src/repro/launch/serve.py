@@ -207,7 +207,14 @@ def serve_gp_http(args, ds, cfg, state):
         buckets=buckets, rate_qps=args.admission_qps,
         burst=args.admission_burst, max_inflight=args.max_inflight,
     )
-    frontend = ServeFrontend(server, admission)
+    online = None
+    if args.refresh_every:
+        # In-place refresh replica: expose the refresher's counters
+        # (escalations, coupling residuals, capacity growth) on GET /stats.
+        from repro.serve import OnlineGP
+
+        online = OnlineGP(ds.x_train, ds.y_train, state, cfg)
+    frontend = ServeFrontend(server, admission, refresh_source=online)
     httpd, _ = start_http_server(frontend, host=host, port=port)
     endpoint = f"http://{host}:{httpd.port}"
     print(f"[serve-http] in-process replica: {endpoint}")

@@ -1,0 +1,33 @@
+"""Sequential decision-making on the serving stack (online BO driver).
+
+The paper's warm-starting and budget machinery pays off most when solves
+are *sequential* — the regime of Dong et al. (2025): each acquisition step
+appends one observation and refreshes the model from the previous solver
+state instead of re-solving cold. This package closes that loop end to end:
+
+  * :mod:`repro.online.acquisition` — batched, jitted UCB / expected
+    improvement scoring + argmax over a fixed-size candidate set (one
+    executable per acquisition name; round number, incumbent and
+    exploration weights ride as traced scalars).
+  * :mod:`repro.online.bo` — :func:`run_bo`, the acquire -> observe ->
+    append -> refresh -> predict loop on `OnlineGP` + `BucketedEngine`,
+    with per-round refresh-mode selection, cumulative epoch/escalation
+    accounting, and regret tracking against a known optimum.
+"""
+from repro.online.acquisition import (
+    ACQUISITIONS,
+    acquisition_argmax,
+    expected_improvement,
+    ucb,
+)
+from repro.online.bo import (
+    BOConfig,
+    BOResult,
+    make_gaussian_bumps,
+    run_bo,
+)
+
+__all__ = [
+    "ACQUISITIONS", "acquisition_argmax", "expected_improvement", "ucb",
+    "BOConfig", "BOResult", "make_gaussian_bumps", "run_bo",
+]

@@ -1,0 +1,95 @@
+"""Batched, jitted acquisition scoring for the online BO driver.
+
+Both acquisitions are pure functions of the engine's pathwise posterior
+``(mean, var)`` at the candidate set, so the whole acquire step is: one
+bucketed engine predict (already jitted and warmed) + one call to
+:func:`acquisition_argmax` (jitted here, one executable per acquisition
+name and candidate-set shape). The incumbent ``best`` and the exploration
+weights ``beta``/``xi`` are TRACED scalars — annealing them per round does
+not retrace — so after the first round the steady state is exactly zero
+compiles per round. All scores follow the maximisation convention (the
+driver negates the objective to minimise).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.stats import norm
+
+# Variance estimates from a finite pathwise sample set can brush zero (or
+# dip microscopically negative); clamp before sqrt so EI/UCB stay finite.
+MIN_VARIANCE = 1e-12
+
+
+def ucb(mean: jax.Array, var: jax.Array, beta=2.0) -> jax.Array:
+    """Upper confidence bound ``mean + beta * sqrt(var)``.
+
+    Args:
+      mean: (m,) posterior mean at the candidates.
+      var: (m,) posterior variance (clamped at ``MIN_VARIANCE``).
+      beta: exploration weight (scalar, float or traced).
+    Returns:
+      (m,) scores; larger is better.
+    """
+    return mean + beta * jnp.sqrt(jnp.maximum(var, MIN_VARIANCE))
+
+
+def expected_improvement(
+    mean: jax.Array, var: jax.Array, best=0.0, xi=0.01
+) -> jax.Array:
+    """Expected improvement over the incumbent, ``E[max(f - best - xi, 0)]``.
+
+    Args:
+      mean: (m,) posterior mean at the candidates.
+      var: (m,) posterior variance (clamped at ``MIN_VARIANCE``).
+      best: incumbent objective value (scalar, float or traced).
+      xi: exploration margin added to the incumbent.
+    Returns:
+      (m,) scores; larger is better. The closed form
+      ``d * Phi(d / s) + s * phi(d / s)`` with ``d = mean - best - xi`` and
+      ``s = sqrt(var)`` is used throughout (the clamp keeps ``s > 0``).
+    """
+    s = jnp.sqrt(jnp.maximum(var, MIN_VARIANCE))
+    d = mean - best - xi
+    z = d / s
+    return d * norm.cdf(z) + s * norm.pdf(z)
+
+
+ACQUISITIONS = {"ucb": ucb, "ei": expected_improvement}
+
+
+@partial(jax.jit, static_argnames=("name",))
+def acquisition_argmax(
+    mean: jax.Array,
+    var: jax.Array,
+    name: str = "ucb",
+    best: jax.Array | float = 0.0,
+    beta: jax.Array | float = 2.0,
+    xi: jax.Array | float = 0.01,
+) -> tuple[jax.Array, jax.Array]:
+    """Score every candidate and pick the argmax, in one jitted program.
+
+    Args:
+      mean: (m,) posterior mean at the candidates.
+      var: (m,) posterior variance at the candidates.
+      name: acquisition name (static): ``"ucb"`` or ``"ei"``.
+      best: incumbent objective value (traced; used by EI).
+      beta: UCB exploration weight (traced).
+      xi: EI exploration margin (traced).
+    Returns:
+      ``(idx, score)`` — the winning candidate's index (int32 scalar) and
+      its acquisition score. One executable per (name, m); the traced
+      scalars make per-round annealing free.
+    """
+    if name not in ACQUISITIONS:
+        raise ValueError(
+            f"unknown acquisition {name!r}; have {sorted(ACQUISITIONS)}"
+        )
+    if name == "ucb":
+        scores = ucb(mean, var, beta=beta)
+    else:
+        scores = expected_improvement(mean, var, best=best, xi=xi)
+    idx = jnp.argmax(scores)
+    return idx, scores[idx]

@@ -1,0 +1,253 @@
+"""Sequential BO driver: acquire -> observe -> append -> refresh -> predict.
+
+One round is: (1) draw a fixed-size candidate set, (2) predict through the
+bucketed serving engine (jitted pathwise predictor, shapes pinned by the
+candidate count), (3) pick the acquisition argmax (jitted,
+:func:`repro.online.acquisition.acquisition_argmax`), (4) evaluate the
+objective there, (5) `OnlineGP.append` the observation, (6) refresh with
+the configured mode (block / auto-escalate / full solve) and atomically
+swap the new artifact into the engine. Hundreds of rounds run with ZERO
+retraces after warmup because every moving part keeps its shape: the
+candidate set is a fixed engine bucket, the training arrays sit on the
+geometric capacity ladder (`growth="geometric"` + ``reserve=rounds``), and
+all per-round numerics (budgets, incumbent, exploration weights) ride as
+traced scalars.
+
+The driver is also the measurement harness the paper's warm-start story
+needs in the sequential regime: it accumulates solver epochs round by
+round, counts block-refresh escalations and damped corrections, and tracks
+simple regret, so a warm run and a cold-re-solve baseline
+(``BOConfig(warm=False)``) are directly comparable — see
+``benchmarks/online_bo.py``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.estimators import PATHWISE
+from repro.core.outer import OuterConfig, OuterState
+from repro.online.acquisition import ACQUISITIONS, acquisition_argmax
+from repro.serve.engine import BucketedEngine
+from repro.serve.refresh import (
+    CORRECTION_DAMPING,
+    CORRECTION_EPOCHS,
+    GROWTH_GEOMETRIC,
+    OnlineGP,
+)
+
+
+@dataclass(frozen=True)
+class BOConfig:
+    """Knobs of the sequential loop (static per run).
+
+    ``warm=True`` is the paper's sequential-inference path: appends refresh
+    via ``refresh_mode`` (default ``"auto"``: block refresh with damped
+    old-row correction, escalating to a warm full solve only when the
+    corrected residual stays above threshold). ``warm=False`` is the
+    cold-re-solve control: every refresh is a full ``mode="solve"`` from a
+    zero initialisation — same engine, same shapes, same tolerance, so the
+    cumulative-epoch ratio isolates exactly the warm-start + block-refresh
+    saving.
+    """
+
+    rounds: int = 200  # acquisition rounds (one append each)
+    num_candidates: int = 512  # fixed candidate-set size (= engine bucket)
+    acquisition: str = "ucb"  # "ucb" | "ei"
+    beta: float = 2.0  # UCB exploration weight
+    xi: float = 0.01  # EI exploration margin
+    warm: bool = True  # False => cold full re-solve baseline
+    refresh_mode: str = "auto"  # refine mode when warm (block|auto|solve)
+    correction: str = "damped"  # old-row correction for block/auto
+    correction_epochs: float = CORRECTION_EPOCHS
+    correction_damping: float = CORRECTION_DAMPING
+    budget_epochs: Optional[float] = None  # per-refresh cap; None = tolerance
+    refresh_every: int = 1  # refresh after every k-th append
+    seed: int = 0  # candidate-draw PRNG seed
+
+
+class BOResult(NamedTuple):
+    """Everything a benchmark or notebook needs from one BO run.
+
+    ``history`` has one dict per round (JSON-serialisable): the chosen
+    point's objective value, the incumbent, regret (when ``f_opt`` is
+    known), and the round's `RefreshReport` essentials (mode, epochs,
+    residuals, escalated/corrected). The scalar fields are the run-level
+    rollups the acceptance asserts run against.
+    """
+
+    history: list  # per-round dicts (see above)
+    best_y: float  # incumbent objective value after the last round
+    regret: Optional[float]  # f_opt - best_y, when f_opt was given
+    cum_epochs: float  # solver epochs over all refreshes (full-system units)
+    escalations: int  # auto-mode refreshes that fell back to a full solve
+    corrections: int  # refreshes that ran the damped old-row correction
+    rounds_per_sec: float  # wall-clock throughput of the whole loop
+    engine_retraces: Optional[int]  # predict compiles after warmup (want 0)
+    solve_compiles: Optional[int]  # OnlineGP solve executables (O(log N))
+    refresh_stats: dict  # OnlineGP.stats_dict() snapshot at the end
+
+
+def make_gaussian_bumps(
+    key: jax.Array,
+    d: int,
+    num_bumps: int = 4,
+    bounds: tuple = (-1.0, 1.0),
+    width: float = 0.35,
+) -> tuple[Callable[[jax.Array], jax.Array], float]:
+    """A smooth multi-modal test objective: a sum of Gaussian bumps.
+
+    Args:
+      key: PRNG key placing the bumps.
+      d: input dimension.
+      num_bumps: number of bumps; amplitudes are drawn in [0.5, 1.5].
+      bounds: (lo, hi) box the bump centres are drawn from.
+      width: bump lengthscale (same units as the box).
+    Returns:
+      ``(objective, f_opt)`` — a vectorised callable mapping (m, d) inputs
+      to (m,) values, and the objective value at the best bump centre (a
+      lower bound on the true optimum; overlapping bumps can slightly
+      exceed it, so regret can go marginally negative — fine for tracking).
+    """
+    lo, hi = bounds
+    ck, ak = jax.random.split(key)
+    centers = jax.random.uniform(
+        ck, (num_bumps, d), minval=lo, maxval=hi, dtype=jnp.float32
+    )
+    amps = 0.5 + jax.random.uniform(ak, (num_bumps,), dtype=jnp.float32)
+
+    def objective(x: jax.Array) -> jax.Array:
+        x = jnp.atleast_2d(x)
+        sq = jnp.sum((x[:, None, :] - centers[None]) ** 2, axis=-1)
+        return jnp.sum(amps * jnp.exp(-sq / (2.0 * width**2)), axis=-1)
+
+    f_opt = float(jnp.max(objective(centers)))
+    return objective, f_opt
+
+
+def run_bo(
+    objective: Callable[[jax.Array], jax.Array],
+    x0: jax.Array,
+    y0: jax.Array,
+    state: OuterState,
+    cfg: OuterConfig,
+    bo: BOConfig = BOConfig(),
+    bounds: tuple = (-1.0, 1.0),
+    f_opt: Optional[float] = None,
+    key: Optional[jax.Array] = None,
+) -> BOResult:
+    """Run the sequential loop for ``bo.rounds`` rounds.
+
+    Args:
+      objective: vectorised black box mapping (m, d) inputs to (m,) values
+        (maximisation convention).
+      x0: (n0, d) initial training inputs (the fitted model's data).
+      y0: (n0,) initial training targets.
+      state: the fitted `OuterState` (pathwise estimator required — the
+        engine's variance comes from the pathwise sample paths).
+      cfg: the `OuterConfig` the state was fitted under.
+      bo: loop configuration (:class:`BOConfig`).
+      bounds: (lo, hi) box candidates are drawn uniformly from.
+      f_opt: known optimum for regret tracking (optional).
+      key: PRNG key for candidate draws; defaults to ``PRNGKey(bo.seed)``.
+    Returns:
+      :class:`BOResult`. Shape discipline inside: the `OnlineGP` reserves
+      capacity for all ``bo.rounds`` appends up front, so the engine's
+      bucket executables compile once at warmup and ``engine_retraces``
+      is 0 for the entire run.
+    """
+    if cfg.estimator != PATHWISE:
+        raise ValueError(
+            "run_bo needs a pathwise-fitted state (the serving engine's "
+            f"variance comes from pathwise samples); got {cfg.estimator!r}"
+        )
+    if bo.acquisition not in ACQUISITIONS:
+        raise ValueError(
+            f"unknown acquisition {bo.acquisition!r}; "
+            f"have {sorted(ACQUISITIONS)}"
+        )
+    if bo.refresh_every < 1:
+        raise ValueError(f"refresh_every must be >= 1, got {bo.refresh_every}")
+    key = jax.random.PRNGKey(bo.seed) if key is None else key
+    d = x0.shape[1]
+    lo, hi = bounds
+
+    # Capacity for every future append is reserved up front: the exported
+    # artifact keeps ONE shape for the whole run, so the engine never
+    # retraces after warmup and the solver compiles exactly one full-system
+    # and one block executable.
+    online = OnlineGP(
+        x0, y0, state, cfg,
+        growth=GROWTH_GEOMETRIC, reserve=bo.rounds,
+    )
+    engine = BucketedEngine(
+        online.export(), buckets=(bo.num_candidates,), bm=cfg.bm, bn=cfg.bn
+    )
+    warm_compiles = engine.warmup()
+
+    # Cold baseline = full re-solve from zero; warm path uses the
+    # configured incremental mode. (block/auto refine IS a warm-carry
+    # refinement, so warm=False forces mode="solve".)
+    mode = bo.refresh_mode if bo.warm else "solve"
+    best_y = float(jnp.max(y0))
+    history: list = []
+    t0 = time.perf_counter()
+    for r in range(bo.rounds):
+        cands = jax.random.uniform(
+            jax.random.fold_in(key, r), (bo.num_candidates, d),
+            minval=lo, maxval=hi, dtype=x0.dtype,
+        )
+        pred = engine.submit(cands)
+        idx, score = acquisition_argmax(
+            pred.mean, pred.var, name=bo.acquisition,
+            best=best_y, beta=bo.beta, xi=bo.xi,
+        )
+        x_sel = cands[int(idx)]
+        y_obs = float(objective(x_sel[None, :])[0])
+        online.append(x_sel[None, :], jnp.asarray([y_obs], dtype=y0.dtype))
+        entry = {
+            "round": r, "y": y_obs, "score": float(score),
+            "acquisition": bo.acquisition,
+        }
+        if (r + 1) % bo.refresh_every == 0:
+            report = online.refresh_into(
+                engine,
+                budget_epochs=bo.budget_epochs,
+                mode=mode, warm=bo.warm,
+                correction=bo.correction if bo.warm else "none",
+                correction_epochs=bo.correction_epochs,
+                correction_damping=bo.correction_damping,
+            )
+            entry.update({
+                "mode": report.mode, "epochs": report.epochs,
+                "res_y": report.res_y, "res_z": report.res_z,
+                "escalated": report.escalated,
+                "corrected": report.corrected,
+            })
+        best_y = max(best_y, y_obs)
+        entry["best_y"] = best_y
+        if f_opt is not None:
+            entry["regret"] = f_opt - best_y
+        history.append(entry)
+    elapsed = time.perf_counter() - t0
+
+    stats = online.stats_dict()
+    now_compiles = engine.num_compiles()
+    retraces = (None if warm_compiles is None or now_compiles is None
+                else now_compiles - warm_compiles)
+    return BOResult(
+        history=history,
+        best_y=best_y,
+        regret=None if f_opt is None else f_opt - best_y,
+        cum_epochs=float(stats["cum_epochs"]),
+        escalations=int(stats["escalations"]),
+        corrections=int(stats["corrections"]),
+        rounds_per_sec=bo.rounds / max(elapsed, 1e-9),
+        engine_retraces=retraces,
+        solve_compiles=stats["num_solve_compiles"],
+        refresh_stats=stats,
+    )

@@ -25,6 +25,8 @@ from repro.serve.engine import BucketedEngine, EngineStats, pad_to_bucket
 from repro.serve.multimodel import MultiModelServer
 from repro.serve.refresh import (
     AUTO_COUPLING_FACTOR,
+    GROWTH_EXACT,
+    GROWTH_GEOMETRIC,
     OnlineGP,
     RefreshReport,
     merge_refined_state,
@@ -35,6 +37,7 @@ __all__ = [
     "servable_predict",
     "BucketedEngine", "EngineStats", "pad_to_bucket",
     "MultiModelServer",
-    "AUTO_COUPLING_FACTOR", "OnlineGP", "RefreshReport",
+    "AUTO_COUPLING_FACTOR", "GROWTH_EXACT", "GROWTH_GEOMETRIC",
+    "OnlineGP", "RefreshReport",
     "merge_refined_state",
 ]

@@ -56,10 +56,12 @@ class ServableGP(NamedTuple):
 
     @property
     def n(self) -> int:
+        """Training rows frozen into the artifact."""
         return self.x.shape[0]
 
     @property
     def num_samples(self) -> int:
+        """Posterior sample paths s (correction columns minus the mean)."""
         return self.correction.shape[1] - 1
 
 

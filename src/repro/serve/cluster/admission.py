@@ -39,6 +39,7 @@ class Priority(IntEnum):
 
 
 def parse_priority(name: str) -> Priority:
+    """Case-insensitive wire-string -> :class:`Priority` (ValueError lists options)."""
     try:
         return Priority[name.upper()]
     except KeyError:
@@ -101,6 +102,7 @@ class AdmissionStats:
     bypassed: int = 0  # REFRESH/ADMIN admissions that skipped the limits
 
     def as_dict(self) -> dict:
+        """Counters as a JSON-ready dict (adds the aggregate ``shed``)."""
         shed = self.shed_rate + self.shed_inflight + self.shed_deadline
         return {
             "admitted": self.admitted,
@@ -157,11 +159,13 @@ class AdmissionController:
 
     @property
     def inflight(self) -> int:
+        """Requests currently between :meth:`admit` and :meth:`release`."""
         with self._lock:
             return self._inflight
 
     @property
     def service_ewma_s(self) -> float:
+        """EWMA of per-request compute time (seconds); drives deadline shedding."""
         with self._lock:
             return self._service_ewma_s
 
@@ -216,6 +220,7 @@ class AdmissionController:
             return Decision(True, "ok")
 
     def release(self, service_s: Optional[float] = None) -> None:
+        """Return an admitted request's inflight slot; ``service_s`` feeds the EWMA."""
         with self._lock:
             self._inflight = max(0, self._inflight - 1)
             if service_s is not None:
@@ -250,6 +255,7 @@ class AdmissionController:
         return AdmissionController._Tracker(self)
 
     def as_dict(self) -> dict:
+        """Stats + live gauges for the ``GET /stats`` admission section."""
         with self._lock:
             d = self.stats.as_dict()
             d.update({

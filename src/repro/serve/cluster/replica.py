@@ -217,11 +217,13 @@ class ReplicaSupervisor:
         return self.endpoints()
 
     def endpoint(self, i: int) -> str:
+        """Base URL of replica ``i`` (RuntimeError before it reports a port)."""
         if self.ports[i] is None:
             raise RuntimeError(f"replica {i} has not reported a port yet")
         return f"http://{self.host}:{self.ports[i]}"
 
     def endpoints(self) -> list:
+        """Base URLs of all replicas, in index order."""
         return [self.endpoint(i) for i in range(self.num_replicas)]
 
     def check(self) -> int:

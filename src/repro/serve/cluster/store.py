@@ -63,6 +63,7 @@ def latest_version(store_dir: str) -> Optional[str]:
 
 
 def read_manifest(store_dir: str, version: str) -> dict:
+    """Load ``<store>/<version>/manifest.json`` (hashes, files, metadata)."""
     with open(os.path.join(store_dir, version, MANIFEST)) as f:
         return json.load(f)
 
@@ -224,6 +225,7 @@ class ArtifactPoller:
             return False
 
     def start(self) -> None:
+        """Begin polling LATEST on a daemon thread (no-op if running)."""
         if self._thread is not None:
             return
         self._stop.clear()
@@ -238,6 +240,7 @@ class ArtifactPoller:
         self._thread.start()
 
     def stop(self) -> None:
+        """Stop the polling thread (joins with a timeout; idempotent)."""
         self._stop.set()
         if self._thread is not None:
             self._thread.join(timeout=10.0)

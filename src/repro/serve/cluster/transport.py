@@ -11,7 +11,9 @@ Endpoints (JSON in/out):
   * ``GET /healthz``   — liveness + served artifact version (``503`` while
     draining or before a model is loaded).
   * ``GET /stats``     — ``EngineStats.as_dict`` + admission counters +
-    per-status HTTP counters; the one stats wire format.
+    per-status HTTP counters (+ an ``OnlineGP.stats_dict`` ``refresh``
+    section when the replica refreshes in place); the one stats wire
+    format.
   * ``POST /admin/swap`` — fetch a version from the artifact store (body
     ``{"version": v?}``, default LATEST) and atomically swap it in.
   * ``POST /admin/drain`` — stop admitting, report in-flight count (the
@@ -69,8 +71,15 @@ class ServeFrontend:
         store_dir: Optional[str] = None,
         version: Optional[str] = None,
         default_model: str = DEFAULT_MODEL,
+        refresh_source=None,
     ):
         self.target = target
+        # An OnlineGP (anything with a stats_dict()) feeding this replica:
+        # its refresh counters — escalations, coupling residuals, capacity
+        # growth — become the "refresh" section of GET /stats, so sequential
+        # drivers and operators see WHY a refresh escalated, not just that
+        # latency moved.
+        self.refresh_source = refresh_source
         self.admission = admission if admission is not None else (
             AdmissionController(
                 buckets=getattr(target, "buckets", None)
@@ -129,11 +138,13 @@ class ServeFrontend:
             )
 
     def record_status(self, status: int) -> None:
+        """Count one HTTP response by status code (feeds ``GET /stats``)."""
         with self._lock:
             self.by_status[status] = self.by_status.get(status, 0) + 1
 
     # -- endpoint bodies -----------------------------------------------------
     def healthz(self) -> tuple[int, dict]:
+        """``GET /healthz`` body: 200 when serving, 503 draining/model-less."""
         models = self._model_names()
         if self.draining:
             return 503, {"status": "draining",
@@ -144,9 +155,10 @@ class ServeFrontend:
                      "models": models}
 
     def stats(self) -> tuple[int, dict]:
+        """``GET /stats`` body: engine + admission + http (+ ``refresh``)."""
         with self._lock:
             by_status = {str(k): v for k, v in sorted(self.by_status.items())}
-        return 200, {
+        body = {
             "engine": self._engine.stats_dict(),
             "admission": self.admission.as_dict(),
             "http": {"by_status": by_status},
@@ -154,6 +166,9 @@ class ServeFrontend:
             "models": self._model_names(),
             "draining": self.draining,
         }
+        if self.refresh_source is not None:
+            body["refresh"] = self.refresh_source.stats_dict()
+        return 200, body
 
     def predict(self, payload: dict, arrival: Optional[float] = None
                 ) -> tuple[int, dict, dict]:
@@ -230,6 +245,7 @@ class ServeFrontend:
         return 200, body, {}
 
     def admin_swap(self, payload: dict) -> tuple[int, dict]:
+        """``POST /admin/swap``: fetch a store version and hot-swap it in."""
         from repro.serve.cluster.store import fetch_servable
 
         if self.store_dir is None:
@@ -255,6 +271,7 @@ class ServeFrontend:
         return 200, {"swapped": True, "version": version, "model": name}
 
     def admin_drain(self) -> tuple[int, dict]:
+        """``POST /admin/drain``: refuse new work, let in-flight finish."""
         self.draining = True
         return 200, {"draining": True, "inflight": self.admission.inflight}
 
@@ -340,6 +357,7 @@ class GPHTTPServer(ThreadingHTTPServer):
 
     @property
     def port(self) -> int:
+        """The bound TCP port (resolved even when constructed with port 0)."""
         return self.server_address[1]
 
 

@@ -71,6 +71,7 @@ class EngineStats:
     )
 
     def record(self, bucket: int, batch_rows: int, num_requests: int) -> None:
+        """Count one engine dispatch (bucket rows, real rows, requests)."""
         with self._lock:
             self.requests += num_requests
             self.batches += 1
@@ -142,6 +143,7 @@ class BucketedEngine:
     # -- model management ---------------------------------------------------
     @property
     def model(self) -> ServableGP:
+        """The currently served artifact (raises before the first swap)."""
         with self._model_lock:
             if self._model is None:
                 raise RuntimeError("engine has no model; pass one or swap_model")
@@ -190,6 +192,7 @@ class BucketedEngine:
 
     # -- synchronous serving ------------------------------------------------
     def bucket_for(self, m: int) -> int:
+        """Smallest bucket covering ``m`` rows (largest bucket if none)."""
         for b in self.buckets:
             if m <= b:
                 return b
@@ -234,6 +237,7 @@ class BucketedEngine:
         return fut
 
     def start(self) -> None:
+        """Start the microbatching worker thread (idempotent)."""
         if self._worker is not None:
             return
         self._stop.clear()
@@ -243,6 +247,7 @@ class BucketedEngine:
         self._worker.start()
 
     def stop(self) -> None:
+        """Stop the worker thread, draining the queue first."""
         if self._worker is None:
             return
         self._stop.set()

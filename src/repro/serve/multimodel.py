@@ -38,6 +38,7 @@ class MultiModelServer:
     def register(
         self, name: str, model: ServableGP, warmup: bool = False
     ) -> None:
+        """Add a named model (optionally precompiling every bucket)."""
         with self._lock:
             if name in self._models:
                 raise ValueError(
@@ -55,10 +56,12 @@ class MultiModelServer:
             self._models[name] = model
 
     def unregister(self, name: str) -> ServableGP:
+        """Remove and return a named model (KeyError if absent)."""
         with self._lock:
             return self._models.pop(name)
 
     def get(self, name: str) -> ServableGP:
+        """Look up a registered model by name (KeyError lists options)."""
         with self._lock:
             try:
                 return self._models[name]
@@ -68,6 +71,7 @@ class MultiModelServer:
                 ) from None
 
     def names(self) -> tuple:
+        """Sorted names of all registered models."""
         with self._lock:
             return tuple(sorted(self._models))
 
@@ -80,7 +84,9 @@ class MultiModelServer:
         return self.engine.num_compiles()
 
     def submit(self, name: str, xq: jax.Array) -> Predictions:
+        """Synchronous predict at ``xq`` through the named model."""
         return self.engine.submit(xq, model=self.get(name))
 
     def enqueue(self, name: str, xq: jax.Array):
+        """Queued predict through the named model; returns a Future."""
         return self.engine.enqueue(xq, model=self.get(name))

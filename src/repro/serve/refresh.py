@@ -8,6 +8,35 @@ for the enlarged system, so a budgeted warm solve reaches tolerance in far
 fewer epochs than a cold start. `OnlineGP` owns the mutable (data, state)
 pair; serving stays on the frozen `ServableGP` until `refine` finishes and
 the engine swap makes the new artifact visible atomically.
+
+Two properties matter for *sequential* workloads (a BO loop appending one
+row per round for hundreds of rounds):
+
+  * **Geometric capacity growth** (``growth="geometric"``): instead of
+    growing every array by the exact append size — a new system shape, and
+    therefore a solver retrace AND an engine-bucket retrace, every round —
+    the training arrays are padded up a geometric capacity ladder
+    (:func:`repro.core.outer.grow_capacity`) with inert *ghost rows*:
+    points placed hundreds of lengthscales away from the data, where every
+    registered stationary kernel underflows to exactly 0.0 in fp32. The
+    kernel matrix is then exactly block-diagonal, the ghost block is
+    near-identity (solved in O(1) iterations), and the real-row solutions
+    are bit-for-bit unaffected. N appends compile O(log N) solver
+    executables instead of N.
+
+  * **Damped old-row correction** (``correction="damped"``): the block
+    refresh (``mode="block"``) deliberately leaves the old-row back-coupling
+    ``K12 dv`` unpaid. When appends land near the bulk (the common case in
+    BO — acquisition picks points near the data), that coupling is large and
+    plain ``mode="auto"`` escalates to a full re-solve every round. The
+    damped correction repairs the old rows at ~block cost instead: a free
+    damped-Jacobi step ``dv1 = -omega * K12 dv / (signal^2 + noise^2)``
+    (the cross-MVM is already computed for the coupling estimate), then a
+    small budgeted warm solve of the FULL system (``correction_epochs``,
+    default 2) that both polishes the correction and reports an HONEST
+    full-system residual. Auto-escalation then fires only when the corrected
+    residual is still above threshold — rarely — and starts warm from the
+    corrected carry with the budget it has already spent subtracted.
 """
 from __future__ import annotations
 
@@ -25,10 +54,17 @@ from repro.core.outer import (
     OuterState,
     effective_kind,
     extend_state,
+    grow_capacity,
     outer_step,
 )
 from repro.serve.artifact import ServableGP, export_servable
-from repro.solvers import HOperator, kernel_mvm_tiled, solve
+from repro.solvers import (
+    HOperator,
+    kernel_mvm_tiled,
+    numerics_of,
+    solve,
+    strip_numerics,
+)
 
 
 def merge_refined_state(
@@ -62,7 +98,6 @@ def merge_refined_state(
     )
 
 
-
 # refine(mode="auto") escalation threshold, in units of the solver
 # tolerance: the block refresh's reported coupling residual sits at ~1-2x
 # tolerance in its validity regime (weakly coupled appends) and orders of
@@ -71,19 +106,39 @@ def merge_refined_state(
 # regression fixtures). Override per call with ``coupling_threshold``.
 AUTO_COUPLING_FACTOR = 5.0
 
+# Growth policies for appended observations.
+GROWTH_EXACT = "exact"  # arrays grow by the exact append size
+GROWTH_GEOMETRIC = "geometric"  # capacity ladder + inert ghost rows
+
+# Ghost rows are placed on the diagonal ray ``j * unit * (1, ..., 1)`` with
+# ``unit = GHOST_UNIT_FACTOR * (data span + max lengthscale + 1)``: every
+# ghost sits >= GHOST_UNIT_FACTOR lengthscales from all real points and from
+# every other ghost. exp(-256) (Matérn-1/2, the slowest-decaying registered
+# kernel) underflows to exactly 0.0 in fp32, so the padded kernel matrix is
+# EXACTLY block-diagonal and ghost rows cannot perturb real solutions.
+GHOST_UNIT_FACTOR = 256.0
+
+# Damped old-row correction defaults: the damping factor of the free Jacobi
+# step and the full-system epoch budget of the warm polish that makes the
+# post-correction residual honest.
+CORRECTION_DAMPING = 0.5
+CORRECTION_EPOCHS = 2.0
+
 
 class RefreshReport(NamedTuple):
     """What one `refine` cost and achieved.
 
     ``epochs`` is always in FULL-system epoch units (one epoch = every
-    entry of the n x n H computed once), so block and full refreshes are
-    directly comparable: a block refresh on k new rows charges k/n of an
-    epoch for the cross MVM plus ``block_epochs * (k/n)^2`` for the solve
-    on the k x k sub-system. An escalated ``mode="auto"`` charges the block
-    attempt PLUS the full re-solve it triggered.
+    entry of the n x n H computed once, where n is the PADDED capacity when
+    geometric growth is active — padding waste is real compute and is
+    charged), so block and full refreshes are directly comparable: a block
+    refresh on k new rows charges k/n of an epoch for the cross MVM plus
+    ``block_epochs * (k/n)^2`` for the solve on the k x k sub-system. An
+    escalated ``mode="auto"`` charges the block attempt (plus any
+    correction) PLUS the full re-solve it triggered.
     """
 
-    n: int  # training rows after the refresh
+    n: int  # REAL training rows after the refresh (ghost rows excluded)
     appended: int  # rows appended since the last refine
     epochs: float  # solver epochs consumed (full-system units)
     iters: int  # inner iterations
@@ -94,6 +149,9 @@ class RefreshReport(NamedTuple):
     block_rows: int = 0  # rows of the block sub-system (mode="block"/"auto")
     block_epochs: float = 0.0  # solver epochs in k-system units (block/auto)
     escalated: bool = False  # auto mode fell back to a full re-solve?
+    corrected: bool = False  # damped old-row correction ran?
+    correction_epochs: float = 0.0  # full-system epochs spent by it
+    capacity: int = 0  # padded system rows (== n under growth="exact")
 
 
 class OnlineGP:
@@ -106,35 +164,194 @@ class OnlineGP:
         ...
         online.append(x_new, y_new)
         online.refresh_into(engine, budget_epochs=10.0)   # solve + swap
+
+    Args:
+      x: (n, d) training inputs of the fitted state.
+      y: (n,) training targets.
+      state: the fitted `OuterState` (pathwise carry for serving export).
+      cfg: the `OuterConfig` the state was fitted under.
+      growth: ``"exact"`` (default) grows arrays by the exact append size —
+        every distinct n is a new solver executable. ``"geometric"`` pads
+        up a capacity ladder with inert far-away ghost rows so N sequential
+        appends compile only O(log N) executables and the exported
+        `ServableGP` keeps a stable shape between growth events (zero
+        engine retraces). Real-row solutions are unaffected (the ghost
+        cross-kernel underflows to exactly 0 in fp32).
+      reserve: with geometric growth, pre-extend capacity to cover this
+        many future appended rows up front — a driver that knows its
+        horizon (e.g. a BO loop of R rounds) gets ZERO growth events and
+        therefore zero retraces after the first solve/warmup.
     """
 
     def __init__(
-        self, x: jax.Array, y: jax.Array, state: OuterState, cfg: OuterConfig
+        self,
+        x: jax.Array,
+        y: jax.Array,
+        state: OuterState,
+        cfg: OuterConfig,
+        growth: str = GROWTH_EXACT,
+        reserve: int = 0,
     ):
+        if growth not in (GROWTH_EXACT, GROWTH_GEOMETRIC):
+            raise ValueError(
+                f"growth must be {GROWTH_EXACT!r} or {GROWTH_GEOMETRIC!r}, "
+                f"got {growth!r}"
+            )
         self.x = x
         self.y = y
         self.state = state
         self.cfg = cfg
+        self.growth = growth
+        self._n = int(x.shape[0])
         self._appended = 0
+        self._ghost_count = 0
+        self._ghost_unit_val: Optional[float] = None
         self._lock = threading.Lock()
+        self._last_report: Optional[RefreshReport] = None
+        self._counters = {
+            "refines": 0, "appends": 0, "appended_rows": 0,
+            "escalations": 0, "corrections": 0, "growth_events": 0,
+            "cum_epochs": 0.0, "cum_iters": 0,
+        }
 
+        kind = effective_kind(cfg, state.params)
+        self._kind = kind
+        base = cfg.solver if cfg.solver.kind == kind else replace(
+            cfg.solver, kind=kind
+        )
+        # Numeric values (tolerance/budget/lr/...) always ride in as a
+        # traced SolverNumerics pytree, so ONE executable per system shape
+        # serves every budget — `_scfg_*` keeps the caller's values as the
+        # numerics source, the jitted wrappers close over the stripped
+        # static half.
+        self._scfg_full = base
+        self._scfg_block = replace(base, name="cg")
+        self._jit_full = self._make_jit_solve(strip_numerics(self._scfg_full))
+        self._jit_block = self._make_jit_solve(
+            strip_numerics(self._scfg_block)
+        )
+        if growth == GROWTH_GEOMETRIC and reserve > 0:
+            with self._lock:
+                self._grow_to(self._n + int(reserve))
+
+    # -- sizes ---------------------------------------------------------------
     @property
     def n(self) -> int:
-        return self.x.shape[0]
+        """Number of REAL training rows (ghost padding excluded)."""
+        return self._n
+
+    @property
+    def capacity(self) -> int:
+        """Padded row count of the stored arrays (== n under exact growth)."""
+        return int(self.x.shape[0])
+
+    # -- solver plumbing -----------------------------------------------------
+    def _make_jit_solve(self, scfg):
+        """One jitted solve entry per static solver config.
+
+        Shapes are the only retrace axis (numerics are traced), so with
+        geometric growth the jit cache size IS the O(log N) compile count —
+        see :meth:`num_solve_compiles`.
+        """
+        cfg, kind = self.cfg, self._kind
+
+        def _solve(xs, b, v0, params, key, numerics):
+            op = HOperator(x=xs, params=params, kind=kind,
+                           backend=cfg.backend, bm=cfg.bm, bn=cfg.bn)
+            return solve(op, b, v0, scfg, key=key, numerics=numerics)
+
+        return jax.jit(_solve)
+
+    def num_solve_compiles(self) -> Optional[int]:
+        """Executable count across the refine solve paths (retrace detector).
+
+        Returns None when jit cache introspection (a private jax API) is
+        unavailable — callers must treat None as "accounting unavailable",
+        never as zero.
+        """
+        try:
+            return int(self._jit_full._cache_size()) + int(
+                self._jit_block._cache_size()
+            )
+        except Exception:  # pragma: no cover - private API moved
+            return None
+
+    # -- growth --------------------------------------------------------------
+    def _ghost_unit(self) -> float:
+        """Spacing of the ghost ray (computed once, from data + lengthscale)."""
+        if self._ghost_unit_val is None:
+            span = float(jnp.max(jnp.abs(self.x[: self._n]))) if self._n else 1.0
+            ls = float(jnp.max(self.state.params.lengthscales))
+            self._ghost_unit_val = GHOST_UNIT_FACTOR * (span + ls + 1.0)
+        return self._ghost_unit_val
+
+    def _ghost_inputs(self, k: int) -> jax.Array:
+        """(k, d) inert pad points: far from the data AND from each other."""
+        unit = self._ghost_unit()
+        d = self.x.shape[1]
+        idx = jnp.arange(1, k + 1, dtype=self.x.dtype) + jnp.asarray(
+            self._ghost_count, self.x.dtype
+        )
+        self._ghost_count += k
+        return idx[:, None] * unit * jnp.ones((1, d), self.x.dtype)
+
+    def _grow_to(self, needed: int) -> None:
+        """Extend capacity up the geometric ladder (lock held by caller)."""
+        cap = self.capacity
+        new_cap = grow_capacity(cap, needed)
+        if new_cap <= cap:
+            return
+        pad = new_cap - cap
+        self.x = jnp.concatenate([self.x, self._ghost_inputs(pad)], axis=0)
+        self.y = jnp.concatenate(
+            [self.y, jnp.zeros((pad,), self.y.dtype)], axis=0
+        )
+        self.state = extend_state(self.state, pad, dtype=self.x.dtype)
+        self._counters["growth_events"] += 1
 
     def append(self, x_new: jax.Array, y_new: jax.Array) -> None:
         """Add observations; extends the warm-start carry with zero rows and
-        draws fixed base-probe randomness for the new rows (core hook)."""
+        draws fixed base-probe randomness for the new rows (core hook).
+
+        Under geometric growth the rows are written into reserved ghost
+        slots (their probe randomness was drawn at growth time and stays
+        fixed — same warm-start contract); capacity only grows, by
+        :func:`repro.core.outer.grow_capacity`, when the slots run out.
+        """
         if x_new.ndim != 2 or x_new.shape[1] != self.x.shape[1]:
             raise ValueError(
                 f"x_new must be (k, {self.x.shape[1]}), got {x_new.shape}"
             )
         with self._lock:
             k = x_new.shape[0]
-            self.x = jnp.concatenate([self.x, x_new], axis=0)
-            self.y = jnp.concatenate([self.y, y_new], axis=0)
-            self.state = extend_state(self.state, k, dtype=self.x.dtype)
+            if self.growth == GROWTH_GEOMETRIC:
+                self._grow_to(self._n + k)
+                lo = self._n
+                self.x = self.x.at[lo:lo + k].set(x_new.astype(self.x.dtype))
+                self.y = self.y.at[lo:lo + k].set(y_new.astype(self.y.dtype))
+                self.state = self.state._replace(
+                    carry_v=self.state.carry_v.at[lo:lo + k].set(0.0)
+                )
+            else:
+                self.x = jnp.concatenate([self.x, x_new], axis=0)
+                self.y = jnp.concatenate([self.y, y_new], axis=0)
+                self.state = extend_state(self.state, k, dtype=self.x.dtype)
+            self._n += k
             self._appended += k
+            self._counters["appends"] += 1
+            self._counters["appended_rows"] += k
+
+    # -- refinement ----------------------------------------------------------
+    def _record(self, report: RefreshReport) -> None:
+        """Fold one refine into the cumulative counters (lock held)."""
+        self._counters["refines"] += 1
+        self._counters["cum_epochs"] += float(report.epochs)
+        self._counters["cum_iters"] += int(report.iters)
+        if report.escalated:
+            self._counters["escalations"] += 1
+        if report.corrected:
+            self._counters["corrections"] += 1
+        self._last_report = report
 
     def refine(
         self,
@@ -143,14 +360,18 @@ class OnlineGP:
         mode: str = "solve",
         key: Optional[jax.Array] = None,
         coupling_threshold: Optional[float] = None,
+        correction: str = "none",
+        correction_epochs: float = CORRECTION_EPOCHS,
+        correction_damping: float = CORRECTION_DAMPING,
     ) -> RefreshReport:
         """Budgeted refinement of the enlarged system (paper §5 budgets).
 
         ``mode="solve"`` re-solves the linear systems at fixed hyperparameters
         (the serving-refresh fast path: tolerance is the early stop, the
         epoch budget the cap). ``mode="step"`` runs one full `outer_step`
-        (hyperparameters move too). ``warm=False`` is the cold-start control
-        the throughput benchmark compares against.
+        (hyperparameters move too; unsupported under geometric growth, where
+        ghost rows would bias the MLL gradient). ``warm=False`` is the
+        cold-start control the throughput benchmark compares against.
 
         ``mode="block"`` is the incremental refresh: the zero-padded old
         solution already satisfies the old rows to solver tolerance (the
@@ -173,44 +394,69 @@ class OnlineGP:
         MVMs + block epochs scaled by (k/n)^2) so the saving is visible in
         the same units as ``mode="solve"``.
 
+        ``correction="damped"`` (block/auto) repairs the old rows whenever
+        the coupling residual exceeds tolerance, at ~block cost instead of
+        a full re-solve: a free damped-Jacobi step
+        ``dv1 = -correction_damping * K12 dv / (signal^2 + noise^2)``
+        (reusing the cross-MVM already computed for the coupling estimate)
+        followed by a warm full-system polish budgeted at
+        ``correction_epochs`` epochs. The polish's solver residual replaces
+        the coupling estimate, so the reported ``res_y``/``res_z`` stay
+        honest after the correction.
+
         ``mode="auto"`` makes the block-vs-full decision itself: it runs
-        the block refresh and, when the reported coupling residual
-        ``max(res_y, res_z)`` exceeds ``coupling_threshold`` (default
-        ``AUTO_COUPLING_FACTOR x`` the solver tolerance), escalates to a
-        full re-solve — warm-started from the block-corrected carry, so the
-        block work is a head start, not waste. In the weak-coupling regime
-        auto costs the same as "block"; under strongly coupled appends it
-        pays the full solve instead of silently leaving a large ``res_y``.
-        The report's ``escalated`` flag says which path ran.
+        the block refresh (plus the damped correction when enabled) and,
+        when the resulting residual ``max(res_y, res_z)`` exceeds
+        ``coupling_threshold`` (default ``AUTO_COUPLING_FACTOR x`` the
+        solver tolerance), escalates to a full re-solve — warm-started from
+        the block-corrected carry with the epochs already spent subtracted
+        from ``budget_epochs``, so the block work is a head start, not
+        waste, and the budget is never double-charged. In the weak-coupling
+        regime auto costs the same as "block"; under strongly coupled
+        appends it pays the correction (and only then, rarely, the full
+        solve) instead of silently leaving a large ``res_y``. The report's
+        ``escalated``/``corrected`` flags say which path ran.
+
+        Returns:
+          A :class:`RefreshReport`; the refined carry is committed into the
+          live state (merged with any appends that raced this refine).
         """
+        if correction not in ("none", "damped"):
+            raise ValueError(
+                f"correction must be 'none' or 'damped', got {correction!r}"
+            )
         with self._lock:
             state, x, y, cfg = self.state, self.x, self.y, self.cfg
             appended = self._appended
-        kind = effective_kind(cfg, state.params)
+            n_real = self._n
+        kind = self._kind
+        cap = int(x.shape[0])
         if mode == "step":
+            if self.growth == GROWTH_GEOMETRIC:
+                raise ValueError(
+                    "mode='step' moves hyperparameters on the padded system; "
+                    "ghost rows would bias the MLL gradient — use "
+                    "growth='exact' for refresh-with-hyperparameter-updates"
+                )
             scfg = cfg.solver if budget_epochs is None else replace(
                 cfg.solver, max_epochs=budget_epochs
             )
             step_cfg = replace(cfg, solver=scfg, warm_start=warm)
             new_state, metrics = outer_step(state, x, y, step_cfg)
             report = RefreshReport(
-                n=x.shape[0], appended=appended,
+                n=n_real, appended=appended,
                 epochs=float(metrics["epochs"]), iters=int(metrics["iters"]),
                 res_y=float(metrics["res_y"]), res_z=float(metrics["res_z"]),
-                warm=warm, mode=mode,
+                warm=warm, mode=mode, capacity=cap,
             )
         elif mode == "solve":
             targets = build_system_targets(state.probes, x, y, state.params)
-            op = HOperator(x=x, params=state.params, kind=kind,
-                           backend=cfg.backend, bm=cfg.bm, bn=cfg.bn)
-            scfg = cfg.solver if cfg.solver.kind == kind else replace(
-                cfg.solver, kind=kind
-            )
+            nm = numerics_of(self._scfg_full)
             if budget_epochs is not None:
-                scfg = replace(scfg, max_epochs=budget_epochs)
+                nm = nm._replace(max_epochs=jnp.float32(budget_epochs))
             v0 = state.carry_v if warm else None
             ksolve = key if key is not None else jax.random.fold_in(state.key, 13)
-            res = solve(op, targets, v0, scfg, key=ksolve)
+            res = self._jit_full(x, targets, v0, state.params, ksolve, nm)
             new_state = state._replace(
                 carry_v=res.v,
                 last_res_y=res.res_y.astype(jnp.float32),
@@ -219,10 +465,10 @@ class OnlineGP:
                 last_epochs=res.epochs.astype(jnp.float32),
             )
             report = RefreshReport(
-                n=x.shape[0], appended=appended,
+                n=n_real, appended=appended,
                 epochs=float(res.epochs), iters=int(res.iters),
                 res_y=float(res.res_y), res_z=float(res.res_z), warm=warm,
-                mode=mode,
+                mode=mode, capacity=cap,
             )
         elif mode in ("block", "auto"):
             if not warm:
@@ -230,93 +476,131 @@ class OnlineGP:
                     "block refresh refines the warm carry; it has no "
                     "cold-start variant (use mode='solve', warm=False)"
                 )
-            n, k = x.shape[0], appended
+            k = appended
             if k == 0:
-                return RefreshReport(
-                    n=n, appended=0, epochs=0.0, iters=0,
+                report = RefreshReport(
+                    n=n_real, appended=0, epochs=0.0, iters=0,
                     res_y=float(state.last_res_y),
                     res_z=float(state.last_res_z), warm=True, mode=mode,
+                    capacity=cap,
                 )
-            n0 = n - k
+                with self._lock:
+                    self._record(report)
+                return report
+            n0 = n_real - k
+            tol = float(self._scfg_full.tolerance)
             targets = build_system_targets(state.probes, x, y, state.params)
-            x_new = x[n0:]
-            # Residual restricted to the new rows: one (k x n) cross MVM
-            # against the FULL carry (k/n of an epoch) — the new carry rows
-            # are zero right after extend_state but may be nonzero after a
+            x_new = x[n0:n_real]
+            # Residual restricted to the new rows: one (k x cap) cross MVM
+            # against the FULL carry (k/cap of an epoch) — the new carry
+            # rows are zero right after append but may be nonzero after a
             # previous block refine, so no shortcut is taken.
             kv = kernel_mvm_tiled(
                 x_new, x, state.carry_v, state.params, kind=kind,
                 bm=cfg.bm, bn=cfg.bn,
             )
             noise_var = state.params.noise ** 2
-            r_new = targets[n0:] - kv - noise_var * state.carry_v[n0:]
+            r_new = targets[n0:n_real] - kv - noise_var * state.carry_v[n0:n_real]
             # The k x k sub-system is tiny; CG-to-tolerance is the right
             # tool regardless of which solver fitted the model (AP/SGD
             # block sizes need not divide k).
-            scfg = replace(cfg.solver, name="cg", kind=kind)
+            nm_blk = numerics_of(self._scfg_block)
             if budget_epochs is not None:
                 # budget is in full-system units; charge BOTH cross MVMs
                 # (residual assembly + coupling estimate), convert the
                 # remainder to k-system epochs.
-                block_budget = max(0.0, budget_epochs - 2 * k / n) * (n / k) ** 2
-                scfg = replace(scfg, max_epochs=block_budget)
-            op = HOperator(x=x_new, params=state.params, kind=kind,
-                           backend=cfg.backend, bm=cfg.bm, bn=cfg.bn)
-            res = solve(op, r_new, None, scfg)
-            new_carry = jnp.concatenate(
-                [state.carry_v[:n0], state.carry_v[n0:] + res.v], axis=0
-            )
-            new_state = state._replace(carry_v=new_carry)
+                block_budget = max(0.0, budget_epochs - 2 * k / cap) * (cap / k) ** 2
+                nm_blk = nm_blk._replace(max_epochs=jnp.float32(block_budget))
+            bkey = jax.random.fold_in(state.key, 11)
+            res = self._jit_block(x_new, r_new, None, state.params, bkey, nm_blk)
+            new_carry = state.carry_v.at[n0:n_real].add(res.v)
             block_epochs = float(res.epochs)
+            iters_total = int(res.iters)
             # The unpaid back-coupling K12 @ dv IS the residual the block
-            # update leaves on the old rows — one more (n0 x k) cross MVM
-            # (another k/n of an epoch) turns it into an honest full-system
+            # update leaves on the old rows — one more cross MVM (k/cap of
+            # an epoch; computed at full capacity so the shape stays on the
+            # growth ladder, with the block rows masked out — ghost rows
+            # contribute exactly 0) turns it into an honest full-system
             # residual estimate: ~solver tolerance when the new rows are
-            # weakly coupled to the bulk, large when a full re-solve is
-            # actually needed. Operators alert on this.
+            # weakly coupled to the bulk, large when more work is actually
+            # needed. Operators alert on this.
             neglected = kernel_mvm_tiled(
-                x[:n0], x_new, res.v, state.params, kind=kind,
+                x, x_new, res.v, state.params, kind=kind,
                 bm=cfg.bm, bn=cfg.bn,
             )
+            rows = jnp.arange(cap)
+            outside = jnp.logical_or(rows < n0, rows >= n_real)[:, None]
+            neglected = jnp.where(outside, neglected, 0.0)
             bscale = jnp.linalg.norm(targets, axis=0) + 1e-10
             coupling = jnp.linalg.norm(neglected, axis=0) / bscale
             res_y = float(coupling[0])
             res_z = float(jnp.mean(coupling[1:])) if coupling.shape[0] > 1 \
                 else res_y
-            epochs_equiv = 2 * k / n + block_epochs * (k / n) ** 2
-            # Fold the coupling residual into the rolling diagnostics so a
-            # later no-append refine (or a checkpoint reader) sees the
-            # TRUE state of the system, not the pre-append residual.
-            new_state = new_state._replace(
+            epochs_equiv = 2 * k / cap + block_epochs * (k / cap) ** 2
+            corrected = False
+            corr_epochs = 0.0
+            if correction == "damped" and max(res_y, res_z) > tol:
+                if correction_epochs <= 0:
+                    raise ValueError(
+                        "correction_epochs must be > 0: the budgeted polish "
+                        "is what keeps the reported residual honest after "
+                        "the damped step"
+                    )
+                # Free damped-Jacobi head start on the old rows (H's
+                # diagonal is signal^2 * kappa(0) + noise^2 = signal^2 +
+                # noise^2 for every registered stationary kernel), then a
+                # small warm full-system polish whose solver residual is
+                # the honest post-correction report.
+                diag = state.params.signal ** 2 + state.params.noise ** 2
+                head = new_carry - (correction_damping / diag) * neglected
+                nm_c = numerics_of(self._scfg_full)._replace(
+                    max_epochs=jnp.float32(correction_epochs)
+                )
+                ckey = jax.random.fold_in(state.key, 19)
+                pres = self._jit_full(x, targets, head, state.params, ckey, nm_c)
+                new_carry = pres.v
+                res_y, res_z = float(pres.res_y), float(pres.res_z)
+                corr_epochs = float(pres.epochs)
+                epochs_equiv += corr_epochs
+                iters_total += int(pres.iters)
+                corrected = True
+            # Fold the residual into the rolling diagnostics so a later
+            # no-append refine (or a checkpoint reader) sees the TRUE state
+            # of the system, not the pre-append residual.
+            new_state = state._replace(
+                carry_v=new_carry,
                 last_res_y=jnp.float32(res_y),
                 last_res_z=jnp.float32(res_z),
-                last_iters=res.iters,
+                last_iters=jnp.int32(iters_total),
                 last_epochs=jnp.float32(epochs_equiv),
             )
             report = RefreshReport(
-                n=n, appended=appended,
+                n=n_real, appended=appended,
                 epochs=epochs_equiv,
-                iters=int(res.iters),
+                iters=iters_total,
                 res_y=res_y, res_z=res_z, warm=True,
                 mode=mode, block_rows=k, block_epochs=block_epochs,
+                corrected=corrected, correction_epochs=corr_epochs,
+                capacity=cap,
             )
             threshold = (coupling_threshold if coupling_threshold is not None
-                         else AUTO_COUPLING_FACTOR * cfg.solver.tolerance)
+                         else AUTO_COUPLING_FACTOR * tol)
             if mode == "auto" and max(res_y, res_z) > threshold:
                 # The appends are too strongly coupled for the block
-                # update: pay the full warm re-solve, starting from the
-                # block-corrected carry (strictly closer than the
-                # zero-padded one, so nothing was wasted).
-                op = HOperator(x=x, params=state.params, kind=kind,
-                               backend=cfg.backend, bm=cfg.bm, bn=cfg.bn)
-                fcfg = cfg.solver if cfg.solver.kind == kind else replace(
-                    cfg.solver, kind=kind
-                )
+                # update (and the correction, if enabled): pay the full
+                # warm re-solve, starting from the block-corrected carry
+                # (strictly closer than the zero-padded one, so nothing
+                # was wasted) with the epochs already spent subtracted
+                # from the budget (no double-charging).
+                nm_f = numerics_of(self._scfg_full)
                 if budget_epochs is not None:
-                    fcfg = replace(fcfg, max_epochs=budget_epochs)
+                    nm_f = nm_f._replace(max_epochs=jnp.float32(
+                        max(0.0, budget_epochs - epochs_equiv)
+                    ))
                 fkey = key if key is not None else jax.random.fold_in(
                     state.key, 17)
-                fres = solve(op, targets, new_state.carry_v, fcfg, key=fkey)
+                fres = self._jit_full(x, targets, new_carry, state.params,
+                                      fkey, nm_f)
                 new_state = state._replace(
                     carry_v=fres.v,
                     last_res_y=fres.res_y.astype(jnp.float32),
@@ -326,7 +610,7 @@ class OnlineGP:
                 )
                 report = report._replace(
                     epochs=epochs_equiv + float(fres.epochs),
-                    iters=int(res.iters) + int(fres.iters),
+                    iters=iters_total + int(fres.iters),
                     res_y=float(fres.res_y), res_z=float(fres.res_z),
                     escalated=True,
                 )
@@ -336,11 +620,60 @@ class OnlineGP:
             # Appends may have raced this refine (background mode): commit the
             # solved rows into the CURRENT state so their extensions survive.
             self.state = merge_refined_state(self.state, new_state)
+            if self._n > n_real:
+                # Rows appended mid-refine live inside the refined capacity
+                # under geometric growth (their slots pre-existed): re-zero
+                # their carry so the zero-padded warm-start contract holds.
+                self.state = self.state._replace(
+                    carry_v=self.state.carry_v.at[n_real:self._n].set(0.0)
+                )
             self._appended = max(0, self._appended - appended)
+            self._record(report)
         return report
 
+    # -- observability -------------------------------------------------------
+    def stats_dict(self) -> dict:
+        """JSON-serialisable refresh counters — the ``refresh`` section of
+        ``GET /stats`` (see `repro.serve.cluster.transport.ServeFrontend`).
+
+        Cumulative: refines / escalations / corrections / growth events /
+        appended rows / epochs / iters; point-in-time: real rows ``n``,
+        padded ``capacity``, pending (un-refined) appends, the solve-path
+        compile count, and the last `RefreshReport` (mode, epochs, coupling
+        residuals, escalated/corrected flags) so a sequential driver — or an
+        operator watching ``/stats`` — can see every escalation and the
+        coupling residual that caused it.
+        """
+        with self._lock:
+            out = dict(self._counters)
+            rep = self._last_report
+            out.update({
+                "n": self._n,
+                "capacity": self.capacity,
+                "growth": self.growth,
+                "pending_appends": self._appended,
+                "num_solve_compiles": self.num_solve_compiles(),
+            })
+        if rep is not None:
+            out["last"] = {
+                "mode": rep.mode, "appended": rep.appended,
+                "epochs": rep.epochs, "iters": rep.iters,
+                "res_y": rep.res_y, "res_z": rep.res_z,
+                "block_rows": rep.block_rows,
+                "block_epochs": rep.block_epochs,
+                "escalated": rep.escalated, "corrected": rep.corrected,
+                "correction_epochs": rep.correction_epochs,
+            }
+        return out
+
     def export(self) -> ServableGP:
-        """Freeze the current state into a serving artifact."""
+        """Freeze the current state into a serving artifact.
+
+        Under geometric growth the artifact keeps the padded capacity shape:
+        ghost rows contribute exactly 0 to every prediction (their cross-
+        kernel underflows) but keep the engine's bucket executables warm
+        across refreshes — the whole point of the capacity ladder.
+        """
         with self._lock:
             return export_servable(
                 self.state, self.x, kind=effective_kind(self.cfg, self.state.params)
@@ -352,13 +685,19 @@ class OnlineGP:
         name: Optional[str] = None,
         budget_epochs: Optional[float] = None,
         mode: str = "solve",
+        warm: bool = True,
         background: bool = False,
         coupling_threshold: Optional[float] = None,
+        correction: str = "none",
+        correction_epochs: float = CORRECTION_EPOCHS,
+        correction_damping: float = CORRECTION_DAMPING,
     ):
         """Refine, then atomically swap the new artifact into ``engine``.
 
         ``engine`` is a `BucketedEngine` (or a `MultiModelServer` with
-        ``name``). ``background=True`` runs the whole refresh on a daemon
+        ``name``). All refinement knobs (``mode``/``warm``/``correction``/
+        thresholds) pass straight through to :meth:`refine`.
+        ``background=True`` runs the whole refresh on a daemon
         thread — serving continues on the old artifact until the swap — and
         returns a `concurrent.futures.Future` resolving to the
         `RefreshReport` (or carrying the exception, so failures are
@@ -368,7 +707,11 @@ class OnlineGP:
 
         def _do():
             report = self.refine(budget_epochs=budget_epochs, mode=mode,
-                                 coupling_threshold=coupling_threshold)
+                                 warm=warm,
+                                 coupling_threshold=coupling_threshold,
+                                 correction=correction,
+                                 correction_epochs=correction_epochs,
+                                 correction_damping=correction_damping)
             model = self.export()
             if name is not None:
                 engine.swap(name, model)

@@ -54,6 +54,21 @@ def solve_ap(
     block_chols: Optional[jax.Array] = None,
     numerics: Optional[SolverNumerics] = None,
 ) -> SolveResult:
+    """Alternating projections over row blocks of the system ``H V = b``.
+
+    Args:
+      op: matrix-free `HOperator` for ``H = K(x, x) + sigma^2 I`` (n x n).
+      b: (n, t) right-hand sides ``[y | b_1..b_s]``.
+      v0: (n, t) warm start, or None for the zero cold start.
+      cfg: static solver config; ``block_size`` sets the projection block
+        (must divide n — pad via `repro.data.synthetic.pad_to_block_multiple`).
+      block_chols: pre-factorised per-block Cholesky factors
+        (n/block, block, block); computed once here when None.
+      numerics: traced numeric overrides; None reads ``cfg``'s values.
+    Returns:
+      `SolveResult`; one iteration projects one block, i.e. block/n of an
+      epoch (paper §5), so ``epochs = iters * block_size / n``.
+    """
     num = numerics if numerics is not None else numerics_of(cfg)
     n = op.n
     bs = cfg.block_size

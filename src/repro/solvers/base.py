@@ -50,6 +50,12 @@ MAX_SOLVER_ITERS = 2**30
 
 @dataclass(frozen=True)
 class SolverConfig:
+    """Static (hashable, jit-signature) half of solver configuration.
+
+    Numeric fields (NUMERIC_FIELDS) can be overridden at trace time via a
+    `SolverNumerics` pytree; everything else specialises the executable.
+    """
+
     name: str = "cg"  # cg | ap | sgd
     tolerance: float = 0.01  # tau (paper: Maddox et al. value)
     # Kernel override for the operator: a registered kernel name pins the
@@ -151,6 +157,8 @@ def max_iters_from_epochs(max_epochs: jax.Array, iters_per_epoch: float
 
 
 class SolveResult(NamedTuple):
+    """What every solver returns: solutions + residuals + budget spent."""
+
     v: jax.Array  # (n, t) solutions [v_y | v_1 .. v_s]
     res_y: jax.Array  # final relative residual of the mean system
     res_z: jax.Array  # mean relative residual over probe systems
@@ -159,6 +167,8 @@ class SolveResult(NamedTuple):
 
 
 class NormalisedSystem(NamedTuple):
+    """Per-column normalised system (Appendix B): b~ = b / (||b|| + eps)."""
+
     b: jax.Array  # (n, t) normalised targets
     v0: jax.Array  # (n, t) normalised initialisation
     scale: jax.Array  # (t,) ||b|| + eps per column
@@ -167,6 +177,7 @@ class NormalisedSystem(NamedTuple):
 def normalise_system(
     b: jax.Array, v0: Optional[jax.Array]
 ) -> NormalisedSystem:
+    """Normalise each column of ``b`` (and ``v0``) by ``||b|| + eps``."""
     scale = jnp.linalg.norm(b, axis=0) + NORM_EPS
     bn = b / scale
     v0n = jnp.zeros_like(b) if v0 is None else v0 / scale
@@ -174,6 +185,7 @@ def normalise_system(
 
 
 def denormalise(v: jax.Array, scale: jax.Array) -> jax.Array:
+    """Undo `normalise_system`: rescale solutions back to ``b``'s scale."""
     return v * scale
 
 

@@ -54,6 +54,22 @@ def solve_cg(
     precond: Optional[Preconditioner] = None,
     numerics: Optional[SolverNumerics] = None,
 ) -> SolveResult:
+    """Preconditioned conjugate gradients on the batched system ``H V = b``.
+
+    Args:
+      op: matrix-free `HOperator` for ``H = K(x, x) + sigma^2 I`` (n x n).
+      b: (n, t) right-hand sides ``[y | b_1..b_s]`` (column 0 = mean system).
+      v0: (n, t) warm start, or None for the zero cold start.
+      cfg: static solver config; ``precond_rank`` selects the
+        pivoted-Cholesky preconditioner (0 disables, AUTO_RANK resolves
+        per kernel).
+      precond: pre-built preconditioner (built from ``cfg`` when None).
+      numerics: traced numeric overrides (tolerance, epoch budget); None
+        reads ``cfg``'s values.
+    Returns:
+      `SolveResult` with (n, t) solutions; ``epochs == iters`` for CG (one
+      full MVM per iteration, paper §5 budget accounting).
+    """
     num = numerics if numerics is not None else numerics_of(cfg)
     if precond is None:
         precond = build_preconditioner(op, cfg.precond_rank)

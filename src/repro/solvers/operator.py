@@ -96,6 +96,7 @@ class HOperator:
 
     @property
     def n(self) -> int:
+        """Number of training rows (the system dimension)."""
         return self.x.shape[0]
 
     @property
@@ -105,6 +106,7 @@ class HOperator:
 
     @property
     def noise_var(self) -> jax.Array:
+        """The regulariser sigma^2 added to the kernel diagonal."""
         return self.params.noise ** 2
 
     # -- full MVM ----------------------------------------------------------
@@ -135,6 +137,7 @@ class HOperator:
 
     # -- partial access (AP / SGD / pivoted Cholesky) -----------------------
     def x_block(self, start: jax.Array, size: int) -> jax.Array:
+        """(size, d) slice of the training inputs starting at row ``start``."""
         return jax.lax.dynamic_slice(self.x, (start, 0), (size, self.x.shape[1]))
 
     def row_block_mvm(self, start: jax.Array, size: int, v: jax.Array) -> jax.Array:
@@ -172,6 +175,7 @@ class HOperator:
         return jnp.full((self.n,), self.params.signal ** 2, dtype=self.x.dtype)
 
     def dense(self) -> jax.Array:
+        """Materialise H = K + sigma^2 I as an (n, n) array (tests only)."""
         return regularised_kernel_matrix(self.x, self.params, kind=self.kind)
 
     # -- AP block Cholesky cache --------------------------------------------

@@ -28,6 +28,8 @@ AUTO_RANK = -1
 
 
 class PrecondDefaults(NamedTuple):
+    """Per-kernel pivoted-Cholesky settings (see PRECOND_DEFAULTS)."""
+
     rank: int
     jitter: float
 
@@ -55,6 +57,8 @@ def default_precond(kind: str) -> PrecondDefaults:
 
 
 class Preconditioner(NamedTuple):
+    """Partial pivoted-Cholesky preconditioner ``P = LL^T + sigma^2 I``."""
+
     l: jax.Array  # (n, k) partial pivoted-Cholesky factor of K
     chol_inner: jax.Array  # (k, k) Cholesky of sigma^2 I_k + L^T L
     noise_var: jax.Array  # sigma^2

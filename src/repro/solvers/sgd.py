@@ -61,6 +61,23 @@ def solve_sgd(
     key: Optional[jax.Array] = None,
     numerics: Optional[SolverNumerics] = None,
 ) -> SolveResult:
+    """Stochastic gradient descent (Polyak momentum) on ``H V = b``.
+
+    Args:
+      op: matrix-free `HOperator` for ``H = K(x, x) + sigma^2 I`` (n x n).
+      b: (n, t) right-hand sides ``[y | b_1..b_s]``.
+      v0: (n, t) warm start, or None for the zero cold start.
+      cfg: static solver config; ``batch_size`` rows are sampled per step
+        and ``learning_rate``/``momentum`` drive the update.
+      key: PRNG key for batch sampling (PRNGKey(0) when None).
+      numerics: traced numeric overrides (tolerance, budget, lr, momentum,
+        divergence threshold); None reads ``cfg``'s values. A lane whose
+        summed residual blows past ``divergence_threshold`` (or goes
+        non-finite) freezes instead of burning budget.
+    Returns:
+      `SolveResult`; one iteration touches a (n x batch) slab, i.e.
+      batch/n of an epoch (paper §5).
+    """
     num = numerics if numerics is not None else numerics_of(cfg)
     n = op.n
     bs = cfg.batch_size

@@ -1,0 +1,33 @@
+"""Documentation gates: docstring coverage and markdown link integrity
+stay clean (tools/docs_lint.py is also a standalone CI job)."""
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import docs_lint  # noqa: E402
+
+
+def test_docs_lint_clean():
+    findings = docs_lint.run_lint(REPO)
+    assert findings == [], "\n".join(findings)
+
+
+def test_lint_detects_missing_docstring(tmp_path):
+    """The checker itself must flag undocumented public API."""
+    p = tmp_path / "mod.py"
+    p.write_text('"""Doc."""\ndef public():\n    pass\n\ndef _private():\n'
+                 '    pass\n')
+    findings = docs_lint.missing_docstrings(p)
+    assert len(findings) == 1 and "public" in findings[0]
+
+
+def test_lint_detects_broken_link(tmp_path):
+    p = tmp_path / "page.md"
+    p.write_text("# Title\n\n[ok](page.md) [bad](missing.md) "
+                 "[anchor](#title) [bad-anchor](#nope)\n")
+    findings = docs_lint.broken_links(p, tmp_path)
+    assert len(findings) == 2
+    assert any("missing.md" in f for f in findings)
+    assert any("#nope" in f for f in findings)

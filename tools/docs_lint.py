@@ -1,0 +1,149 @@
+"""Documentation lint: docstring coverage + markdown link integrity.
+
+Stdlib-only (ast + pathlib — runnable in a bare CI job, no jax import, no
+new dependencies), two checks:
+
+  1. **Docstring coverage** — every public module, class, and function /
+     method (name not starting with ``_``) under the packages in
+     ``LINT_PACKAGES`` must carry a docstring. Nested (closure) functions
+     are exempt: they are implementation detail, not API surface.
+  2. **Markdown links** — every relative link / image target in README.md
+     and docs/*.md must resolve to an existing file (anchors and external
+     http/mailto links are skipped; pure-anchor links are checked against
+     the current file's headings).
+
+Run: python tools/docs_lint.py [--root REPO]   (exits non-zero on findings)
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import re
+import sys
+from pathlib import Path
+
+# Packages whose public API must be documented (repo-relative).
+LINT_PACKAGES = (
+    "src/repro/solvers",
+    "src/repro/core",
+    "src/repro/serve",
+    "src/repro/online",
+)
+
+# Markdown files whose links must resolve (docs/*.md globbed separately).
+LINT_MARKDOWN = ("README.md",)
+
+# [text](target) — target split from an optional "title" suffix.
+_MD_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_MD_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_MD_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def _is_public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def missing_docstrings(path: Path) -> list[str]:
+    """Public defs/classes (and the module itself) lacking docstrings.
+
+    Returns human-readable ``file:line: <what>`` strings; empty = clean.
+    """
+    tree = ast.parse(path.read_text(), filename=str(path))
+    findings = []
+    if ast.get_docstring(tree) is None:
+        findings.append(f"{path}:1: module docstring missing")
+
+    def check_body(body, prefix: str):
+        for node in body:
+            if isinstance(node, ast.ClassDef):
+                if _is_public(node.name):
+                    if ast.get_docstring(node) is None:
+                        findings.append(
+                            f"{path}:{node.lineno}: class "
+                            f"{prefix}{node.name} docstring missing"
+                        )
+                    # Methods are API surface; nested classes too.
+                    check_body(node.body, f"{prefix}{node.name}.")
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if _is_public(node.name) and ast.get_docstring(node) is None:
+                    findings.append(
+                        f"{path}:{node.lineno}: def "
+                        f"{prefix}{node.name} docstring missing"
+                    )
+
+    check_body(tree.body, "")
+    return findings
+
+
+def _anchor_of(heading: str) -> str:
+    """GitHub-style anchor: lowercase, spaces -> dashes, drop punctuation."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[^\w\- ]", "", slug)
+    return slug.replace(" ", "-")
+
+
+def broken_links(path: Path, root: Path) -> list[str]:
+    """Relative markdown links that do not resolve; empty = clean.
+
+    Fenced code blocks are stripped first (shell snippets full of
+    ``$(...)`` are not links). ``#anchor``-only links are validated
+    against the file's own headings; cross-file anchors validate the file
+    part only.
+    """
+    text = _MD_FENCE.sub("", path.read_text())
+    anchors = {_anchor_of(h) for h in _MD_HEADING.findall(text)}
+    findings = []
+    for m in _MD_LINK.finditer(text):
+        target = m.group(1)
+        line = text[: m.start()].count("\n") + 1
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):
+            if target[1:] not in anchors:
+                findings.append(
+                    f"{path}:{line}: anchor {target!r} has no matching "
+                    f"heading"
+                )
+            continue
+        rel = target.split("#", 1)[0]
+        if not (path.parent / rel).resolve().exists():
+            findings.append(
+                f"{path}:{line}: link target {target!r} does not exist"
+            )
+    return findings
+
+
+def run_lint(root: Path) -> list[str]:
+    """All findings for the repo at ``root`` (see module docstring)."""
+    findings = []
+    for pkg in LINT_PACKAGES:
+        pkg_dir = root / pkg
+        for py in sorted(pkg_dir.rglob("*.py")):
+            findings.extend(missing_docstrings(py))
+    md_files = [root / m for m in LINT_MARKDOWN]
+    md_files.extend(sorted((root / "docs").glob("*.md")))
+    for md in md_files:
+        if md.exists():
+            findings.extend(broken_links(md, root))
+    return findings
+
+
+def main(argv=None) -> int:
+    """CLI entry; prints findings and returns the exit code."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=str(Path(__file__).parent.parent))
+    args = ap.parse_args(argv)
+    findings = run_lint(Path(args.root))
+    for f in findings:
+        print(f)
+    n_py = sum(1 for f in findings if "docstring" in f)
+    n_md = len(findings) - n_py
+    if findings:
+        print(f"[docs-lint] FAIL: {n_py} docstring + {n_md} link finding(s)")
+        return 1
+    print("[docs-lint] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
