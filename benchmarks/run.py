@@ -32,6 +32,7 @@ MODULES = [
     "sharded_sweep",
     "serve_cluster",
     "online_bo",
+    "obs_overhead",
 ]
 
 

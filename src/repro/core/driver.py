@@ -188,7 +188,8 @@ def _round_size(step: int, num_steps: int, steps_per_round: int,
 
 
 def _append_round(history: dict, metrics: dict, dt: float, k: int,
-                  lane: Optional[int] = None) -> float:
+                  lane: Optional[int] = None,
+                  event_log=None, solver: str = "") -> float:
     """Append one scan round's stacked metrics (leading axis = k steps) to
     the per-step history lists. Returns the round's estimated solve time.
 
@@ -196,6 +197,13 @@ def _append_round(history: dict, metrics: dict, dt: float, k: int,
     on-device, so there is no per-phase host timer): each step's solver work
     is ``epochs`` epoch-equivalents against :data:`GRAD_EPOCH_EQUIV` for
     gradient assembly; ``solver_frac_iters`` records that per-step fraction.
+
+    When ``event_log`` (a :class:`repro.obs.trace.EventLog`) is given, one
+    structured ``solve_step`` event is emitted per outer step — the host-side
+    aggregation point for the solvers' in-loop telemetry. When the solver
+    recorded residual rings (``SolverConfig.record_history``), the metrics
+    carry ``res_history`` and each event (and the history dict) gets the
+    step's time-ordered residual trajectory.
     """
     def col(name, dtype=float):
         a = np.asarray(metrics[name])
@@ -203,15 +211,38 @@ def _append_round(history: dict, metrics: dict, dt: float, k: int,
 
     epochs = col("epochs", np.float64)
     frac = epochs / (epochs + GRAD_EPOCH_EQUIV)
-    history["res_y"].extend(col("res_y"))
-    history["res_z"].extend(col("res_z"))
-    history["iters"].extend(col("iters", int))
+    steps = col("step", int)
+    iters = col("iters", int)
+    res_y, res_z = col("res_y"), col("res_z")
+    history["res_y"].extend(res_y)
+    history["res_z"].extend(res_z)
+    history["iters"].extend(iters)
     history["epochs"].extend(epochs)
     history["hypers"].extend(col("hypers", None))
     history["grad_norm"].extend(col("grad_norm"))
     history["data_fit"].extend(col("data_fit"))
     history["step_time_s"].extend([dt / k] * k)
     history["solver_frac_iters"].extend(frac)
+    rings = None
+    if "res_history" in metrics:
+        from repro.solvers.base import unroll_history
+
+        a = np.asarray(metrics["res_history"])
+        a = a[:, lane] if lane is not None else a  # (k, H, 2)
+        rings = np.stack([unroll_history(h, i) for h, i in zip(a, iters)])
+        history.setdefault("res_history", []).extend(rings)
+    if event_log is not None:
+        for j in range(k):
+            fields = dict(
+                step=int(steps[j]), solver=solver, lane=lane,
+                res_y=float(res_y[j]), res_z=float(res_z[j]),
+                iters=int(iters[j]), epochs=float(epochs[j]),
+                step_time_s=dt / k,
+            )
+            if rings is not None:
+                row = rings[j]
+                fields["res_history"] = row[np.isfinite(row[:, 0])].tolist()
+            event_log.emit("solve_step", **fields)
     return float(np.sum(dt / k * frac))
 
 
@@ -230,6 +261,7 @@ def fit(
     verbose: bool = False,
     steps_per_round: int = 8,
     numerics: Optional[SolverNumerics] = None,
+    event_log=None,
 ) -> FitResult:
     """Run ``cfg.num_steps`` outer MLL steps with optional eval/checkpointing.
 
@@ -256,6 +288,12 @@ def fit(
     numeric solver settings as TRACED values: runs differing only in
     tolerance/budget/lr share one executable (same maths as baking them
     into ``cfg.solver``).
+
+    ``event_log`` (a :class:`repro.obs.trace.EventLog`) turns on structured
+    telemetry: one ``solve_step`` JSONL event per outer step (residuals,
+    iteration/epoch counts, per-step residual trajectory when
+    ``cfg.solver.record_history`` is on) plus a final ``fit_done`` summary —
+    wall-clock-free ground truth for convergence-ordering assertions.
     """
     key = key if key is not None else jax.random.PRNGKey(0)
     state = init_outer_state(key, cfg, x, init_params=init_params)
@@ -276,7 +314,9 @@ def fit(
         state, metrics = outer_scan(state, x, y, cfg, k, numerics=numerics)
         jax.block_until_ready(state.carry_v)
         dt = time.perf_counter() - ts
-        solver_time += _append_round(history, metrics, dt, k)
+        solver_time += _append_round(history, metrics, dt, k,
+                                     event_log=event_log,
+                                     solver=cfg.solver.name)
         step += k
 
         if eval_every and x_test is not None and step % eval_every == 0:
@@ -301,6 +341,13 @@ def fit(
         save_checkpoint(ckpt_dir, cfg.num_steps, state)
     wall = time.perf_counter() - t0
     hist = {k_: np.asarray(v) for k_, v in history.items()}
+    if event_log is not None:
+        event_log.emit(
+            "fit_done", solver=cfg.solver.name, num_steps=cfg.num_steps,
+            total_iters=int(np.sum(hist["iters"])),
+            total_epochs=float(np.sum(hist["epochs"])),
+            wall_time_s=wall, solver_time_s=solver_time,
+        )
     return FitResult(state=state, history=hist, wall_time_s=wall,
                      solver_time_s=solver_time,
                      grad_time_s=float(np.sum(hist["step_time_s"])) - solver_time)
@@ -318,6 +365,7 @@ def fit_batch(
     steps_per_round: int = 0,
     numerics: Optional[SolverNumerics] = None,
     mesh=None,
+    event_log=None,
 ) -> list[FitResult]:
     """Fit B scenario lanes sharing one dataset and static config in ONE
     compiled program (one executable, vmap over lanes, scan over steps).
@@ -345,6 +393,7 @@ def fit_batch(
     when ``x_test`` is given. Returned per-lane ``wall_time_s`` is the
     shared wall clock divided by B (the amortised per-scenario cost);
     ``solver_time_s`` splits each lane's share by its own epoch accounting.
+    ``event_log`` emits lane-tagged ``solve_step`` events (see :func:`fit`).
     """
     keys = jnp.asarray(keys)
     lanes = keys.shape[0]
@@ -385,7 +434,8 @@ def fit_batch(
         metrics = {name: np.asarray(v) for name, v in metrics.items()}
         for lane in range(lanes):
             solver_times[lane] += _append_round(
-                histories[lane], metrics, dt / lanes, k, lane=lane)
+                histories[lane], metrics, dt / lanes, k, lane=lane,
+                event_log=event_log, solver=cfg.solver.name)
         step += k
         if verbose:
             print(f"[fit_batch] step {step}/{cfg.num_steps} x {lanes} lanes "

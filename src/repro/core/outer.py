@@ -291,6 +291,11 @@ def _outer_step(
             sum(jnp.sum(g**2) for g in jax.tree.leaves(grads))
         ),
     }
+    # Solver telemetry (SolverConfig.record_history > 0): the per-iteration
+    # residual ring rides the metrics dict. Static-config branch, so the
+    # default (off) metrics pytree is unchanged.
+    if res.res_history is not None:
+        metrics["res_history"] = res.res_history
     return new_state, metrics
 
 

@@ -95,7 +95,51 @@ def serve_gp_compat(args, ds, cfg, state):
           f"rmse={float(m['rmse']):.4f} llh={float(m['llh']):.4f}")
 
 
-def _http_smoke_probe(endpoints, xq):
+def _metrics_smoke_probe(endpoints, xq):
+    """Observability leg of the CI smoke: a /predict carrying an explicit
+    ``X-Trace-Id`` must echo it back, and GET /metrics must serve Prometheus
+    text exposing the request/admission/engine metric families."""
+    import json as _json
+    import urllib.request
+
+    import numpy as np
+
+    from repro.obs import trace as obs_trace
+
+    required = (
+        "gp_http_requests_total",
+        "gp_admission_decisions_total",
+        "gp_engine_batch_seconds",
+        "gp_engine_queue_depth",
+    )
+    probe = _json.dumps({"x": np.asarray(xq).tolist()}).encode()
+    for ep in endpoints:
+        tid = "smoke-" + obs_trace.new_trace_id()
+        req = urllib.request.Request(
+            ep + "/predict", data=probe,
+            headers={"Content-Type": "application/json",
+                     obs_trace.TRACE_HEADER: tid})
+        with urllib.request.urlopen(req, timeout=30) as resp:
+            echoed = resp.headers.get(obs_trace.TRACE_HEADER)
+        if echoed != tid:
+            raise SystemExit(
+                f"[obs-smoke] {ep} trace header not echoed: sent {tid!r}, "
+                f"got {echoed!r}")
+        with urllib.request.urlopen(ep + "/metrics", timeout=10) as resp:
+            ctype = resp.headers.get("Content-Type", "")
+            text = resp.read().decode()
+        if "version=0.0.4" not in ctype:
+            raise SystemExit(f"[obs-smoke] {ep}/metrics content type {ctype!r}")
+        missing = [f for f in required if f"# TYPE {f} " not in text]
+        if missing:
+            raise SystemExit(
+                f"[obs-smoke] {ep}/metrics missing families {missing}; "
+                f"got {len(text)} bytes")
+        print(f"[obs-smoke] {ep}: trace echo ok, /metrics ok "
+              f"({len(text.splitlines())} lines)")
+
+
+def _http_smoke_probe(endpoints, xq, metrics=False):
     """The CI smoke sequence against live endpoints: /healthz and /predict
     must 200 with finite predictions; a flood past the admission cap must
     shed 429 WITH a Retry-After hint. Raises SystemExit on any violation."""
@@ -144,8 +188,13 @@ def _http_smoke_probe(endpoints, xq):
     stats_status, stats = _http_json(ep + "/stats")
     if stats_status != 200 or stats["admission"]["shed"] < codes.count(429):
         raise SystemExit(f"[http-smoke] stats disagree with flood: {stats}")
+    if "schema_version" not in stats or "ts" not in stats:
+        raise SystemExit(f"[http-smoke] /stats missing ts/schema_version: "
+                         f"{sorted(stats)}")
     print(f"[http-smoke] flood codes={codes} Retry-After={retry_after} "
           f"shed={stats['admission']['shed']} — OK")
+    if metrics:
+        _metrics_smoke_probe(endpoints, xq)
 
 
 def serve_gp_http(args, ds, cfg, state):
@@ -184,12 +233,13 @@ def serve_gp_http(args, ds, cfg, state):
             base_port=port, buckets=buckets, bm=cfg.bm, bn=cfg.bn,
             rate_qps=args.admission_qps, burst=args.admission_burst,
             max_inflight=args.max_inflight,
+            request_log_dir=args.request_log,
         )
         endpoints = sup.start()
         print(f"[serve-http] {args.replicas} replica(s): {endpoints}")
         try:
             if args.http_smoke:
-                _http_smoke_probe(endpoints, xq)
+                _http_smoke_probe(endpoints, xq, metrics=args.metrics)
             elif args.serve_seconds:
                 time.sleep(args.serve_seconds)
             else:
@@ -200,6 +250,16 @@ def serve_gp_http(args, ds, cfg, state):
         finally:
             sup.stop()
         return
+
+    if args.request_log:
+        # In-process replica: one log file, same layout the supervisor uses.
+        import os
+
+        from repro.obs import trace as obs_trace
+
+        os.makedirs(args.request_log, exist_ok=True)
+        obs_trace.configure(
+            path=os.path.join(args.request_log, "replica_0.jsonl"))
 
     server = MultiModelServer(buckets=buckets, bm=cfg.bm, bn=cfg.bn)
     server.register("default", model, warmup=True)
@@ -220,7 +280,7 @@ def serve_gp_http(args, ds, cfg, state):
     print(f"[serve-http] in-process replica: {endpoint}")
     try:
         if args.http_smoke:
-            _http_smoke_probe([endpoint], xq)
+            _http_smoke_probe([endpoint], xq, metrics=args.metrics)
         elif args.serve_seconds:
             time.sleep(args.serve_seconds)
         else:
@@ -330,6 +390,12 @@ def main(argv=None):
     ap.add_argument("--http-smoke", action="store_true",
                     help="probe /healthz + /predict + overload shedding "
                          "against the live server, then exit (CI smoke)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="with --http-smoke: also assert X-Trace-Id echo and "
+                         "the Prometheus families on GET /metrics")
+    ap.add_argument("--request-log", default=None, metavar="DIR",
+                    help="write per-replica structured JSONL request logs "
+                         "(request/admission/engine span events) under DIR")
     args = ap.parse_args(argv)
     if args.arch == "gp-iterative":
         serve_gp(args)

@@ -1,0 +1,60 @@
+"""Stdlib-only observability: metrics, traces, structured event logs.
+
+The serving stack and the fit driver both need to answer "what did the
+solver/replica actually do over time" without attaching a debugger:
+
+  * :mod:`repro.obs.metrics` — a thread-safe counter / gauge / histogram
+    registry with label support and EWMA gauges, rendered in Prometheus
+    text exposition format by the transport's ``GET /metrics`` endpoint;
+  * :mod:`repro.obs.trace`   — trace-ID minting/sanitising (the
+    ``X-Trace-Id`` header contract), span timing contexts, and a JSON-lines
+    structured event log with a per-process writer. One trace ID follows a
+    request through transport -> admission -> engine -> (append ->) refresh.
+
+Everything here is pure stdlib (no jax import): replicas, CI jobs and the
+offline ``tools/trace_report.py`` reader can use it without an accelerator
+runtime. Solver-side telemetry (per-iteration residual ring buffers) lives
+with the solvers (`repro.solvers.base`) because it runs inside jit; this
+package is where those recordings become events and metrics on the host.
+"""
+from repro.obs.metrics import (
+    NULL_REGISTRY,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    default_registry,
+    render_prometheus,
+)
+from repro.obs.trace import (
+    TRACE_HEADER,
+    EventLog,
+    configure,
+    current_trace_id,
+    emit,
+    get_event_log,
+    new_trace_id,
+    sanitize_trace_id,
+    span,
+    trace_context,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "NULL_REGISTRY",
+    "default_registry",
+    "render_prometheus",
+    "TRACE_HEADER",
+    "EventLog",
+    "configure",
+    "current_trace_id",
+    "emit",
+    "get_event_log",
+    "new_trace_id",
+    "sanitize_trace_id",
+    "span",
+    "trace_context",
+]

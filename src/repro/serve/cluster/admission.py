@@ -29,6 +29,9 @@ from dataclasses import dataclass
 from enum import IntEnum
 from typing import Dict, Optional, Sequence
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 
 class Priority(IntEnum):
     """Higher value = more important; ADMIN/REFRESH are never shed."""
@@ -90,6 +93,12 @@ class TokenBucket:
             return True, 0.0
         return False, (tokens - self._tokens) / self.rate
 
+    def available(self, now: Optional[float] = None) -> float:
+        """Current token fill after refill (the explainability export)."""
+        now = time.monotonic() if now is None else now
+        self._refill(now)
+        return self._tokens
+
 
 @dataclass
 class AdmissionStats:
@@ -135,6 +144,7 @@ class AdmissionController:
         max_inflight: int = 64,
         default_deadline_ms: Optional[float] = None,
         service_ewma_alpha: float = 0.2,
+        registry: Optional[obs_metrics.MetricsRegistry] = None,
     ):
         self.buckets = tuple(sorted({int(b) for b in buckets}))
         self.max_inflight = int(max_inflight)
@@ -149,6 +159,22 @@ class AdmissionController:
         self._inflight = 0
         self._service_ewma_s = 0.0
         self.stats = AdmissionStats()
+        # Observability: None => process default registry; pass
+        # obs_metrics.NULL_REGISTRY to disable. Every admit() outcome becomes
+        # a labelled counter tick and a structured "admission" event carrying
+        # the caller's current trace ID (no-op when no event log is active).
+        reg = obs_metrics.default_registry() if registry is None else registry
+        self._m_decisions = reg.counter(
+            "gp_admission_decisions_total", "Admission outcomes",
+            labelnames=("outcome",))
+        self._m_inflight = reg.gauge(
+            "gp_admission_inflight", "Requests between admit and release")
+        self._m_ewma = reg.gauge(
+            "gp_admission_service_ewma_seconds",
+            "EWMA per-request service time driving deadline shedding")
+        self._m_tokens = reg.gauge(
+            "gp_admission_bucket_tokens", "Token-bucket fill per row bucket",
+            labelnames=("bucket",))
 
     # -- helpers -------------------------------------------------------------
     def _bucket_for(self, rows: int) -> int:
@@ -185,39 +211,63 @@ class AdmissionController:
         """
         now = time.monotonic() if now is None else now
         with self._lock:
-            if priority >= Priority.REFRESH:
-                self._inflight += 1
-                self.stats.bypassed += 1
-                self.stats.admitted += 1
-                return Decision(True, "bypass")
+            decision = self._admit_locked(rows, deadline_ms, priority, now)
+            inflight = self._inflight
+        # Instrumentation outside the admission lock (the event log does
+        # file IO): one labelled counter tick + one structured event that
+        # carries the handler thread's current trace ID.
+        outcome = (decision.reason if decision.reason in ("bypass",)
+                   else "admitted" if decision.admitted
+                   else f"shed_{decision.reason}")
+        self._m_decisions.inc(outcome=outcome)
+        self._m_inflight.set(inflight)
+        obs_trace.emit(
+            "admission", outcome=outcome, rows=rows,
+            priority=priority.name.lower(),
+            retry_after_s=decision.retry_after_s, inflight=inflight,
+        )
+        return decision
 
-            # Cheap checks first; the token is only spent on requests that
-            # every other gate would admit (an inflight- or deadline-shed
-            # request must not burn rate budget).
-            if self._inflight >= self.max_inflight:
-                self.stats.shed_inflight += 1
-                # Everything queued ahead must drain first.
-                retry = max(0.001, self._inflight * self._service_ewma_s)
-                return Decision(False, "inflight", retry_after_s=retry)
-
-            dl = deadline_ms if deadline_ms is not None else self.default_deadline_ms
-            if dl is not None:
-                est_wait_s = self._inflight * self._service_ewma_s
-                if est_wait_s * 1e3 > dl:
-                    self.stats.shed_deadline += 1
-                    return Decision(False, "deadline",
-                                    retry_after_s=max(0.001, est_wait_s))
-
-            limiter = self._limiters.get(self._bucket_for(rows))
-            if limiter is not None:
-                ok, retry = limiter.try_acquire(1.0, now=now)
-                if not ok:
-                    self.stats.shed_rate += 1
-                    return Decision(False, "rate", retry_after_s=retry)
-
+    def _admit_locked(
+        self, rows: int, deadline_ms: Optional[float], priority: Priority,
+        now: float,
+    ) -> Decision:
+        """The admission decision proper; caller holds ``self._lock``."""
+        if priority >= Priority.REFRESH:
             self._inflight += 1
+            self.stats.bypassed += 1
             self.stats.admitted += 1
-            return Decision(True, "ok")
+            return Decision(True, "bypass")
+
+        # Cheap checks first; the token is only spent on requests that
+        # every other gate would admit (an inflight- or deadline-shed
+        # request must not burn rate budget).
+        if self._inflight >= self.max_inflight:
+            self.stats.shed_inflight += 1
+            # Everything queued ahead must drain first.
+            retry = max(0.001, self._inflight * self._service_ewma_s)
+            return Decision(False, "inflight", retry_after_s=retry)
+
+        dl = deadline_ms if deadline_ms is not None else self.default_deadline_ms
+        if dl is not None:
+            est_wait_s = self._inflight * self._service_ewma_s
+            if est_wait_s * 1e3 > dl:
+                self.stats.shed_deadline += 1
+                return Decision(False, "deadline",
+                                retry_after_s=max(0.001, est_wait_s))
+
+        bucket = self._bucket_for(rows)
+        limiter = self._limiters.get(bucket)
+        if limiter is not None:
+            ok, retry = limiter.try_acquire(1.0, now=now)
+            self._m_tokens.set(limiter._tokens, bucket=str(bucket))
+            if not ok:
+                self.stats.shed_rate += 1
+                return Decision(False, "rate", retry_after_s=retry)
+
+        self._inflight += 1
+        self.stats.admitted += 1
+        return Decision(True, "ok")
 
     def release(self, service_s: Optional[float] = None) -> None:
         """Return an admitted request's inflight slot; ``service_s`` feeds the EWMA."""
@@ -230,6 +280,9 @@ class AdmissionController:
                     self._service_ewma_s += self._alpha * (
                         float(service_s) - self._service_ewma_s
                     )
+            inflight, ewma = self._inflight, self._service_ewma_s
+        self._m_inflight.set(inflight)
+        self._m_ewma.set(ewma)
 
     class _Tracker:
         def __init__(self, ctrl: "AdmissionController"):
@@ -255,13 +308,26 @@ class AdmissionController:
         return AdmissionController._Tracker(self)
 
     def as_dict(self) -> dict:
-        """Stats + live gauges for the ``GET /stats`` admission section."""
+        """Stats + live gauges for the ``GET /stats`` admission section.
+
+        ``service_ewma_ms`` and ``bucket_tokens`` (current fill per rate-
+        limited bucket) make shed decisions explainable post-hoc: a shed
+        with near-zero tokens was rate, one with a large EWMA x inflight
+        product was deadline.
+        """
         with self._lock:
+            now = time.monotonic()
+            tokens = {
+                str(b): lim.available(now) for b, lim in self._limiters.items()
+            }
             d = self.stats.as_dict()
             d.update({
                 "inflight": self._inflight,
                 "max_inflight": self.max_inflight,
                 "service_ewma_ms": self._service_ewma_s * 1e3,
                 "rate_limited_buckets": sorted(self._limiters),
+                "bucket_tokens": tokens,
             })
-            return d
+        for b, v in tokens.items():
+            self._m_tokens.set(v, bucket=b)
+        return d

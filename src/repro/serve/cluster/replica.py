@@ -60,10 +60,19 @@ def run_worker(cfg: dict) -> None:
     """Worker process entry point; ``cfg`` is a plain dict of primitives
     (spawn-pickle friendly). Blocks until SIGTERM/SIGINT, then drains."""
     # Imports happen here, inside the spawned process.
+    from repro.obs import trace as obs_trace
     from repro.serve.cluster.admission import AdmissionController
     from repro.serve.cluster.store import ArtifactPoller, latest_version
     from repro.serve.cluster.transport import ServeFrontend, start_http_server
     from repro.serve.multimodel import MultiModelServer
+
+    # Structured request log: one JSONL file per replica process, so the
+    # per-request / admission / engine events of concurrent replicas never
+    # interleave mid-line. Configured before the front-end exists so even
+    # warmup-era events land in the file.
+    request_log = cfg.get("request_log")
+    if request_log:
+        obs_trace.configure(path=request_log)
 
     buckets = tuple(cfg.get("buckets", DEFAULT_BUCKETS))
     server = MultiModelServer(
@@ -135,6 +144,7 @@ class ReplicaSupervisor:
         host: str = "127.0.0.1",
         base_port: int = 0,
         run_dir: Optional[str] = None,
+        request_log_dir: Optional[str] = None,
         **worker_kwargs,
     ):
         if num_replicas < 1:
@@ -146,6 +156,7 @@ class ReplicaSupervisor:
         self.run_dir = run_dir if run_dir is not None else os.path.join(
             store_dir, ".run"
         )
+        self.request_log_dir = request_log_dir
         self.worker_kwargs = worker_kwargs
         self._ctx = multiprocessing.get_context("spawn")
         self._procs: list = [None] * self.num_replicas
@@ -167,6 +178,10 @@ class ReplicaSupervisor:
             "port_file": pf,
             **self.worker_kwargs,
         }
+        if self.request_log_dir:
+            cfg["request_log"] = os.path.join(
+                self.request_log_dir, f"replica_{i}.jsonl"
+            )
         proc = self._ctx.Process(
             target=run_worker, args=(cfg,), name=f"gp-replica-{i}", daemon=True
         )

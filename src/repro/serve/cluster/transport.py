@@ -13,11 +13,24 @@ Endpoints (JSON in/out):
   * ``GET /stats``     — ``EngineStats.as_dict`` + admission counters +
     per-status HTTP counters (+ an ``OnlineGP.stats_dict`` ``refresh``
     section when the replica refreshes in place); the one stats wire
-    format.
+    format, stamped with ``ts`` + ``schema_version``.
+  * ``GET /metrics``   — the process metrics registry in Prometheus text
+    exposition format (request/admission/engine/refresh families; see
+    ``docs/observability.md``).
+  * ``POST /append``   — stream observations into the replica's
+    `OnlineGP` (body ``{"x": [[...], ...], "y": [...]}``); the request's
+    trace ID is remembered and carried by the `RefreshReport` of the
+    refine that absorbs the rows.
   * ``POST /admin/swap`` — fetch a version from the artifact store (body
     ``{"version": v?}``, default LATEST) and atomically swap it in.
   * ``POST /admin/drain`` — stop admitting, report in-flight count (the
     supervisor polls until 0 before stopping the process).
+
+Tracing: every request runs under a trace ID — the inbound ``X-Trace-Id``
+header when it passes :func:`repro.obs.trace.sanitize_trace_id`, a fresh ID
+otherwise — bound as the handler thread's trace context (admission events
+and engine spans pick it up), echoed back as a response header, and stamped
+on the per-request ``request`` event in the structured JSONL log.
 
 Deadlines are budgets from request arrival: admission refuses requests
 whose estimated queue wait already exceeds the budget, and a request that
@@ -37,15 +50,23 @@ from typing import Optional
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.cluster.admission import (
     AdmissionController,
     Priority,
     parse_priority,
 )
-from repro.serve.engine import BucketedEngine
+from repro.serve.engine import STATS_SCHEMA_VERSION, BucketedEngine
 from repro.serve.multimodel import MultiModelServer
 
 DEFAULT_MODEL = "default"
+
+# Known routes: HTTP metric label values. Anything else is labelled
+# "other" so scanners probing random paths cannot blow up label
+# cardinality in the registry.
+ROUTES = ("/predict", "/append", "/healthz", "/stats", "/metrics",
+          "/admin/swap", "/admin/drain")
 
 
 class WireError(Exception):
@@ -72,6 +93,7 @@ class ServeFrontend:
         version: Optional[str] = None,
         default_model: str = DEFAULT_MODEL,
         refresh_source=None,
+        registry: Optional[obs_metrics.MetricsRegistry] = None,
     ):
         self.target = target
         # An OnlineGP (anything with a stats_dict()) feeding this replica:
@@ -92,6 +114,17 @@ class ServeFrontend:
         self.draining = False
         self._lock = threading.Lock()
         self.by_status: dict = {}
+        # HTTP metrics + the registry GET /metrics renders. None => the
+        # process default registry (shared with engine/admission/refresh
+        # instruments); pass obs_metrics.NULL_REGISTRY to disable.
+        self.registry = (obs_metrics.default_registry() if registry is None
+                         else registry)
+        self._m_http = self.registry.counter(
+            "gp_http_requests_total", "HTTP requests by route and status",
+            labelnames=("path", "status"))
+        self._m_http_seconds = self.registry.histogram(
+            "gp_http_request_seconds", "HTTP request latency by route",
+            labelnames=("path",))
 
     # -- helpers -------------------------------------------------------------
     @property
@@ -142,6 +175,12 @@ class ServeFrontend:
         with self._lock:
             self.by_status[status] = self.by_status.get(status, 0) + 1
 
+    def observe_request(self, path: str, status: int, dur_s: float) -> None:
+        """Fold one finished request into the HTTP metric families."""
+        route = path if path in ROUTES else "other"
+        self._m_http.inc(path=route, status=str(status))
+        self._m_http_seconds.observe(dur_s, path=route)
+
     # -- endpoint bodies -----------------------------------------------------
     def healthz(self) -> tuple[int, dict]:
         """``GET /healthz`` body: 200 when serving, 503 draining/model-less."""
@@ -155,10 +194,16 @@ class ServeFrontend:
                      "models": models}
 
     def stats(self) -> tuple[int, dict]:
-        """``GET /stats`` body: engine + admission + http (+ ``refresh``)."""
+        """``GET /stats`` body: engine + admission + http (+ ``refresh``).
+
+        ``ts`` (epoch seconds) and ``schema_version`` let pollers detect
+        stale snapshots and wire-format drift.
+        """
         with self._lock:
             by_status = {str(k): v for k, v in sorted(self.by_status.items())}
         body = {
+            "ts": time.time(),
+            "schema_version": STATS_SCHEMA_VERSION,
             "engine": self._engine.stats_dict(),
             "admission": self.admission.as_dict(),
             "http": {"by_status": by_status},
@@ -169,6 +214,45 @@ class ServeFrontend:
         if self.refresh_source is not None:
             body["refresh"] = self.refresh_source.stats_dict()
         return 200, body
+
+    def metrics(self) -> tuple[int, str, str]:
+        """``GET /metrics``: (status, Prometheus text body, content-type)."""
+        return 200, self.registry.render(), obs_metrics.CONTENT_TYPE
+
+    def append(self, payload: dict) -> tuple[int, dict]:
+        """``POST /append``: stream observations into the replica's OnlineGP.
+
+        The handler's current trace ID is recorded with the rows, so the
+        refine that later absorbs them reports which requests triggered it.
+        """
+        if self.refresh_source is None or not hasattr(
+                self.refresh_source, "append"):
+            raise WireError(
+                400, "this replica has no online refresh source to append to")
+        try:
+            x_new = np.asarray(payload["x"], dtype=np.float32)
+            y_new = np.asarray(payload["y"], dtype=np.float32)
+        except KeyError as e:
+            raise WireError(400, f"missing required field {e}") from None
+        except (TypeError, ValueError) as e:
+            raise WireError(400, f"'x'/'y' not numeric arrays: {e}") from None
+        if x_new.ndim == 1:
+            x_new = x_new[None, :]
+        if x_new.ndim != 2 or y_new.ndim != 1 \
+                or x_new.shape[0] != y_new.shape[0] or x_new.shape[0] == 0:
+            raise WireError(
+                400, f"'x' must be (k, d) and 'y' (k,) with k >= 1, got "
+                     f"{tuple(x_new.shape)} / {tuple(y_new.shape)}")
+        if not (np.all(np.isfinite(x_new)) and np.all(np.isfinite(y_new))):
+            raise WireError(400, "'x'/'y' contain non-finite values")
+        try:
+            self.refresh_source.append(
+                x_new, y_new, trace_id=obs_trace.current_trace_id())
+        except ValueError as e:
+            raise WireError(400, str(e)) from None
+        stats = self.refresh_source.stats_dict()
+        return 200, {"appended": int(x_new.shape[0]), "n": stats.get("n"),
+                     "pending_appends": stats.get("pending_appends")}
 
     def predict(self, payload: dict, arrival: Optional[float] = None
                 ) -> tuple[int, dict, dict]:
@@ -289,10 +373,27 @@ class _Handler(BaseHTTPRequestHandler):
         self.send_response(status)
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(data)))
+        tid = getattr(self, "_trace_id", None)
+        if tid is not None:
+            self.send_header(obs_trace.TRACE_HEADER, tid)
         for k, v in (headers or {}).items():
             self.send_header(k, v)
         self.end_headers()
         self.wfile.write(data)
+        self._status = status
+        self.frontend.record_status(status)
+
+    def _reply_text(self, status: int, text: str, content_type: str):
+        data = text.encode("utf-8")
+        self.send_response(status)
+        self.send_header("Content-Type", content_type)
+        self.send_header("Content-Length", str(len(data)))
+        tid = getattr(self, "_trace_id", None)
+        if tid is not None:
+            self.send_header(obs_trace.TRACE_HEADER, tid)
+        self.end_headers()
+        self.wfile.write(data)
+        self._status = status
         self.frontend.record_status(status)
 
     def _read_json(self) -> dict:
@@ -308,8 +409,40 @@ class _Handler(BaseHTTPRequestHandler):
             raise WireError(400, "JSON body must be an object")
         return payload
 
+    def _traced(self, method: str, run) -> None:
+        """Run one request under its trace context + request-event logging.
+
+        The trace ID is the sanitised inbound ``X-Trace-Id`` (a fresh one
+        when absent/unsafe), bound as the thread's context for the whole
+        handler — admission events and engine spans inherit it — echoed on
+        the response, and stamped on the structured ``request`` event along
+        with route, status and duration.
+        """
+        t0 = time.perf_counter()
+        inbound = obs_trace.sanitize_trace_id(
+            self.headers.get(obs_trace.TRACE_HEADER))
+        with obs_trace.trace_context(inbound) as tid:
+            self._trace_id = tid
+            self._status = 500
+            try:
+                run()
+            finally:
+                dur = time.perf_counter() - t0
+                self.frontend.observe_request(self.path, self._status, dur)
+                obs_trace.emit(
+                    "request", method=method, path=self.path,
+                    status=self._status, dur_ms=dur * 1e3,
+                )
+
     def do_GET(self):
+        self._traced("GET", self._do_get)
+
+    def _do_get(self):
         try:
+            if self.path == "/metrics":
+                status, text, ctype = self.frontend.metrics()
+                self._reply_text(status, text, ctype)
+                return
             if self.path == "/healthz":
                 status, body = self.frontend.healthz()
             elif self.path == "/stats":
@@ -321,6 +454,9 @@ class _Handler(BaseHTTPRequestHandler):
             self._reply(500, {"error": f"{type(e).__name__}: {e}"})
 
     def do_POST(self):
+        self._traced("POST", self._do_post)
+
+    def _do_post(self):
         arrival = time.monotonic()
         try:
             payload = self._read_json()
@@ -330,7 +466,9 @@ class _Handler(BaseHTTPRequestHandler):
                 )
                 self._reply(status, body, headers)
                 return
-            if self.path == "/admin/swap":
+            if self.path == "/append":
+                status, body = self.frontend.append(payload)
+            elif self.path == "/admin/swap":
                 status, body = self.frontend.admin_swap(payload)
             elif self.path == "/admin/drain":
                 status, body = self.frontend.admin_drain()

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
@@ -29,9 +30,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.predict import Predictions
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.artifact import ServableGP, servable_predict
 
 DEFAULT_BUCKETS = (16, 64, 256)
+
+# Version of the stats wire format (`EngineStats.as_dict` / GET /stats).
+# Bump on any key rename/removal so pollers can detect format drift.
+STATS_SCHEMA_VERSION = 2
 
 
 def pad_to_bucket(xq: jax.Array, bucket: int) -> jax.Array:
@@ -88,11 +95,15 @@ class EngineStats:
         and ``benchmarks/serve_cluster``; ``padding_waste`` is the fraction
         of executed rows that were bucketing phantoms, ``num_compiles`` the
         engine's executable count (None = introspection unavailable, which
-        consumers must NOT read as zero).
+        consumers must NOT read as zero). ``ts`` (epoch seconds) and
+        ``schema_version`` let pollers detect stale snapshots and format
+        drift.
         """
         with self._lock:
             executed = self.rows + self.padded_rows
             return {
+                "ts": time.time(),
+                "schema_version": STATS_SCHEMA_VERSION,
                 "requests": self.requests,
                 "batches": self.batches,
                 "rows": self.rows,
@@ -118,6 +129,7 @@ class BucketedEngine:
         buckets: Sequence[int] = DEFAULT_BUCKETS,
         bm: int = 1024,
         bn: int = 1024,
+        registry: Optional[obs_metrics.MetricsRegistry] = None,
     ):
         if not buckets:
             raise ValueError("need at least one bucket size")
@@ -126,6 +138,28 @@ class BucketedEngine:
         self.bn = int(bn)
         self._model = model
         self._model_lock = threading.Lock()
+
+        # Observability: None => the process default registry (scraped by
+        # GET /metrics); pass obs_metrics.NULL_REGISTRY to disable (the
+        # overhead benchmark's baseline arm). Getters are idempotent, so
+        # several engines in one process share the same instruments.
+        reg = obs_metrics.default_registry() if registry is None else registry
+        self._m_requests = reg.counter(
+            "gp_engine_requests_total", "Requests served by the engine")
+        self._m_batches = reg.counter(
+            "gp_engine_batches_total", "Jitted bucket executions",
+            labelnames=("bucket",))
+        self._m_rows = reg.counter(
+            "gp_engine_rows_total", "Query rows executed by kind",
+            labelnames=("kind",))  # kind: real | padded
+        self._m_coalesced = reg.counter(
+            "gp_engine_coalesced_total",
+            "Requests that shared a microbatch with another")
+        self._m_queue_depth = reg.gauge(
+            "gp_engine_queue_depth", "Requests waiting in the engine queue")
+        self._m_batch_seconds = reg.histogram(
+            "gp_engine_batch_seconds", "Engine dispatch latency per bucket",
+            labelnames=("bucket",))
 
         # A fresh function object per engine: jit caches are keyed by the
         # wrapped callable, so this keeps the executable cache (and hence the
@@ -190,6 +224,18 @@ class BucketedEngine:
         """`EngineStats.as_dict` with this engine's compile count folded in."""
         return self.stats.as_dict(num_compiles=self.num_compiles())
 
+    def _observe(self, bucket: int, batch_rows: int, num_requests: int,
+                 dur_s: float) -> None:
+        """Fold one dispatch into stats + metrics (both paths share this)."""
+        self.stats.record(bucket, batch_rows, num_requests)
+        self._m_requests.inc(num_requests)
+        self._m_batches.inc(bucket=str(bucket))
+        self._m_rows.inc(batch_rows, kind="real")
+        self._m_rows.inc(bucket - batch_rows, kind="padded")
+        if num_requests > 1:
+            self._m_coalesced.inc(num_requests)
+        self._m_batch_seconds.observe(dur_s, bucket=str(bucket))
+
     # -- synchronous serving ------------------------------------------------
     def bucket_for(self, m: int) -> int:
         """Smallest bucket covering ``m`` rows (largest bucket if none)."""
@@ -219,10 +265,14 @@ class BucketedEngine:
                 samples=jnp.concatenate([p.samples for p in parts]),
             )
         bucket = self.bucket_for(m)
-        pred = self._predict(
-            model, pad_to_bucket(xq, bucket), bm=self.bm, bn=self.bn
-        )
-        self.stats.record(bucket, m, 1)
+        # Span rides the caller's trace context (the HTTP handler thread on
+        # the sync serving path); no-op unless an event log is configured.
+        with obs_trace.span("engine.submit", bucket=bucket, rows=m):
+            t0 = time.perf_counter()
+            pred = self._predict(
+                model, pad_to_bucket(xq, bucket), bm=self.bm, bn=self.bn
+            )
+            self._observe(bucket, m, 1, time.perf_counter() - t0)
         return _slice_rows(pred, 0, m)
 
     # -- queued / microbatched serving --------------------------------------
@@ -232,6 +282,7 @@ class BucketedEngine:
         """Queue a request; the worker thread resolves the returned Future."""
         fut: Future = Future()
         self._queue.put((xq, model, fut))
+        self._m_queue_depth.set(self._queue.qsize())
         if self._worker is None:
             self.start()
         return fut
@@ -258,6 +309,7 @@ class BucketedEngine:
     def _worker_loop(self) -> None:
         while not self._stop.is_set():
             item = self._queue.get()
+            self._m_queue_depth.set(self._queue.qsize())
             if item is None:
                 continue
             self._run_coalesced(item)
@@ -282,6 +334,7 @@ class BucketedEngine:
             self._queue.get()
             batch.append(nxt)
             total += nxt[0].shape[0]
+        self._m_queue_depth.set(self._queue.qsize())
 
         try:
             model = (first[1] if first[1] is not None else self.model)
@@ -291,12 +344,14 @@ class BucketedEngine:
             if total > bucket:  # only when a single oversized request
                 pred = self.submit(xq, model=model)
             else:
+                t0 = time.perf_counter()
                 pred = _slice_rows(
                     self._predict(model, pad_to_bucket(xq, bucket),
                                   bm=self.bm, bn=self.bn),
                     0, total,
                 )
-                self.stats.record(bucket, total, len(batch))
+                self._observe(bucket, total, len(batch),
+                              time.perf_counter() - t0)
             lo = 0
             for xq_i, _, fut in batch:
                 hi = lo + xq_i.shape[0]

@@ -57,6 +57,8 @@ from repro.core.outer import (
     grow_capacity,
     outer_step,
 )
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.artifact import ServableGP, export_servable
 from repro.solvers import (
     HOperator,
@@ -152,6 +154,9 @@ class RefreshReport(NamedTuple):
     corrected: bool = False  # damped old-row correction ran?
     correction_epochs: float = 0.0  # full-system epochs spent by it
     capacity: int = 0  # padded system rows (== n under growth="exact")
+    # Trace IDs of the requests whose appends this refine absorbed (the
+    # /append -> refresh causality link in the structured event logs).
+    trace_ids: tuple = ()
 
 
 class OnlineGP:
@@ -213,6 +218,21 @@ class OnlineGP:
             "escalations": 0, "corrections": 0, "growth_events": 0,
             "cum_epochs": 0.0, "cum_iters": 0,
         }
+        # Trace IDs of requests whose appends are awaiting a refine; the
+        # next refine drains them into its RefreshReport / "refresh" event.
+        self._pending_traces: list = []
+        reg = obs_metrics.default_registry()
+        self._m_refines = reg.counter(
+            "gp_refresh_refines_total", "Refine operations by mode",
+            labelnames=("mode",))
+        self._m_appended = reg.counter(
+            "gp_refresh_appended_rows_total", "Observations appended")
+        self._m_escalations = reg.counter(
+            "gp_refresh_escalations_total", "auto-mode full-solve escalations")
+        self._m_epochs = reg.counter(
+            "gp_refresh_epochs_total", "Solver epochs spent by refines")
+        self._m_pending = reg.gauge(
+            "gp_refresh_pending_appends", "Appended rows awaiting a refine")
 
         kind = effective_kind(cfg, state.params)
         self._kind = kind
@@ -309,7 +329,8 @@ class OnlineGP:
         self.state = extend_state(self.state, pad, dtype=self.x.dtype)
         self._counters["growth_events"] += 1
 
-    def append(self, x_new: jax.Array, y_new: jax.Array) -> None:
+    def append(self, x_new: jax.Array, y_new: jax.Array,
+               trace_id: Optional[str] = None) -> None:
         """Add observations; extends the warm-start carry with zero rows and
         draws fixed base-probe randomness for the new rows (core hook).
 
@@ -317,11 +338,18 @@ class OnlineGP:
         slots (their probe randomness was drawn at growth time and stays
         fixed — same warm-start contract); capacity only grows, by
         :func:`repro.core.outer.grow_capacity`, when the slots run out.
+
+        ``trace_id`` (default: the caller's current trace context) is
+        remembered until the next :meth:`refine`, whose `RefreshReport` and
+        "refresh" event carry every trace that contributed appends — the
+        causality link from a ``POST /append`` request to the refresh it
+        triggered.
         """
         if x_new.ndim != 2 or x_new.shape[1] != self.x.shape[1]:
             raise ValueError(
                 f"x_new must be (k, {self.x.shape[1]}), got {x_new.shape}"
             )
+        tid = trace_id if trace_id is not None else obs_trace.current_trace_id()
         with self._lock:
             k = x_new.shape[0]
             if self.growth == GROWTH_GEOMETRIC:
@@ -340,6 +368,11 @@ class OnlineGP:
             self._appended += k
             self._counters["appends"] += 1
             self._counters["appended_rows"] += k
+            if tid is not None:
+                self._pending_traces.append(tid)
+            pending = self._appended
+        self._m_appended.inc(k)
+        self._m_pending.set(pending)
 
     # -- refinement ----------------------------------------------------------
     def _record(self, report: RefreshReport) -> None:
@@ -352,6 +385,21 @@ class OnlineGP:
         if report.corrected:
             self._counters["corrections"] += 1
         self._last_report = report
+        self._m_refines.inc(mode=report.mode)
+        self._m_epochs.inc(float(report.epochs))
+        if report.escalated:
+            self._m_escalations.inc()
+        self._m_pending.set(self._appended)
+
+    def _emit_refresh(self, report: RefreshReport) -> None:
+        """One structured "refresh" event per refine (no-op when no log)."""
+        obs_trace.emit(
+            "refresh", mode=report.mode, n=report.n,
+            appended=report.appended, epochs=report.epochs,
+            iters=report.iters, res_y=report.res_y, res_z=report.res_z,
+            escalated=report.escalated, corrected=report.corrected,
+            trace_ids=list(report.trace_ids),
+        )
 
     def refine(
         self,
@@ -429,6 +477,7 @@ class OnlineGP:
             state, x, y, cfg = self.state, self.x, self.y, self.cfg
             appended = self._appended
             n_real = self._n
+            trace_ids = tuple(self._pending_traces)
         kind = self._kind
         cap = int(x.shape[0])
         if mode == "step":
@@ -482,10 +531,12 @@ class OnlineGP:
                     n=n_real, appended=0, epochs=0.0, iters=0,
                     res_y=float(state.last_res_y),
                     res_z=float(state.last_res_z), warm=True, mode=mode,
-                    capacity=cap,
+                    capacity=cap, trace_ids=trace_ids,
                 )
                 with self._lock:
+                    self._pending_traces = self._pending_traces[len(trace_ids):]
                     self._record(report)
+                self._emit_refresh(report)
                 return report
             n0 = n_real - k
             tol = float(self._scfg_full.tolerance)
@@ -616,6 +667,7 @@ class OnlineGP:
                 )
         else:
             raise ValueError(f"unknown refine mode {mode!r}")
+        report = report._replace(trace_ids=trace_ids)
         with self._lock:
             # Appends may have raced this refine (background mode): commit the
             # solved rows into the CURRENT state so their extensions survive.
@@ -628,7 +680,11 @@ class OnlineGP:
                     carry_v=self.state.carry_v.at[n_real:self._n].set(0.0)
                 )
             self._appended = max(0, self._appended - appended)
+            # Drain exactly the traces this refine absorbed; ones appended
+            # mid-refine stay pending for the next one.
+            self._pending_traces = self._pending_traces[len(trace_ids):]
             self._record(report)
+        self._emit_refresh(report)
         return report
 
     # -- observability -------------------------------------------------------

@@ -28,6 +28,8 @@ from repro.solvers.base import (
     SolverNumerics,
     denormalise,
     freeze,
+    history_init,
+    history_record,
     lane_active,
     max_iters_from_epochs,
     normalise_system,
@@ -44,6 +46,7 @@ class _APState(NamedTuple):
     t: jax.Array
     res_y: jax.Array
     res_z: jax.Array
+    hist: Optional[jax.Array]  # (H, 2) residual ring, None when recording off
 
 
 def solve_ap(
@@ -85,7 +88,7 @@ def solve_ap(
     res_y0, res_z0 = residual_norms(r0)
     state0 = _APState(
         v=sysn.v0, r=r0, t=jnp.asarray(0, jnp.int32),
-        res_y=res_y0, res_z=res_z0,
+        res_y=res_y0, res_z=res_z0, hist=history_init(cfg),
     )
 
     def cond(s: _APState):
@@ -117,6 +120,7 @@ def solve_ap(
             t=s.t + active.astype(jnp.int32),
             res_y=freeze(active, res_y, s.res_y),
             res_z=freeze(active, res_z, s.res_z),
+            hist=history_record(s.hist, s.t, res_y, res_z, active),
         )
 
     final = jax.lax.while_loop(cond, body, state0)
@@ -126,4 +130,5 @@ def solve_ap(
         res_z=final.res_z,
         iters=final.t,
         epochs=final.t.astype(jnp.float32) * (bs / n),
+        res_history=final.hist,
     )

@@ -78,6 +78,13 @@ class SolverConfig:
     divergence_threshold: float = float("inf")
     # Numerics
     exact_final_residual: bool = False  # extra full MVM for reporting
+    # Telemetry: record the last `record_history` per-iteration residual
+    # pairs (res_y, res_z) in a fixed-size ring buffer INSIDE the while-loop
+    # (jit-safe, vmap-compatible, no host round-trips). 0 (default) disables
+    # recording entirely — the compiled program is bit-identical to a build
+    # of this module without the feature. Static on purpose: it changes the
+    # loop-carry structure, hence the executable.
+    record_history: int = 0
 
 
 # The numeric fields of SolverConfig — everything a compiled solver merely
@@ -164,6 +171,67 @@ class SolveResult(NamedTuple):
     res_z: jax.Array  # mean relative residual over probe systems
     iters: jax.Array  # inner iterations executed
     epochs: jax.Array  # solver epochs consumed (budget units)
+    # (H, 2) ring buffer of [res_y, res_z] after each iteration when
+    # SolverConfig.record_history = H > 0, else None (None is an empty
+    # pytree leaf, so jit/vmap/scan signatures stay clean when off).
+    # Slot ``j % H`` holds the residuals after iteration ``j + 1``; unfilled
+    # slots are NaN. Use :func:`unroll_history` to restore time order.
+    res_history: Optional[jax.Array] = None
+
+
+def history_init(cfg: SolverConfig, dtype=jnp.float32) -> Optional[jax.Array]:
+    """Fresh NaN-filled ``(record_history, 2)`` ring, or None when off.
+
+    The None/array split happens at trace time on the STATIC config field,
+    so the disabled path contributes nothing to the loop carry and compiles
+    to the identical program.
+    """
+    if cfg.record_history <= 0:
+        return None
+    return jnp.full((cfg.record_history, 2), jnp.nan, dtype)
+
+
+def history_record(
+    hist: Optional[jax.Array], t: jax.Array, res_y: jax.Array,
+    res_z: jax.Array, active: jax.Array,
+) -> Optional[jax.Array]:
+    """Write ``[res_y, res_z]`` into ring slot ``t % H``; freeze-masked.
+
+    ``t`` is the pre-increment iteration counter, so iteration j+1's
+    residuals land in slot j (mod H). ``dynamic_update_slice`` handles the
+    traced slot index and vmaps cleanly; the :func:`freeze` mask keeps a
+    converged lane's ring bit-identical to its single-lane solve.
+    """
+    if hist is None:
+        return None
+    entry = jnp.stack([res_y, res_z]).astype(hist.dtype)
+    slot = jnp.mod(t, hist.shape[0])
+    new = jax.lax.dynamic_update_slice(hist, entry[None, :], (slot, 0))
+    return freeze(active, new, hist)
+
+
+def unroll_history(hist, iters) -> Optional[jax.Array]:
+    """Host-side: ring buffer -> time-ordered ``(H, 2)`` residual history.
+
+    Row k holds the residuals after iteration ``iters - H + 1 + k`` (NaN
+    where the solve finished in fewer than H iterations). Accepts numpy or
+    jax inputs; leading lane axes are handled by recursing per lane.
+    """
+    import numpy as np
+
+    if hist is None:
+        return None
+    hist = np.asarray(hist)
+    if hist.ndim > 2:  # lane-stacked: unroll each lane independently
+        iters = np.broadcast_to(np.asarray(iters), hist.shape[:-2])
+        return np.stack([
+            unroll_history(h, i) for h, i in zip(hist, iters)
+        ])
+    h = hist.shape[0]
+    n = int(iters)
+    if n <= h:  # ring never wrapped: slots 0..n-1 are already in order
+        return hist
+    return np.roll(hist, -(n % h), axis=0)
 
 
 class NormalisedSystem(NamedTuple):

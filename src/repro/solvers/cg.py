@@ -25,6 +25,8 @@ from repro.solvers.base import (
     SolverNumerics,
     denormalise,
     freeze,
+    history_init,
+    history_record,
     lane_active,
     max_iters_from_epochs,
     normalise_system,
@@ -44,6 +46,7 @@ class _CGState(NamedTuple):
     t: jax.Array
     res_y: jax.Array
     res_z: jax.Array
+    hist: Optional[jax.Array]  # (H, 2) residual ring, None when recording off
 
 
 def solve_cg(
@@ -84,6 +87,7 @@ def solve_cg(
     state0 = _CGState(
         v=sysn.v0, r=r0, d=p0, gamma=gamma0,
         t=jnp.asarray(0, jnp.int32), res_y=res_y0, res_z=res_z0,
+        hist=history_init(cfg),
     )
 
     def cond(s: _CGState):
@@ -117,6 +121,7 @@ def solve_cg(
             t=s.t + active.astype(jnp.int32),
             res_y=freeze(active, res_y, s.res_y),
             res_z=freeze(active, res_z, s.res_z),
+            hist=history_record(s.hist, s.t, res_y, res_z, active),
         )
 
     final = jax.lax.while_loop(cond, body, state0)
@@ -126,4 +131,5 @@ def solve_cg(
         res_z=final.res_z,
         iters=final.t,
         epochs=final.t.astype(jnp.float32),
+        res_history=final.hist,
     )

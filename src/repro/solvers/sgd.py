@@ -33,6 +33,8 @@ from repro.solvers.base import (
     SolverNumerics,
     denormalise,
     freeze,
+    history_init,
+    history_record,
     lane_active,
     lane_diverged,
     max_iters_from_epochs,
@@ -51,6 +53,7 @@ class _SGDState(NamedTuple):
     t: jax.Array
     res_y: jax.Array
     res_z: jax.Array
+    hist: Optional[jax.Array]  # (H, 2) residual ring, None when recording off
 
 
 def solve_sgd(
@@ -100,6 +103,7 @@ def solve_sgd(
         t=jnp.asarray(0, jnp.int32),
         res_y=res_y0,
         res_z=res_z0,
+        hist=history_init(cfg),
     )
 
     def _active(s: _SGDState):
@@ -150,6 +154,7 @@ def solve_sgd(
             t=s.t + active.astype(jnp.int32),
             res_y=freeze(active, res_y, s.res_y),
             res_z=freeze(active, res_z, s.res_z),
+            hist=history_record(s.hist, s.t, res_y, res_z, active),
         )
 
     final = jax.lax.while_loop(cond, body, state0)
@@ -162,5 +167,6 @@ def solve_sgd(
         res_y, res_z = residual_norms(r_exact)
         epochs = epochs + 1.0
     return SolveResult(
-        v=v_out, res_y=res_y, res_z=res_z, iters=final.t, epochs=epochs
+        v=v_out, res_y=res_y, res_z=res_z, iters=final.t, epochs=epochs,
+        res_history=final.hist,
     )

@@ -28,6 +28,7 @@ LINT_PACKAGES = (
     "src/repro/core",
     "src/repro/serve",
     "src/repro/online",
+    "src/repro/obs",
 )
 
 # Markdown files whose links must resolve (docs/*.md globbed separately).

@@ -1,0 +1,170 @@
+"""Render structured JSONL event logs as per-trace waterfalls.
+
+Consumes the files written by ``repro.obs.trace`` (replica request logs,
+``fit(event_log=...)`` training logs, ``REPRO_OBS_LOG``) and prints:
+
+  * a **per-trace waterfall** — every event carrying a trace ID, ordered by
+    timestamp, with millisecond offsets from the trace's first event, so one
+    request can be followed transport -> admission -> engine span -> reply
+    (and, for appends, into the refresh that folded them in);
+  * a **residual-decay summary** — for ``solve_step`` events that carry the
+    solver ring (``SolverConfig.record_history``), the per-step first/last
+    residual, the decay factor, and a coarse log10 sparkline of the
+    trajectory; plus the closing ``fit_done`` totals.
+
+Stdlib only, read-only, tolerant of truncated tail lines (a live log can be
+mid-write).
+
+Usage:
+    python tools/trace_report.py LOG.jsonl [MORE.jsonl ...]
+        [--trace ID] [--kind KIND] [--limit N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Fields already rendered in an event's fixed columns — everything else is
+# shown as trailing key=value detail.
+_SHOWN = {"ts", "kind", "trace_id", "dur_ms", "res_history"}
+_SPARK = "▁▂▃▄▅▆▇█"
+
+
+def load_events(paths):
+    """All parseable events from ``paths``, each tagged with its source file."""
+    events = []
+    for path in paths:
+        try:
+            with open(path) as f:
+                lines = f.readlines()
+        except OSError as e:
+            print(f"[trace-report] skipping {path}: {e}", file=sys.stderr)
+            continue
+        for line in lines:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError:
+                continue  # live log mid-write: the tail line may be partial
+            if isinstance(ev, dict) and "ts" in ev and "kind" in ev:
+                ev["_src"] = path
+                events.append(ev)
+    events.sort(key=lambda e: e["ts"])
+    return events
+
+
+def _detail(ev) -> str:
+    parts = []
+    for k, v in ev.items():
+        if k in _SHOWN or k.startswith("_") or v is None:
+            continue
+        if isinstance(v, float):
+            v = f"{v:.4g}"
+        parts.append(f"{k}={v}")
+    return " ".join(parts)
+
+
+def _sparkline(values) -> str:
+    """Coarse log-scale sparkline (empty for <2 finite positive points)."""
+    import math
+
+    logs = [math.log10(v) for v in values if v and v > 0]
+    if len(logs) < 2:
+        return ""
+    lo, hi = min(logs), max(logs)
+    span = (hi - lo) or 1.0
+    idx = [int((x - lo) / span * (len(_SPARK) - 1)) for x in logs]
+    return "".join(_SPARK[i] for i in idx)
+
+
+def print_waterfall(events, trace=None, limit=0):
+    """One block per trace ID, events offset in ms from the trace's start."""
+    traces: dict = {}
+    for ev in events:
+        tid = ev.get("trace_id")
+        if tid is None or (trace is not None and tid != trace):
+            continue
+        traces.setdefault(tid, []).append(ev)
+    if not traces:
+        print("no traced events" + (f" for trace {trace!r}" if trace else ""))
+        return
+    shown = 0
+    for tid, evs in traces.items():
+        if limit and shown >= limit:
+            print(f"... {len(traces) - shown} more traces (raise --limit)")
+            break
+        shown += 1
+        t0 = evs[0]["ts"]
+        span_ms = (evs[-1]["ts"] - t0) * 1e3
+        print(f"trace {tid}  ({len(evs)} events, {span_ms:.1f}ms)")
+        for ev in evs:
+            off = (ev["ts"] - t0) * 1e3
+            dur = ev.get("dur_ms")
+            dur_s = f" [{dur:.2f}ms]" if isinstance(dur, (int, float)) else ""
+            print(f"  +{off:9.2f}ms  {ev['kind']:<10}{dur_s:<12} "
+                  f"{_detail(ev)}")
+        print()
+
+
+def print_residual_summary(events):
+    """Convergence table from solve_step rings + the fit_done totals."""
+    steps = [e for e in events if e["kind"] == "solve_step"]
+    if steps:
+        print("residual decay (solve_step):")
+        print(f"  {'step':>4} {'solver':<6} {'lane':>4} {'iters':>5} "
+              f"{'first_res':>10} {'last_res':>10} {'decay':>9}  trajectory")
+        for ev in steps:
+            ring = ev.get("res_history") or []
+            res = [row[0] for row in ring if isinstance(row, (list, tuple))]
+            first = res[0] if res else ev.get("res_y")
+            last = res[-1] if res else ev.get("res_y")
+            decay = (last / first) if first else float("nan")
+            lane = ev.get("lane")
+            print(f"  {ev.get('step', -1):>4} {ev.get('solver', '?'):<6} "
+                  f"{'-' if lane is None else lane:>4} "
+                  f"{ev.get('iters', 0):>5} {first:>10.3e} {last:>10.3e} "
+                  f"{decay:>9.2e}  {_sparkline(res)}")
+    for ev in events:
+        if ev["kind"] == "fit_done":
+            print(f"fit_done: solver={ev.get('solver')} "
+                  f"steps={ev.get('num_steps')} iters={ev.get('total_iters')} "
+                  f"epochs={ev.get('total_epochs'):.1f} "
+                  f"wall={ev.get('wall_time_s'):.2f}s "
+                  f"solver_time={ev.get('solver_time_s'):.2f}s")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("logs", nargs="+", help="JSONL event logs")
+    ap.add_argument("--trace", default=None,
+                    help="show only this trace ID's waterfall")
+    ap.add_argument("--kind", default=None,
+                    help="keep only events of this kind")
+    ap.add_argument("--limit", type=int, default=20,
+                    help="max traces in the waterfall (0 = all)")
+    args = ap.parse_args(argv)
+
+    events = load_events(args.logs)
+    if args.kind:
+        events = [e for e in events if e["kind"] == args.kind]
+    if not events:
+        print("no events parsed")
+        return 1
+    kinds: dict = {}
+    for e in events:
+        kinds[e["kind"]] = kinds.get(e["kind"], 0) + 1
+    print(f"{len(events)} events from {len(args.logs)} log(s): "
+          + ", ".join(f"{k}={n}" for k, n in sorted(kinds.items())))
+    print()
+    print_waterfall(events, trace=args.trace, limit=args.limit)
+    print_residual_summary(events)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
