@@ -9,7 +9,7 @@ import numpy as np
 
 from repro.core import OuterConfig, fit
 from repro.data.synthetic import load_dataset, pad_to_block_multiple
-from repro.solvers import SolverConfig
+from repro.solvers import NO_EPOCH_BUDGET, SolverConfig
 
 
 def bench_dataset(name="pol", max_n=800):
@@ -31,17 +31,28 @@ def run_variant(
     tolerance: float = 0.01,
     seed: int = 0,
     eval_at_end: bool = True,
+    record_history: int = 0,
+    budget_policy=None,
 ):
-    """One (solver x estimator x warm-start [x budget]) cell. Returns dict."""
+    """One (solver x estimator x warm-start [x budget]) cell. Returns dict.
+
+    ``budget <= 0`` means no per-step epoch budget (run each solve to
+    tolerance — the explicit ``NO_EPOCH_BUDGET`` sentinel). ``budget_policy``
+    (a ``repro.solvers.adaptive.BudgetPolicy``) switches the fit to adaptive
+    per-step allocation; it requires ``record_history >= 2``. The returned
+    dict carries cumulative epoch accounting: ``cum_epochs`` is the running
+    total over steps (``cum_epochs[-1] == total_epochs``).
+    """
     x, y = ds.x_train, ds.y_train
     if solver in ("ap", "sgd"):
         blk = block_size if solver == "ap" else batch_size
         x, y, _ = pad_to_block_multiple(x, y, blk)
     scfg = SolverConfig(
         name=solver, tolerance=tolerance,
-        max_epochs=budget if budget > 0 else 1e9,
+        max_epochs=budget if budget > 0 else NO_EPOCH_BUDGET,
         precond_rank=precond_rank, block_size=block_size,
         batch_size=batch_size, learning_rate=sgd_lr,
+        record_history=record_history,
     )
     cfg = OuterConfig(
         estimator="pathwise" if pathwise else "standard",
@@ -50,12 +61,15 @@ def run_variant(
     )
     res = fit(x, y, cfg, key=jax.random.PRNGKey(seed),
               x_test=ds.x_test, y_test=ds.y_test,
-              eval_every=steps if eval_at_end else 0)
+              eval_every=steps if eval_at_end else 0,
+              budget_policy=budget_policy)
+    cum_epochs = np.cumsum(res.history["epochs"])
     out = {
         "solver": solver, "pathwise": pathwise, "warm": warm,
         "budget": budget,
         "total_time_s": res.wall_time_s,
-        "total_epochs": float(res.history["epochs"].sum()),
+        "total_epochs": float(cum_epochs[-1]),
+        "cum_epochs": cum_epochs,
         "total_iters": int(res.history["iters"].sum()),
         "final_res_y": float(res.history["res_y"][-1]),
         "final_res_z": float(res.history["res_z"][-1]),
@@ -64,6 +78,9 @@ def run_variant(
         "res_z_per_step": res.history["res_z"],
         "iters_per_step": res.history["iters"],
     }
+    if budget_policy is not None:
+        out["budget_alloc_per_step"] = res.history["budget_alloc"]
+        out["budget_pool_left"] = float(res.history["budget_pool"][-1])
     if eval_at_end and len(res.history["eval_llh"]):
         out["test_llh"] = float(res.history["eval_llh"][-1])
         out["test_rmse"] = float(res.history["eval_rmse"][-1])

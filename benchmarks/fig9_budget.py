@@ -30,6 +30,7 @@ def main(small: bool = True):
                         r["total_time_s"] * 1e6 / steps,
                         f"final_res_z={r['final_res_z']:.4f};"
                         f"mean_res_z={r['mean_res_z']:.4f};"
+                        f"cum_epochs={r['cum_epochs'][-1]:.1f};"
                         f"llh={r.get('test_llh', float('nan')):.3f}",
                     )
 

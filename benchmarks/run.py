@@ -33,6 +33,7 @@ MODULES = [
     "serve_cluster",
     "online_bo",
     "obs_overhead",
+    "adaptive_budget",
 ]
 
 

@@ -19,6 +19,7 @@ from repro.core.estimators import PATHWISE, build_system_targets, init_probes
 from repro.core.outer import (
     OuterConfig,
     OuterState,
+    _require_history,
     effective_kind,
     init_outer_state,
     init_outer_state_lanes,
@@ -40,6 +41,12 @@ from repro.solvers import (
     SolverNumerics,
     broadcast_numerics,
     solve,
+)
+from repro.solvers.adaptive import (
+    MIN_RECORD_HISTORY,
+    BudgetPolicy,
+    broadcast_policy,
+    resolve_horizon,
 )
 from repro.train.adam import AdamConfig, adam_init, adam_update
 
@@ -204,6 +211,12 @@ def _append_round(history: dict, metrics: dict, dt: float, k: int,
     recorded residual rings (``SolverConfig.record_history``), the metrics
     carry ``res_history`` and each event (and the history dict) gets the
     step's time-ordered residual trajectory.
+
+    Under an adaptive budget (``fit(budget_policy=...)``) the metrics carry
+    the ``budget_*`` family; those columns join the history dict and each
+    step additionally emits a ``budget_decision`` event — predicted vs
+    realised epochs plus the controller's calibrated state (schema:
+    ``docs/adaptive.md``).
     """
     def col(name, dtype=float):
         a = np.asarray(metrics[name])
@@ -231,6 +244,11 @@ def _append_round(history: dict, metrics: dict, dt: float, k: int,
         a = a[:, lane] if lane is not None else a  # (k, H, 2)
         rings = np.stack([unroll_history(h, i) for h, i in zip(a, iters)])
         history.setdefault("res_history", []).extend(rings)
+    budget_cols = {
+        name: col(name) for name in metrics if name.startswith("budget_")
+    }
+    for name, vals in budget_cols.items():
+        history.setdefault(name, []).extend(vals)
     if event_log is not None:
         for j in range(k):
             fields = dict(
@@ -243,6 +261,12 @@ def _append_round(history: dict, metrics: dict, dt: float, k: int,
                 row = rings[j]
                 fields["res_history"] = row[np.isfinite(row[:, 0])].tolist()
             event_log.emit("solve_step", **fields)
+            if budget_cols:
+                event_log.emit("budget_decision", step=int(steps[j]),
+                               solver=solver, lane=lane, **{
+                                   name[len("budget_"):]: float(vals[j])
+                                   for name, vals in budget_cols.items()
+                               })
     return float(np.sum(dt / k * frac))
 
 
@@ -262,6 +286,7 @@ def fit(
     steps_per_round: int = 8,
     numerics: Optional[SolverNumerics] = None,
     event_log=None,
+    budget_policy: Optional[BudgetPolicy] = None,
 ) -> FitResult:
     """Run ``cfg.num_steps`` outer MLL steps with optional eval/checkpointing.
 
@@ -294,8 +319,23 @@ def fit(
     iteration/epoch counts, per-step residual trajectory when
     ``cfg.solver.record_history`` is on) plus a final ``fit_done`` summary —
     wall-clock-free ground truth for convergence-ordering assertions.
+
+    ``budget_policy`` (a scalar-leaf
+    :class:`repro.solvers.adaptive.BudgetPolicy`, see
+    ``make_budget_policy``) turns on the adaptive budget controller: each
+    step's ``max_epochs`` becomes the controller's traced allocation,
+    calibrated online from the solver residual rings — which requires
+    ``cfg.solver.record_history >= 2`` (raises ``ValueError`` otherwise).
+    An :data:`~repro.solvers.adaptive.AUTO_HORIZON` horizon is resolved to
+    ``cfg.num_steps`` here. History gains the ``budget_*`` columns and
+    ``event_log`` a per-step ``budget_decision`` event; ``None`` (default)
+    keeps ``fit`` bit-identical to the fixed-budget behaviour.
     """
     key = key if key is not None else jax.random.PRNGKey(0)
+    policy = budget_policy
+    if policy is not None:
+        _require_history(cfg)  # eager: fail before any compile work
+        policy = resolve_horizon(policy, cfg.num_steps)
     state = init_outer_state(key, cfg, x, init_params=init_params)
     start_step = 0
     if ckpt_dir and resume and latest_step(ckpt_dir) is not None:
@@ -311,7 +351,16 @@ def fit(
                         eval_every if x_test is not None else 0,
                         ckpt_every if ckpt_dir else 0)
         ts = time.perf_counter()
-        state, metrics = outer_scan(state, x, y, cfg, k, numerics=numerics)
+        if policy is None:
+            state, metrics = outer_scan(state, x, y, cfg, k,
+                                        numerics=numerics)
+        else:
+            # The policy rides the scan carry WITHIN a chunk and is handed
+            # back in explicitly ACROSS chunks — EMAs, anneal counter and
+            # epoch pool are invariant to the chunking.
+            (state, policy), metrics = outer_scan(
+                state, x, y, cfg, k, numerics=numerics, budget=policy
+            )
         jax.block_until_ready(state.carry_v)
         dt = time.perf_counter() - ts
         solver_time += _append_round(history, metrics, dt, k,
@@ -366,6 +415,7 @@ def fit_batch(
     numerics: Optional[SolverNumerics] = None,
     mesh=None,
     event_log=None,
+    budget_policy: Optional[BudgetPolicy] = None,
 ) -> list[FitResult]:
     """Fit B scenario lanes sharing one dataset and static config in ONE
     compiled program (one executable, vmap over lanes, scan over steps).
@@ -394,6 +444,13 @@ def fit_batch(
     shared wall clock divided by B (the amortised per-scenario cost);
     ``solver_time_s`` splits each lane's share by its own epoch accounting.
     ``event_log`` emits lane-tagged ``solve_step`` events (see :func:`fit`).
+
+    ``budget_policy`` turns on per-lane adaptive budgets: scalar leaves are
+    broadcast to every lane, already-(B,)-stacked leaves give each lane its
+    own pool/floor/ceiling — the controller then allocates, calibrates and
+    anneals independently per lane inside the same executable (lane ``l``
+    matches ``fit(..., budget_policy=<lane l's policy>)``). Requires
+    ``cfg.solver.record_history >= 2``; see :func:`fit`.
     """
     keys = jnp.asarray(keys)
     lanes = keys.shape[0]
@@ -401,6 +458,11 @@ def fit_batch(
     assert num_lanes(states) == lanes
     if numerics is not None:
         numerics = broadcast_numerics(numerics, lanes)
+    policy = budget_policy
+    if policy is not None:
+        _require_history(cfg)  # eager: fail before any compile work
+        policy = broadcast_policy(resolve_horizon(policy, cfg.num_steps),
+                                  lanes)
     if mesh is not None:
         from jax.sharding import NamedSharding, PartitionSpec
 
@@ -417,6 +479,8 @@ def fit_batch(
         y = jax.device_put(y, replicated)
         if numerics is not None:
             numerics = jax.device_put(numerics, lane_sharding)
+        if policy is not None:
+            policy = jax.device_put(policy, lane_sharding)
 
     histories = [_empty_history() for _ in range(lanes)]
     t0 = time.perf_counter()
@@ -426,8 +490,14 @@ def fit_batch(
     while step < cfg.num_steps:
         k = _round_size(step, cfg.num_steps, steps_per_round)
         ts = time.perf_counter()
-        states, metrics = outer_scan(states, x, y, cfg, k, lanes=True,
-                                     numerics=numerics)
+        if policy is None:
+            states, metrics = outer_scan(states, x, y, cfg, k, lanes=True,
+                                         numerics=numerics)
+        else:
+            (states, policy), metrics = outer_scan(
+                states, x, y, cfg, k, lanes=True, numerics=numerics,
+                budget=policy,
+            )
         jax.block_until_ready(states.carry_v)
         dt = time.perf_counter() - ts
         # One device->host transfer per metric, not one per metric per lane.

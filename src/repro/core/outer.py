@@ -39,7 +39,19 @@ from repro.core.estimators import (
 )
 from repro.core.gradients import mll_grad_estimate
 from repro.gp.hyperparams import HyperParams
-from repro.solvers import HOperator, SolverConfig, SolverNumerics, solve
+from repro.solvers import (
+    HOperator,
+    SolverConfig,
+    SolverNumerics,
+    numerics_of,
+    solve,
+)
+from repro.solvers.adaptive import (
+    MIN_RECORD_HISTORY,
+    BudgetPolicy,
+    budget_allocate,
+    budget_observe,
+)
 from repro.train.adam import AdamConfig, AdamState, adam_init, adam_update
 
 
@@ -333,6 +345,91 @@ def outer_step_lanes(
     return _outer_step_lanes(states, x, y, cfg, numerics)
 
 
+def _require_history(cfg: OuterConfig) -> None:
+    """Trace-time guard: adaptive budgets need the solver residual ring.
+
+    The decay estimator fits a slope to ``SolveResult.res_history``;
+    without at least :data:`MIN_RECORD_HISTORY` recorded points there is
+    no model to calibrate and the controller would silently run its
+    fixed-budget fallback forever — an error beats a misprediction.
+    """
+    if cfg.solver.record_history < MIN_RECORD_HISTORY:
+        raise ValueError(
+            "adaptive budgets (budget_policy=) require solver residual "
+            f"telemetry: set SolverConfig.record_history >= "
+            f"{MIN_RECORD_HISTORY} (got {cfg.solver.record_history}); the "
+            "decay estimator fits its model to SolveResult.res_history"
+        )
+
+
+def _outer_step_budget(
+    state: OuterState, policy: BudgetPolicy, x: jax.Array, y: jax.Array,
+    cfg: OuterConfig, numerics: Optional[SolverNumerics] = None,
+) -> tuple[OuterState, BudgetPolicy, dict]:
+    """One outer step under the adaptive budget controller (unjitted).
+
+    allocate -> solve (the SAME :func:`_outer_step` body, with
+    ``max_epochs`` replaced by the controller's traced allocation) ->
+    observe (fold the step's residual ring back into the policy state).
+    vmap-safe like :func:`_outer_step`: lane-stacked ``policy`` leaves
+    give per-lane budgets inside one executable.
+
+    The metrics dict gains the ``budget_*`` telemetry family — the traced
+    half of the ``budget_decision`` event the driver emits per step:
+    ``budget_alloc`` (epochs granted), ``budget_pred_to_tol`` (predicted
+    epochs to reach tolerance; NaN before the first accepted fit),
+    ``budget_realised``/``budget_res``/``budget_slope``/``budget_noise``/
+    ``budget_perturbation``/``budget_grad_noise``/``budget_pool``/
+    ``budget_epochs_per_iter`` from :func:`budget_observe`.
+    """
+    _require_history(cfg)
+    num = numerics if numerics is not None else numerics_of(cfg.solver)
+    alloc, pred = budget_allocate(policy, num)
+    new_state, metrics = _outer_step(
+        state, x, y, cfg, num._replace(max_epochs=alloc)
+    )
+    new_policy, decision = budget_observe(
+        policy, metrics["res_history"], metrics["iters"], metrics["epochs"],
+        metrics["res_y"], metrics["res_z"], num.tolerance,
+    )
+    metrics["budget_alloc"] = alloc
+    metrics["budget_pred_to_tol"] = pred
+    for name, val in decision.items():
+        metrics[f"budget_{name}"] = val
+    return new_state, new_policy, metrics
+
+
+outer_step_budget = partial(jax.jit, static_argnames=("cfg",))(
+    _outer_step_budget
+)
+
+
+def _outer_step_budget_lanes(
+    states: OuterState, policy: BudgetPolicy, x: jax.Array, y: jax.Array,
+    cfg: OuterConfig, numerics: Optional[SolverNumerics] = None,
+) -> tuple[OuterState, BudgetPolicy, dict]:
+    if numerics is None:
+        return jax.vmap(
+            lambda s, p: _outer_step_budget(s, p, x, y, cfg)
+        )(states, policy)
+    return jax.vmap(
+        lambda s, p, nm: _outer_step_budget(s, p, x, y, cfg, nm)
+    )(states, policy, numerics)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def outer_step_budget_lanes(
+    states: OuterState, policy: BudgetPolicy, x: jax.Array, y: jax.Array,
+    cfg: OuterConfig, numerics: Optional[SolverNumerics] = None,
+) -> tuple[OuterState, BudgetPolicy, dict]:
+    """Lane-stacked :func:`outer_step_budget`: each lane allocates, solves
+    and observes under its OWN :class:`BudgetPolicy` leaves (and optional
+    per-lane ``numerics``) — adaptive tolerance/budget grids stay one
+    executable, exactly like :func:`outer_step_lanes`.
+    """
+    return _outer_step_budget_lanes(states, policy, x, y, cfg, numerics)
+
+
 @partial(jax.jit, static_argnames=("cfg", "num_steps", "lanes"))
 def outer_scan(
     state: OuterState,
@@ -342,6 +439,7 @@ def outer_scan(
     num_steps: int,
     lanes: bool = False,
     numerics: Optional[SolverNumerics] = None,
+    budget: Optional[BudgetPolicy] = None,
 ) -> tuple[OuterState, dict]:
     """Run ``num_steps`` outer MLL steps under one ``lax.scan`` dispatch.
 
@@ -353,13 +451,31 @@ def outer_scan(
     traced function. ``numerics`` is threaded to every step (lane-stacked
     when ``lanes=True``); with lane-sharded inputs (``NamedSharding`` over
     the lane axis) the same program runs data-parallel across devices.
+
+    ``budget`` (a :class:`BudgetPolicy`, lane-stacked when ``lanes=True``)
+    switches the scan body to :func:`_outer_step_budget`: the policy state
+    rides the scan carry — EMAs and the epoch pool survive chunk
+    boundaries because the caller passes the RETURNED policy into the next
+    chunk — and the return value becomes ``((state, policy), metrics)``
+    with the ``budget_*`` metrics family stacked over steps. ``None``
+    (default) is the existing fixed-budget path, bit-identical to before.
     """
-    step = _outer_step_lanes if lanes else _outer_step
+    if budget is None:
+        step = _outer_step_lanes if lanes else _outer_step
 
-    def body(s, _):
-        return step(s, x, y, cfg, numerics)
+        def body(s, _):
+            return step(s, x, y, cfg, numerics)
 
-    return jax.lax.scan(body, state, None, length=num_steps)
+        return jax.lax.scan(body, state, None, length=num_steps)
+
+    bstep = _outer_step_budget_lanes if lanes else _outer_step_budget
+
+    def bbody(carry, _):
+        s, p = carry
+        s2, p2, m = bstep(s, p, x, y, cfg, numerics)
+        return (s2, p2), m
+
+    return jax.lax.scan(bbody, (state, budget), None, length=num_steps)
 
 
 def stack_states(states) -> OuterState:

@@ -9,6 +9,9 @@ instead of the one-subprocess-per-cell pattern of ``launch.sweep``, and
 numeric solver settings (tolerance / epoch budget / SGD lr — a sweep over
 the paper's early-stopping and compute-budget knobs) ride as a lane-stacked
 traced ``SolverNumerics`` pytree, so a tolerance x lr grid does NOT retrace.
+A ``--precond-ranks`` grid is the static counterexample: rank changes the
+preconditioner's shapes, so each rank is its own group (and executable) and
+its cells carry an ``__rk<r>`` artifact tag.
 Per-cell JSON artifacts and the ``_sweep_status.json`` summary keep the
 sweep-output conventions (done cells are skipped on re-run, so the sweep is
 resumable).
@@ -45,13 +48,22 @@ from repro.configs.gp_iterative import KERNEL_SWEEP, SMOKE, GPArchConfig
 
 
 class Cell(NamedTuple):
-    """One sweep cell: an arch at one seed and one numeric solver setting."""
+    """One sweep cell: an arch at one seed and one solver setting.
+
+    ``rank`` (preconditioner rank) is the one STATIC solver axis a sweep
+    may grid over: unlike the traced tolerance/lr/budget axes it changes
+    array shapes, so cells differing in rank land in different static
+    groups (one executable per rank — the minimal form of the ROADMAP
+    per-lane-preconditioner follow-up, which needs shape bucketing to go
+    further).
+    """
 
     arch: GPArchConfig
     seed: int
     tolerance: float
     lr: float
     epochs: float
+    rank: int  # preconditioner rank (static: partitions groups)
     tag: str  # filename suffix for the numeric axes ("" for 1-point grids)
 
 
@@ -92,12 +104,17 @@ def _parse_grid(text: Optional[str], default: float) -> list[float]:
 
 
 def make_cells(archs: list[GPArchConfig], seeds: list[int], args) -> list[Cell]:
-    """arch x seed x tolerance x lr x epoch-budget grid, with filename tags
-    only for the numeric axes that actually have more than one point (so
-    plain kernel x seed sweeps keep their legacy artifact names)."""
+    """arch x seed x tolerance x lr x epoch-budget x precond-rank grid, with
+    filename tags only for the solver axes that actually have more than one
+    point (so plain kernel x seed sweeps keep their legacy artifact names)."""
     tols = _parse_grid(args.tolerances, args.tolerance)
     lrs = _parse_grid(args.sgd_lrs, args.sgd_lr)
     budgets = _parse_grid(getattr(args, "epoch_budgets", None), 0.0)
+    # Preconditioner ranks are ints and STATIC (see Cell); None defers to
+    # each arch's own precond_rank.
+    ranks_text = getattr(args, "precond_ranks", None)
+    ranks = ([int(v) for v in ranks_text.split(",")] if ranks_text
+             else [None])
     cells = []
     seen: set = set()  # colliding grid points (e.g. "0.01,0.01", or an
     # explicit budget equal to the arch default with 0 also given) would
@@ -107,19 +124,24 @@ def make_cells(archs: list[GPArchConfig], seeds: list[int], args) -> list[Cell]:
             for tol in tols:
                 for lr in lrs:
                     for ep in budgets:
-                        epochs = ep or float(arch.solver_epochs)
-                        parts = []
-                        if len(tols) > 1:
-                            parts.append(f"tol{tol:g}")
-                        if len(lrs) > 1:
-                            parts.append(f"lr{lr:g}")
-                        if len(budgets) > 1:
-                            parts.append(f"ep{epochs:g}")
-                        tag = "".join("__" + p for p in parts)
-                        cell = Cell(arch, seed, tol, lr, epochs, tag)
-                        if cell not in seen:
-                            seen.add(cell)
-                            cells.append(cell)
+                        for rk in ranks:
+                            epochs = ep or float(arch.solver_epochs)
+                            rank = rk if rk is not None else arch.precond_rank
+                            parts = []
+                            if len(tols) > 1:
+                                parts.append(f"tol{tol:g}")
+                            if len(lrs) > 1:
+                                parts.append(f"lr{lr:g}")
+                            if len(budgets) > 1:
+                                parts.append(f"ep{epochs:g}")
+                            if len(ranks) > 1:
+                                parts.append(f"rk{rank:g}")
+                            tag = "".join("__" + p for p in parts)
+                            cell = Cell(arch, seed, tol, lr, epochs, rank,
+                                        tag)
+                            if cell not in seen:
+                                seen.add(cell)
+                                cells.append(cell)
     # Distinct cells must not share an artifact path (the %g tags keep 6
     # significant digits): a silent collision would overwrite one cell's
     # JSON with another's and make the loser unrecoverable on resume.
@@ -146,7 +168,7 @@ def solver_config_for(arch: GPArchConfig, args, cell: Optional[Cell] = None):
         tolerance=cell.tolerance if cell else args.tolerance,
         kind=arch.kind,
         max_epochs=float(cell.epochs if cell else arch.solver_epochs),
-        precond_rank=arch.precond_rank,
+        precond_rank=cell.rank if cell else arch.precond_rank,
         block_size=args.block_size,
         batch_size=args.batch_size,
         learning_rate=cell.lr if cell else args.sgd_lr,
@@ -195,9 +217,11 @@ def group_cells(cells: list[Cell], args):
     The signature is the jit static argument itself (the hashable
     numerics-stripped OuterConfig); cells that share it share one
     executable. With a shared dataset that means one group per kernel kind
-    — REGARDLESS of the tolerance/lr/budget grid, which rides as traced
-    lane data — but the partition stays correct for any future per-cell
-    static divergence.
+    x preconditioner rank — the tolerance/lr/budget grid rides as traced
+    lane data, while a ``--precond-ranks`` grid partitions (rank changes
+    the preconditioner's shapes, so mixing ranks in one lane group is
+    impossible without shape bucketing) — and the partition stays correct
+    for any future per-cell static divergence.
     """
     groups: dict = {}
     for cell in cells:
@@ -231,6 +255,7 @@ def _cell_record(cell: Cell, res, mode: str, group_size: int) -> dict:
         "tolerance": cell.tolerance,
         "learning_rate": cell.lr,
         "max_epochs": cell.epochs,
+        "precond_rank": cell.rank,
         "mode": mode,
         "lanes": group_size,
         "wall_time_s": res.wall_time_s,
@@ -367,6 +392,7 @@ def run_isolated(cells, args, argv_passthrough: list[str]) -> dict:
             "--tolerance", str(c.tolerance),
             "--sgd-lr", str(c.lr),
             "--solver-epochs", str(c.epochs),
+            "--precond-rank", str(c.rank),
         ] + (["--cell-tag", c.tag] if c.tag else []) + argv_passthrough
         # Workers must import repro regardless of cwd / install mode:
         # prepend this package's src dir, keep the inherited PYTHONPATH.
@@ -418,7 +444,9 @@ def run_single_cell(archs, args) -> int:
     arch = matches[0]
     epochs = float(args.solver_epochs) if args.solver_epochs else float(
         arch.solver_epochs)
-    cell = Cell(arch, seed, args.tolerance, args.sgd_lr, epochs,
+    rank = (args.precond_rank if args.precond_rank is not None
+            else arch.precond_rank)
+    cell = Cell(arch, seed, args.tolerance, args.sgd_lr, epochs, rank,
                 args.cell_tag)
     cfg = outer_config_for(arch, args, cell)
     x, y = _load_data([arch], args)
@@ -454,6 +482,10 @@ def main(argv=None) -> int:
     ap.add_argument("--epoch-budgets", default=None,
                     help="comma floats: solver epoch-budget grid (traced); "
                          "0 means the arch's default budget")
+    ap.add_argument("--precond-ranks", default=None,
+                    help="comma ints: preconditioner-rank grid (STATIC — "
+                         "rank changes shapes, so each rank is its own "
+                         "group/executable; cells gain an __rk<r> tag)")
     ap.add_argument("--shard-lanes", action="store_true",
                     help="shard each group's lane axis across local devices "
                          "(1-D lane mesh)")
@@ -466,6 +498,9 @@ def main(argv=None) -> int:
                     help="internal: run one kernel:seed cell in-process")
     ap.add_argument("--solver-epochs", type=float, default=0.0,
                     help="internal (isolate worker): the cell's epoch budget")
+    ap.add_argument("--precond-rank", type=int, default=None,
+                    help="internal (isolate worker): the cell's "
+                         "preconditioner rank")
     ap.add_argument("--cell-tag", default="",
                     help="internal (isolate worker): artifact filename tag")
     ap.add_argument("--expect-one-compile-per-group", action="store_true",

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.solvers.base import (
+    NO_EPOCH_BUDGET,
     SolveResult,
     SolverConfig,
     SolverNumerics,
@@ -15,6 +16,19 @@ from repro.solvers.base import (
     numerics_of,
     stack_numerics,
     strip_numerics,
+)
+from repro.solvers.adaptive import (
+    AUTO_HORIZON,
+    BudgetPolicy,
+    DecayFit,
+    broadcast_policy,
+    budget_allocate,
+    budget_observe,
+    fit_decay,
+    make_budget_policy,
+    noise_probe,
+    predict_epochs,
+    resolve_horizon,
 )
 from repro.solvers.cg import solve_cg
 from repro.solvers.ap import solve_ap
@@ -137,6 +151,18 @@ def solve_lanes(
 
 __all__ = [
     "SOLVERS",
+    "NO_EPOCH_BUDGET",
+    "AUTO_HORIZON",
+    "BudgetPolicy",
+    "DecayFit",
+    "broadcast_policy",
+    "budget_allocate",
+    "budget_observe",
+    "fit_decay",
+    "make_budget_policy",
+    "noise_probe",
+    "predict_epochs",
+    "resolve_horizon",
     "solve",
     "solve_lanes",
     "solve_cg",

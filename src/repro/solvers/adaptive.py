@@ -1,0 +1,495 @@
+"""Adaptive per-step solver budgets calibrated from residual telemetry.
+
+The paper's early-stopping contribution fixes the epoch budget per outer
+MLL step a priori; this module closes that loop using the solver's own
+byproducts (ROADMAP "solver-statistics-driven adaptive numerics"), in the
+spirit of probnum's ``UncertaintyCalibration`` / ``OptimalNoiseScale``:
+
+1. **Convergence-rate estimator** (:func:`fit_decay`): a jit-safe weighted
+   least-squares fit of a log-linear (log-Rayleigh-style) decay model to
+   the residual ring buffers the solvers record inside their while-loops
+   (``SolverConfig.record_history`` -> ``SolveResult.res_history``). The
+   fitted slope — nats of log-residual per iteration — predicts the
+   epochs still needed to reach any target residual
+   (:func:`predict_epochs`).
+
+2. **Noise probe** (:func:`noise_probe`): scores how noisy the current
+   MLL gradient estimate is from the same probe-vector solves the
+   estimator reads — the RMS misfit of the decay fit (solver
+   stochasticity: ~0 for CG, large for SGD's sparse residual refresh) and
+   the probe-system residual level relative to tolerance (the gradient
+   estimate's solver-induced error floor). The misfit term widens the
+   allocation margin so stochastic solvers are not systematically
+   under-budgeted.
+
+3. **Budget controller** (:class:`BudgetPolicy`, :func:`budget_allocate`,
+   :func:`budget_observe`): a pytree carried across outer steps — global
+   epoch pool, per-step floor/ceiling, EMA-smoothed decay slope /
+   perturbation / noise — that converts the telemetry into a TRACED
+   ``SolverNumerics.max_epochs`` per step (per-lane under ``vmap``), so
+   adaptive fits retrace exactly as often as fixed-budget ones: never.
+
+The controller's target rule is the warm-start insight made quantitative:
+each hyperparameter update re-inflates the residual by a measurable
+*perturbation* (entry residual of step t minus end residual of step
+t − 1). Solving far below that perturbation is wasted work — the next
+Adam step undoes it — so the per-step residual target is
+
+    target_t = max(tolerance, margin * perturbation_ema * anneal_t)
+
+with ``anneal_t = 1 - t/horizon`` decaying linearly so the final steps
+solve all the way to tolerance (final ``res_z`` matches a fixed
+to-tolerance run) while mid-trajectory steps stop at the perturbation
+floor. The allocation is the predicted epochs to reach that target:
+
+    alloc_t = clip((need_nats + noise) / rate * safety, floor, ceiling)
+
+capped by the remaining pool and the configured ``max_epochs``. When no
+decay model is available yet (first step, stalled or diverging solve,
+ring too short) the controller FALLS BACK to the fixed budget
+``min(ceiling, max_epochs)`` — adaptive never degrades below the
+configured behaviour. See ``docs/adaptive.md`` for the full contract.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.solvers.base import SolverNumerics
+
+# Smallest ring that supports a slope fit (two points define a line; fewer
+# is not a model). `fit`/`outer_scan` refuse adaptive budgets below this.
+MIN_RECORD_HISTORY = 2
+
+# Slopes flatter than this (nats per epoch, towards zero) are treated as
+# "no measurable decay": the controller falls back to the fixed budget
+# rather than dividing by a near-zero rate.
+SLOPE_EPS = 1e-4
+
+# Sentinel horizon: `fit` resolves it to the run's `cfg.num_steps` so the
+# anneal schedule lands exactly on the optimisation's last step.
+AUTO_HORIZON = 0.0
+
+# Closed-loop correction: when the residual GREW across an outer step, the
+# previous allocation — hence the assumed decay rate — was too optimistic
+# (short solves may leave sub-2-point rings, so the slope EMA cannot learn
+# this from fits alone). Shrink the assumed rate by this factor per stalled
+# step; allocations then escalate geometrically until solves are long
+# enough to yield honest fits again (or the fixed-budget fallback engages).
+STALL_DECAY = 0.5
+
+# Floor on residuals entering logs (relative residuals; systems are
+# normalised to ||b~|| = 1 so anything at fp32 round-off is "converged").
+_RES_FLOOR = 1e-12
+
+
+class DecayFit(NamedTuple):
+    """Weighted least-squares fit of ``log res ~ intercept + slope * iter``.
+
+    All fields are traced scalars (per-lane under ``vmap``):
+
+    - ``slope``: nats of log-residual per ITERATION (negative while
+      converging); convert to per-epoch with the solver's own
+      epochs/iteration ratio before predicting epoch budgets.
+    - ``intercept``: fitted log-residual at iteration 0.
+    - ``rms``: root-mean-square misfit of the fit — the decay model's own
+      noise estimate (see :func:`noise_probe`).
+    - ``n_pts``: number of valid ring entries the fit used.
+    - ``log_first`` / ``log_last``: log combined residual at the earliest
+      and latest ring entries (NaN when the ring is empty).
+    """
+
+    slope: jax.Array
+    intercept: jax.Array
+    rms: jax.Array
+    n_pts: jax.Array
+    log_first: jax.Array
+    log_last: jax.Array
+
+
+def _combined(res_y: jax.Array, res_z: jax.Array) -> jax.Array:
+    """The convergence-relevant residual: BOTH families must reach tau."""
+    return jnp.maximum(res_y, res_z)
+
+
+def fit_decay(hist: jax.Array, iters: jax.Array) -> DecayFit:
+    """Fit the log-linear decay model to one solver residual ring.
+
+    jit- and vmap-safe: works directly on the ROTATED ring (slot
+    ``j % H`` holds the residuals after iteration ``j + 1``, see
+    ``solvers.base.history_record``) by reconstructing each slot's true
+    iteration index from the traced ``iters`` count — no host-side
+    ``unroll_history`` needed. NaN slots (unfilled, or frozen lanes) are
+    masked out of the weighted least squares.
+
+    Args:
+      hist: ``(H, 2)`` residual ring (``[res_y, res_z]`` per slot).
+      iters: traced iteration count of the solve that wrote the ring.
+    Returns:
+      A :class:`DecayFit`; ``n_pts < 2`` marks an unusable fit (callers
+      must fall back, see :func:`budget_allocate`).
+    """
+    h = hist.shape[0]
+    n = iters.astype(jnp.int32)
+    j = jnp.arange(h, dtype=jnp.int32)
+    # Slot j holds iteration m = j + 1 + H * floor((n-1-j)/H): the LATEST
+    # iteration <= n whose (m-1) mod H == j. For j >= n (never written)
+    # the floor term goes negative and m <= 0, which the mask drops.
+    m = j + 1 + h * jnp.floor_divide(n - 1 - j, h)
+    r = _combined(hist[:, 0], hist[:, 1])
+    logr = jnp.log(jnp.maximum(r, _RES_FLOOR))
+    valid = (m >= 1) & (m <= n) & jnp.isfinite(logr)
+    w = valid.astype(jnp.float32)
+    # Sanitise masked entries BEFORE any arithmetic: 0 * NaN is NaN.
+    ms = jnp.where(valid, m, 0).astype(jnp.float32)
+    ys = jnp.where(valid, logr, 0.0)
+    sw = jnp.sum(w)
+    swc = jnp.maximum(sw, 1.0)
+    mx = jnp.sum(w * ms) / swc
+    my = jnp.sum(w * ys) / swc
+    dx = jnp.where(valid, ms - mx, 0.0)
+    dy = jnp.where(valid, ys - my, 0.0)
+    sxx = jnp.sum(w * dx * dx)
+    sxy = jnp.sum(w * dx * dy)
+    slope = sxy / jnp.maximum(sxx, 1e-20)
+    slope = jnp.where(sxx > 0, slope, 0.0)
+    resid = jnp.where(valid, dy - slope * dx, 0.0)
+    rms = jnp.sqrt(jnp.sum(w * resid * resid) / swc)
+    # Earliest surviving entry: iteration 1 while the ring has not wrapped
+    # (n <= H), else iteration n - H + 1 at slot n mod H. Latest: slot
+    # (n-1) mod H. Guard n == 0 (solver converged at entry, empty ring).
+    first_slot = jnp.where(n <= h, 0, jnp.mod(n, h))
+    last_slot = jnp.mod(jnp.maximum(n - 1, 0), h)
+    empty = n < 1
+    log_first = jnp.where(empty, jnp.nan, logr[first_slot])
+    log_last = jnp.where(empty, jnp.nan, logr[last_slot])
+    return DecayFit(
+        slope=slope, intercept=my - slope * mx, rms=rms, n_pts=sw,
+        log_first=log_first, log_last=log_last,
+    )
+
+
+def predict_epochs(
+    fit: DecayFit,
+    epochs_per_iter: jax.Array,
+    log_from: jax.Array,
+    log_target: jax.Array,
+) -> jax.Array:
+    """Epochs to descend ``log_from -> log_target`` at the fitted rate.
+
+    ``epochs_per_iter`` converts the per-iteration slope into the solver's
+    own budget units (1 for CG, block/n for AP, batch/n for SGD — read it
+    off a solve's ``epochs / iters``). Returns +inf when the fit shows no
+    decay (slope >= -SLOPE_EPS after conversion) so callers fall back.
+    """
+    rate = -fit.slope / jnp.maximum(epochs_per_iter, 1e-12)  # nats/epoch
+    need = jnp.maximum(log_from - log_target, 0.0)
+    return jnp.where(rate > SLOPE_EPS, need / jnp.maximum(rate, SLOPE_EPS),
+                     jnp.inf)
+
+
+def noise_probe(
+    fit: DecayFit, res_z: jax.Array, tolerance: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Score the noisiness of the current MLL gradient estimate.
+
+    Both scores come from the probe-vector solves the estimator already
+    reads — no extra MVMs:
+
+    - ``stochasticity``: the decay fit's RMS misfit in nats. A
+      deterministic solver (CG/AP) tracks its own decay line to fp32
+      round-off; SGD's sparsely-refreshed residual scatters around it.
+      The controller adds this directly to the nats it budgets for.
+    - ``grad_noise``: ``log(res_z / tolerance)`` clipped at 0 — how far
+      the probe systems (whose residuals bound the solver-induced error
+      of the gradient estimate) still are from the configured target.
+
+    Returns ``(stochasticity, grad_noise)``.
+    """
+    grad_noise = jnp.maximum(
+        jnp.log(jnp.maximum(res_z, _RES_FLOOR))
+        - jnp.log(jnp.maximum(tolerance, _RES_FLOOR)),
+        0.0,
+    )
+    return fit.rms, grad_noise
+
+
+class BudgetPolicy(NamedTuple):
+    """Adaptive-budget controller state + coefficients (a pytree).
+
+    Every leaf is a traced array so the policy rides through
+    ``lax.scan`` chunks and, lane-stacked with ``(B,)`` leaves, through
+    ``vmap`` — per-lane budgets inside one executable, zero retraces.
+
+    Evolving state (updated by :func:`budget_observe` each outer step):
+
+    - ``pool``: remaining global epoch pool (``inf`` = unlimited).
+    - ``slope``: EMA of the per-EPOCH log-residual decay rate (negative).
+    - ``noise``: EMA of the decay fit's RMS misfit (nats).
+    - ``perturbation``: EMA of the residual re-inflation one hyperparameter
+      update causes (absolute relative-residual units).
+    - ``last_res``: combined residual at the end of the previous step.
+    - ``steps_seen``: outer steps observed (drives the anneal schedule).
+    - ``fits_seen``: accepted decay fits (0 -> fixed-budget fallback).
+
+    Coefficients (constant through a fit; per-lane under ``vmap``):
+
+    - ``floor`` / ``ceiling``: per-step epoch bounds on the allocation.
+    - ``margin``: target = ``margin x perturbation`` — how far above the
+      perturbation floor a mid-trajectory solve may stop.
+    - ``safety``: multiplier on the predicted epochs (under-prediction
+      insurance).
+    - ``ema``: smoothing factor for slope/noise/perturbation EMAs.
+    - ``horizon``: anneal length in steps; the target relaxes by
+      ``1 - steps_seen/horizon`` so the last steps solve to tolerance.
+      :data:`AUTO_HORIZON` (0) is resolved to ``cfg.num_steps`` by
+      ``fit``; a non-positive horizon elsewhere disables annealing.
+    """
+
+    pool: jax.Array
+    slope: jax.Array
+    noise: jax.Array
+    perturbation: jax.Array
+    last_res: jax.Array
+    steps_seen: jax.Array
+    fits_seen: jax.Array
+    floor: jax.Array
+    ceiling: jax.Array
+    margin: jax.Array
+    safety: jax.Array
+    ema: jax.Array
+    horizon: jax.Array
+
+
+def make_budget_policy(
+    pool: float = float("inf"),
+    floor: float = 1.0,
+    ceiling: float = float("inf"),
+    margin: float = 1.0,
+    safety: float = 1.5,
+    ema: float = 0.7,
+    horizon: float = AUTO_HORIZON,
+    dtype=jnp.float32,
+) -> BudgetPolicy:
+    """A fresh scalar-leaf :class:`BudgetPolicy`.
+
+    Args:
+      pool: global epoch pool for the whole fit (``inf`` = unlimited).
+      floor / ceiling: per-step epoch bounds; the ceiling doubles as the
+        fixed-budget fallback (intersected with ``numerics.max_epochs``).
+      margin: mid-trajectory residual target in perturbation units.
+      safety: multiplier on predicted epochs.
+      ema: EMA smoothing for the calibrated coefficients.
+      horizon: anneal length; :data:`AUTO_HORIZON` lets ``fit`` substitute
+        its ``cfg.num_steps``.
+    Returns:
+      A :class:`BudgetPolicy` ready for ``fit(budget_policy=...)``.
+    """
+    f = lambda v: jnp.asarray(v, dtype)  # noqa: E731 - local shorthand
+    return BudgetPolicy(
+        pool=f(pool), slope=f(0.0), noise=f(0.0), perturbation=f(0.0),
+        last_res=f(jnp.inf), steps_seen=jnp.asarray(0, jnp.int32),
+        fits_seen=jnp.asarray(0, jnp.int32), floor=f(floor),
+        ceiling=f(ceiling), margin=f(margin), safety=f(safety), ema=f(ema),
+        horizon=f(horizon),
+    )
+
+
+def broadcast_policy(policy: BudgetPolicy, lanes: int) -> BudgetPolicy:
+    """Broadcast scalar policy leaves to ``(lanes,)``; validate stacked ones.
+
+    Mirrors ``solvers.base.broadcast_numerics``: a shared policy fans out
+    to every lane, while per-lane coefficients (say a floor grid) ride as
+    already-stacked leaves.
+    """
+    def one(v):
+        v = jnp.asarray(v)
+        if v.ndim == 0:
+            return jnp.broadcast_to(v, (lanes,))
+        if v.shape != (lanes,):
+            raise ValueError(
+                f"policy leaf shape {v.shape} does not match lanes={lanes}"
+            )
+        return v
+
+    return jax.tree.map(one, policy)
+
+
+def resolve_horizon(policy: BudgetPolicy, num_steps: int) -> BudgetPolicy:
+    """Replace :data:`AUTO_HORIZON` leaves with the run's step count."""
+    h = jnp.asarray(policy.horizon)
+    return policy._replace(
+        horizon=jnp.where(h == AUTO_HORIZON, float(num_steps), h)
+    )
+
+
+def step_target(policy: BudgetPolicy, tolerance: jax.Array) -> jax.Array:
+    """This step's annealed residual target (module docstring).
+
+    ``max(tolerance, margin x perturbation x anneal)`` with the anneal
+    decaying linearly over the horizon. ``steps_seen`` is ``t - 1`` when
+    allocating step ``t`` (:func:`budget_observe` increments it AFTER the
+    solve, so allocate and observe of the same step agree on the target);
+    the ``+1`` makes the LAST step of an N-step horizon anneal to exactly
+    0 — its target is the bare tolerance, never a relaxed one.
+    """
+    tol = jnp.maximum(tolerance, _RES_FLOOR)
+    anneal = jnp.where(
+        policy.horizon > 0,
+        jnp.clip(1.0 - (policy.steps_seen.astype(jnp.float32) + 1.0)
+                 / jnp.maximum(policy.horizon, 1.0), 0.0, 1.0),
+        1.0,
+    )
+    return jnp.maximum(tol, policy.margin * policy.perturbation * anneal)
+
+
+def budget_allocate(
+    policy: BudgetPolicy, numerics: SolverNumerics
+) -> tuple[jax.Array, jax.Array]:
+    """This step's epoch allocation, decided BEFORE the solve.
+
+    Pure elementwise maths on the policy state — runs inside the jitted
+    outer-step body, per-lane under ``vmap``. Returns
+    ``(alloc, pred_to_tol)``:
+
+    - ``alloc``: traced epochs for ``SolverNumerics.max_epochs``, the
+      clipped predicted cost of reaching this step's annealed target
+      (module docstring), capped by the remaining pool and the configured
+      ``numerics.max_epochs``. Falls back to
+      ``min(ceiling, numerics.max_epochs)`` until a decay fit has been
+      accepted (``fits_seen == 0``) or when the EMA slope shows no decay.
+    - ``pred_to_tol``: predicted epochs to reach ``numerics.tolerance``
+      from the estimated entry residual (NaN before the first accepted
+      fit) — the "predicted epochs-to-tolerance" half of the
+      ``budget_decision`` telemetry.
+    """
+    tol = jnp.maximum(numerics.tolerance, _RES_FLOOR)
+    log_tol = jnp.log(tol)
+    rate = -policy.slope  # nats per epoch, positive while converging
+    have_model = (policy.fits_seen >= 1) & (rate > SLOPE_EPS)
+
+    # Estimated residual entering this solve: previous end + the EMA
+    # perturbation one hyperparameter update injects (absolute units).
+    res_in = jnp.minimum(policy.last_res, 1.0) + policy.perturbation
+    log_res_in = jnp.log(jnp.maximum(res_in, _RES_FLOOR))
+
+    target = step_target(policy, numerics.tolerance)
+    log_target = jnp.log(target)
+
+    need = jnp.maximum(log_res_in - log_target, 0.0) + policy.noise
+    safe_rate = jnp.maximum(rate, SLOPE_EPS)
+    alloc = need / safe_rate * policy.safety
+    alloc = jnp.clip(alloc, policy.floor, policy.ceiling)
+
+    fallback = jnp.minimum(policy.ceiling, numerics.max_epochs)
+    alloc = jnp.where(have_model, alloc, fallback)
+    # Never exceed the configured budget or the remaining global pool.
+    alloc = jnp.minimum(alloc, numerics.max_epochs)
+    alloc = jnp.minimum(alloc, jnp.maximum(policy.pool, 0.0))
+
+    pred_to_tol = (jnp.maximum(log_res_in - log_tol, 0.0) + policy.noise) \
+        / safe_rate * policy.safety
+    pred_to_tol = jnp.where(have_model, pred_to_tol, jnp.nan)
+    return alloc, pred_to_tol
+
+
+def budget_observe(
+    policy: BudgetPolicy,
+    hist: jax.Array,
+    iters: jax.Array,
+    epochs: jax.Array,
+    res_y: jax.Array,
+    res_z: jax.Array,
+    tolerance: jax.Array,
+) -> tuple[BudgetPolicy, dict]:
+    """Fold one solve's telemetry into the policy state, AFTER the solve.
+
+    Fits the decay model on the step's residual ring, converts the slope
+    to epoch units via the solve's own ``epochs / iters`` ratio, and
+    EMA-updates slope / noise / perturbation — each only when its
+    observation is valid (an empty ring, a stalled solve, or the very
+    first step leave the corresponding EMA untouched; a first valid
+    observation seeds its EMA directly instead of blending with the
+    zero init). Decrements the pool by the epochs actually spent.
+
+    Returns ``(new_policy, decision)`` where ``decision`` holds the
+    traced telemetry half of the ``budget_decision`` event: realised
+    epochs, end residual, the updated EMAs, the pool remaining, and the
+    noise-probe scores.
+    """
+    fit = fit_decay(hist, iters)
+    ran = iters >= 1
+    epi = epochs / jnp.maximum(iters.astype(epochs.dtype), 1.0)
+    slope_epoch = fit.slope * jnp.maximum(iters.astype(epochs.dtype), 1.0) \
+        / jnp.maximum(epochs, 1e-12)
+    ok_fit = ran & (fit.n_pts >= 2) & (slope_epoch < -SLOPE_EPS)
+
+    def ema_update(prev, obs, ok, seeded):
+        blended = policy.ema * prev + (1.0 - policy.ema) * obs
+        return jnp.where(ok, jnp.where(seeded, blended, obs), prev)
+
+    res_end = _combined(res_y, res_z)
+    # Closed-loop stall correction (see STALL_DECAY): the solve MISSED the
+    # target it was allocated for — it ended meaningfully above the step
+    # target AND above the previous end (growing from below the target is
+    # normal hovering: the perturbation pushes the residual up each step by
+    # design). The assumed rate was too optimistic, and the ring may be too
+    # short to re-fit honestly, so shrink it — the next allocation then
+    # escalates geometrically instead of repeating the too-small one. A
+    # valid fit takes precedence (real data beats the heuristic); the rate
+    # ever reaching ~0 engages the fixed-budget fallback.
+    target = step_target(policy, tolerance)
+    stalled = ran & jnp.isfinite(policy.last_res) & (
+        res_end > jnp.maximum(1.5 * target, policy.last_res)
+    )
+    stalled_slope = jnp.where(stalled, policy.slope * STALL_DECAY,
+                              policy.slope)
+
+    fits_seeded = policy.fits_seen >= 1
+    slope = jnp.where(
+        ok_fit,
+        ema_update(policy.slope, slope_epoch, ok_fit, fits_seeded),
+        stalled_slope,
+    )
+    stoch, grad_noise = noise_probe(fit, res_z, tolerance)
+    noise = ema_update(policy.noise, stoch, ok_fit, fits_seeded)
+
+    # Perturbation: residual re-inflation across the step boundary — the
+    # residual this solve STARTED from vs the end of the previous one
+    # (absolute relative-residual units). The ring's first entry is one
+    # iteration in (post-descent), so with a valid fit the entry residual
+    # is the decay line extrapolated to iteration 0 (exp(intercept), at
+    # least the first recorded point); without one, the first recorded
+    # point is the best available lower bound. Valid once a previous step
+    # exists.
+    res_first = jnp.exp(fit.log_first)
+    res_entry = jnp.where(
+        ok_fit, jnp.maximum(jnp.exp(fit.intercept), res_first), res_first
+    )
+    pert_obs = jnp.maximum(res_entry - policy.last_res, 0.0)
+    ok_pert = ran & (policy.steps_seen >= 1) & jnp.isfinite(pert_obs)
+    pert_seeded = policy.steps_seen >= 2
+    perturbation = ema_update(policy.perturbation, pert_obs, ok_pert,
+                              pert_seeded)
+    new = policy._replace(
+        pool=policy.pool - epochs,
+        slope=slope,
+        noise=noise,
+        perturbation=perturbation,
+        last_res=res_end,
+        steps_seen=policy.steps_seen + 1,
+        fits_seen=policy.fits_seen + ok_fit.astype(jnp.int32),
+    )
+    decision = {
+        "realised": epochs,
+        "res": res_end,
+        "slope": slope,
+        "noise": noise,
+        "perturbation": perturbation,
+        "grad_noise": grad_noise,
+        "pool": new.pool,
+        "epochs_per_iter": epi,
+    }
+    return new, decision

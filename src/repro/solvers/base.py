@@ -47,6 +47,11 @@ NORM_EPS = 1e-10
 # in float32 (2**31 - 1 is NOT — it rounds up and overflows the int32 cast).
 MAX_SOLVER_ITERS = 2**30
 
+# Explicit "no epoch budget — run to tolerance" sentinel for `max_epochs`,
+# matching the `divergence_threshold=inf` convention: jnp arithmetic on it
+# is well-defined and `max_iters_from_epochs` clamps it to MAX_SOLVER_ITERS.
+NO_EPOCH_BUDGET = float("inf")
+
 
 @dataclass(frozen=True)
 class SolverConfig:

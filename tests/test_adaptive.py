@@ -1,0 +1,318 @@
+"""Adaptive solver-budget tests: the decay-model fit on synthetic rings,
+the controller's fallback/observe contract, the fit/fit_batch plumbing
+(None-parity, chunk round-trips, lane parity, validation), and the
+launch.batch preconditioner-rank grid partitioning."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import OuterConfig
+from repro.core.driver import fit, fit_batch
+from repro.data.synthetic import make_gp_regression
+from repro.solvers import SolverConfig, numerics_of
+from repro.solvers.adaptive import (
+    STALL_DECAY,
+    budget_allocate,
+    budget_observe,
+    fit_decay,
+    make_budget_policy,
+    predict_epochs,
+    resolve_horizon,
+)
+
+
+# -- decay-model fit on synthetic rings ---------------------------------------
+def _geometric_ring(h, n, slope, intercept):
+    """A rotated ring written exactly as `history_record` writes it: slot
+    (m-1) % h holds the residuals after iteration m, for m = 1..n."""
+    hist = np.full((h, 2), np.nan, np.float32)
+    for m in range(1, n + 1):
+        r = np.exp(intercept + slope * m)
+        hist[(m - 1) % h] = [r, r]
+    return jnp.asarray(hist), jnp.asarray(n, jnp.int32)
+
+
+def test_fit_decay_recovers_exact_geometric_decay():
+    slope, intercept = -0.3, -1.0
+    hist, iters = _geometric_ring(16, 10, slope, intercept)
+    f = fit_decay(hist, iters)
+    assert int(f.n_pts) == 10
+    np.testing.assert_allclose(float(f.slope), slope, rtol=1e-5)
+    np.testing.assert_allclose(float(f.intercept), intercept, rtol=1e-4)
+    assert float(f.rms) < 1e-5
+    np.testing.assert_allclose(float(f.log_first), intercept + slope * 1,
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(f.log_last), intercept + slope * 10,
+                               rtol=1e-5)
+
+
+def test_fit_decay_wrapped_ring_uses_surviving_iterations():
+    # 11 writes into 8 slots: iterations 4..11 survive, 1..3 overwritten.
+    slope, intercept = -0.25, -0.5
+    hist, iters = _geometric_ring(8, 11, slope, intercept)
+    f = fit_decay(hist, iters)
+    assert int(f.n_pts) == 8
+    np.testing.assert_allclose(float(f.slope), slope, rtol=1e-5)
+    np.testing.assert_allclose(float(f.log_first), intercept + slope * 4,
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(f.log_last), intercept + slope * 11,
+                               rtol=1e-5)
+
+
+def test_fit_decay_short_and_empty_rings():
+    # One point is not a model: slope pinned to 0, callers must fall back.
+    hist, iters = _geometric_ring(8, 1, -0.3, -1.0)
+    f1 = fit_decay(hist, iters)
+    assert int(f1.n_pts) == 1 and float(f1.slope) == 0.0
+    # Empty ring (solver converged at entry): no points, NaN endpoints.
+    hist0, iters0 = _geometric_ring(8, 0, -0.3, -1.0)
+    f0 = fit_decay(hist0, iters0)
+    assert int(f0.n_pts) == 0
+    assert np.isnan(float(f0.log_first)) and np.isnan(float(f0.log_last))
+
+
+def test_fit_decay_is_jit_and_vmap_safe():
+    h1, n1 = _geometric_ring(8, 6, -0.4, -1.0)
+    h2, n2 = _geometric_ring(8, 11, -0.1, -2.0)
+    stacked = jax.jit(jax.vmap(fit_decay))(
+        jnp.stack([h1, h2]), jnp.stack([n1, n2])
+    )
+    np.testing.assert_allclose(np.asarray(stacked.slope), [-0.4, -0.1],
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(stacked.n_pts), [6, 8])
+
+
+def test_predict_epochs_and_fallback_on_flat_slope():
+    hist, iters = _geometric_ring(16, 10, -0.5, 0.0)
+    f = fit_decay(hist, iters)
+    # 2 nats to descend at 0.5 nats/iter, 1 epoch per iter => 4 epochs.
+    got = predict_epochs(f, jnp.asarray(1.0), jnp.asarray(0.0),
+                         jnp.asarray(-2.0))
+    np.testing.assert_allclose(float(got), 4.0, rtol=1e-4)
+    flat = f._replace(slope=jnp.asarray(0.0))
+    assert np.isinf(float(predict_epochs(flat, jnp.asarray(1.0),
+                                         jnp.asarray(0.0),
+                                         jnp.asarray(-2.0))))
+
+
+# -- controller: allocate / observe -------------------------------------------
+def _numerics(max_epochs=20.0, tolerance=1e-3):
+    return numerics_of(SolverConfig(name="cg", max_epochs=max_epochs,
+                                    tolerance=tolerance, precond_rank=0))
+
+
+def test_budget_allocate_fixed_fallback_before_first_fit():
+    policy = make_budget_policy(ceiling=7.0)
+    alloc, pred = budget_allocate(policy, _numerics(max_epochs=20.0))
+    assert float(alloc) == 7.0  # min(ceiling, max_epochs), no model yet
+    assert np.isnan(float(pred))
+    # Ceiling above the configured budget: the budget wins.
+    alloc2, _ = budget_allocate(make_budget_policy(ceiling=50.0),
+                                _numerics(max_epochs=20.0))
+    assert float(alloc2) == 20.0
+
+
+def test_budget_allocate_uses_calibrated_rate():
+    policy = make_budget_policy(safety=1.5)._replace(
+        fits_seen=jnp.asarray(1, jnp.int32),
+        slope=jnp.asarray(-0.5),  # nats per epoch
+        last_res=jnp.asarray(0.1),
+    )
+    alloc, pred = budget_allocate(policy, _numerics(max_epochs=100.0))
+    # need = log(0.1 / 1e-3) nats at 0.5 nats/epoch, x1.5 safety.
+    want = np.log(0.1 / 1e-3) / 0.5 * 1.5
+    np.testing.assert_allclose(float(alloc), want, rtol=1e-4)
+    np.testing.assert_allclose(float(pred), want, rtol=1e-4)
+    # The remaining pool caps the allocation.
+    low_pool = policy._replace(pool=jnp.asarray(3.0))
+    alloc3, _ = budget_allocate(low_pool, _numerics(max_epochs=100.0))
+    assert float(alloc3) == 3.0
+
+
+def test_budget_observe_seeds_emas_and_decrements_pool():
+    policy = make_budget_policy(pool=100.0)
+    hist, iters = _geometric_ring(16, 8, -0.3, -1.0)
+    r_end = float(np.exp(-1.0 - 0.3 * 8))
+    new, decision = budget_observe(
+        policy, hist, iters, epochs=jnp.asarray(8.0),
+        res_y=jnp.asarray(r_end), res_z=jnp.asarray(r_end),
+        tolerance=jnp.asarray(1e-3),
+    )
+    # First valid fit SEEDS the slope EMA (no blend with the 0 init).
+    np.testing.assert_allclose(float(new.slope), -0.3, rtol=1e-4)
+    assert int(new.fits_seen) == 1 and int(new.steps_seen) == 1
+    np.testing.assert_allclose(float(new.pool), 92.0)
+    np.testing.assert_allclose(float(new.last_res), r_end, rtol=1e-5)
+    assert set(decision) == {"realised", "res", "slope", "noise",
+                             "perturbation", "grad_noise", "pool",
+                             "epochs_per_iter"}
+    np.testing.assert_allclose(float(decision["epochs_per_iter"]), 1.0)
+
+
+def test_budget_observe_stall_shrinks_assumed_rate():
+    # A 1-point ring cannot re-fit; the residual ending far above both the
+    # step target and the previous end marks the assumed rate optimistic.
+    policy = make_budget_policy()._replace(
+        fits_seen=jnp.asarray(1, jnp.int32),
+        steps_seen=jnp.asarray(1, jnp.int32),
+        slope=jnp.asarray(-0.4),
+        last_res=jnp.asarray(0.01),
+    )
+    hist, iters = _geometric_ring(8, 1, 0.0, np.log(0.05))
+    new, _ = budget_observe(
+        policy, hist, iters, epochs=jnp.asarray(1.0),
+        res_y=jnp.asarray(0.05), res_z=jnp.asarray(0.05),
+        tolerance=jnp.asarray(1e-3),
+    )
+    np.testing.assert_allclose(float(new.slope), -0.4 * STALL_DECAY,
+                               rtol=1e-6)
+    assert int(new.fits_seen) == 1  # no new fit accepted
+
+
+def test_resolve_horizon_substitutes_num_steps():
+    p = resolve_horizon(make_budget_policy(), num_steps=24)
+    assert float(p.horizon) == 24.0
+    p2 = resolve_horizon(make_budget_policy(horizon=8.0), num_steps=24)
+    assert float(p2.horizon) == 8.0
+
+
+# -- end-to-end: fit / fit_batch plumbing -------------------------------------
+BUDGET_COLS = (
+    "budget_alloc", "budget_pred_to_tol", "budget_realised", "budget_res",
+    "budget_slope", "budget_noise", "budget_perturbation",
+    "budget_grad_noise", "budget_pool", "budget_epochs_per_iter",
+)
+
+
+def _problem(n=96, d=2, seed=0):
+    return make_gp_regression(jax.random.PRNGKey(seed), n, d, noise=0.2)
+
+
+def _cfg(record_history=16, num_steps=5):
+    scfg = SolverConfig(name="cg", tolerance=1e-3, max_epochs=30.0,
+                        precond_rank=0, record_history=record_history)
+    return OuterConfig(estimator="pathwise", warm_start=True, num_probes=8,
+                       num_rff_pairs=64, kind="matern32", solver=scfg,
+                       num_steps=num_steps, bm=64, bn=64)
+
+
+def test_budget_policy_none_is_bit_identical():
+    x, y = _problem()
+    cfg = _cfg()
+    key = jax.random.PRNGKey(1)
+    r0 = fit(x, y, cfg, key=key, steps_per_round=0)
+    r1 = fit(x, y, cfg, key=key, steps_per_round=0, budget_policy=None)
+    for name in r0.history:
+        if "time" in name:  # wall-clock columns are not replayable
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(r0.history[name]), np.asarray(r1.history[name]),
+            err_msg=f"history[{name!r}] changed under budget_policy=None")
+    for a, b in zip(jax.tree.leaves(r0.state.params),
+                    jax.tree.leaves(r1.state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not any(k.startswith("budget_") for k in r0.history)
+
+
+def test_adaptive_requires_residual_telemetry():
+    x, y = _problem()
+    policy = make_budget_policy()
+    with pytest.raises(ValueError, match="record_history"):
+        fit(x, y, _cfg(record_history=0), budget_policy=policy)
+    with pytest.raises(ValueError, match="record_history"):
+        fit_batch(x, y, _cfg(record_history=1),
+                  keys=jax.random.split(jax.random.PRNGKey(0), 2),
+                  budget_policy=policy)
+
+
+def test_adaptive_history_schema_and_invariants():
+    x, y = _problem()
+    cfg = _cfg(num_steps=6)
+    res = fit(x, y, cfg, key=jax.random.PRNGKey(2), steps_per_round=0,
+              budget_policy=make_budget_policy(ceiling=20.0, pool=200.0))
+    for name in BUDGET_COLS:
+        assert name in res.history, f"missing history column {name}"
+        assert res.history[name].shape == (cfg.num_steps,)
+    alloc = res.history["budget_alloc"]
+    assert (alloc <= 20.0 + 1e-6).all() and (alloc >= 1.0 - 1e-6).all()
+    pool = res.history["budget_pool"]
+    assert (np.diff(pool) <= 1e-6).all()  # pool only ever drains
+    np.testing.assert_allclose(
+        pool, 200.0 - np.cumsum(res.history["epochs"]), rtol=1e-5)
+    # Realised epochs never exceed the step's allocation.
+    assert (res.history["epochs"] <= alloc + 1e-4).all()
+
+
+def test_adaptive_policy_round_trips_chunk_boundaries():
+    # The controller state must ride the scan carry ACROSS chunk
+    # boundaries: re-chunking the same fit cannot change the trajectory.
+    x, y = _problem()
+    cfg = _cfg(num_steps=6)
+    policy = make_budget_policy(ceiling=20.0)
+    key = jax.random.PRNGKey(3)
+    r_chunked = fit(x, y, cfg, key=key, steps_per_round=2,
+                    budget_policy=policy)
+    r_single = fit(x, y, cfg, key=key, steps_per_round=0,
+                   budget_policy=policy)
+    for name in ("budget_alloc", "budget_pool", "budget_slope", "res_z"):
+        np.testing.assert_allclose(
+            r_chunked.history[name], r_single.history[name],
+            rtol=1e-5, atol=1e-7,
+            err_msg=f"history[{name!r}] depends on steps_per_round")
+    for a, b in zip(jax.tree.leaves(r_chunked.state.params),
+                    jax.tree.leaves(r_single.state.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-7)
+
+
+def test_adaptive_lane_parity_with_single_fits():
+    # Each lane of an adaptive fit_batch must allocate and converge as its
+    # own single fit would — the controller calibrates per lane.
+    x, y = _problem()
+    cfg = _cfg(num_steps=4)
+    policy = make_budget_policy(ceiling=20.0)
+    keys = jax.random.split(jax.random.PRNGKey(5), 2)
+    batch = fit_batch(x, y, cfg, keys=keys, budget_policy=policy)
+    for i, k in enumerate(keys):
+        single = fit(x, y, cfg, key=k, steps_per_round=0,
+                     budget_policy=policy)
+        for name in ("budget_alloc", "budget_pool", "res_z"):
+            np.testing.assert_allclose(
+                batch[i].history[name], single.history[name],
+                rtol=2e-4, atol=1e-6,
+                err_msg=f"lane {i} history[{name!r}] != single fit")
+
+
+# -- launch.batch: preconditioner-rank grids ----------------------------------
+def _batch_args(**over):
+    base = dict(tolerances=None, tolerance=0.01, sgd_lrs=None, sgd_lr=2.0,
+                epoch_budgets=None, precond_ranks=None, steps=3, bm=256,
+                bn=256, solver=None, block_size=64, batch_size=64)
+    base.update(over)
+    return types.SimpleNamespace(**base)
+
+
+def test_rank_grid_tags_and_static_groups():
+    from repro.launch.batch import group_cells, make_cells, sweep_archs
+
+    archs = sweep_archs(None, smoke=True)[:1]
+    args = _batch_args(precond_ranks="0,8")
+    cells = make_cells(archs, [0, 1], args)
+    assert len(cells) == 4  # 1 arch x 2 seeds x 2 ranks
+    assert {c.tag for c in cells} == {"__rk0", "__rk8"}
+    assert {c.rank for c in cells} == {0, 8}
+    # Rank is STATIC (it changes preconditioner shapes): each rank is its
+    # own group/executable, and no group mixes ranks.
+    groups = group_cells(cells, args)
+    assert len(groups) == 2
+    for key, members in groups.items():
+        assert len({c.rank for c in members}) == 1
+        assert key.solver.precond_rank == members[0].rank
+    # One-point grid: legacy artifact names (no tag), arch's own rank.
+    plain = make_cells(archs, [0], _batch_args())
+    assert len(plain) == 1 and plain[0].tag == ""
+    assert plain[0].rank == archs[0].precond_rank
+    assert len(group_cells(plain, _batch_args())) == 1

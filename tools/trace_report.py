@@ -10,7 +10,12 @@ Consumes the files written by ``repro.obs.trace`` (replica request logs,
   * a **residual-decay summary** — for ``solve_step`` events that carry the
     solver ring (``SolverConfig.record_history``), the per-step first/last
     residual, the decay factor, and a coarse log10 sparkline of the
-    trajectory; plus the closing ``fit_done`` totals.
+    trajectory; plus the closing ``fit_done`` totals;
+  * a **budget-decision table** — for adaptive fits
+    (``fit(budget_policy=...)``), the per-step ``budget_decision`` events
+    rendered row-for-row with the ``solve_step`` table (same step/lane
+    keys): allocated vs realised epochs, end residual, the calibrated
+    decay rate, and the pool remaining (schema: ``docs/adaptive.md``).
 
 Stdlib only, read-only, tolerant of truncated tail lines (a live log can be
 mid-write).
@@ -127,6 +132,7 @@ def print_residual_summary(events):
                   f"{'-' if lane is None else lane:>4} "
                   f"{ev.get('iters', 0):>5} {first:>10.3e} {last:>10.3e} "
                   f"{decay:>9.2e}  {_sparkline(res)}")
+    print_budget_summary(events)
     for ev in events:
         if ev["kind"] == "fit_done":
             print(f"fit_done: solver={ev.get('solver')} "
@@ -134,6 +140,35 @@ def print_residual_summary(events):
                   f"epochs={ev.get('total_epochs'):.1f} "
                   f"wall={ev.get('wall_time_s'):.2f}s "
                   f"solver_time={ev.get('solver_time_s'):.2f}s")
+
+
+def print_budget_summary(events):
+    """Adaptive-controller table from ``budget_decision`` events.
+
+    Rows carry the same ``(step, lane)`` keys as the ``solve_step`` table
+    above them, so the two read side by side: what the controller
+    allocated, what the solve realised, and the calibrated state it left
+    behind.
+    """
+    decisions = [e for e in events if e["kind"] == "budget_decision"]
+    if not decisions:
+        return
+
+    def f(ev, key, width=9):
+        v = ev.get(key)
+        return f"{v:>{width}.3g}" if isinstance(v, (int, float)) else \
+            f"{'-':>{width}}"
+
+    print("budget decisions (budget_decision):")
+    print(f"  {'step':>4} {'solver':<6} {'lane':>4} {'alloc':>9} "
+          f"{'realised':>9} {'pred_tol':>9} {'res':>9} {'slope':>9} "
+          f"{'pool':>9}")
+    for ev in decisions:
+        lane = ev.get("lane")
+        print(f"  {ev.get('step', -1):>4} {ev.get('solver', '?'):<6} "
+              f"{'-' if lane is None else lane:>4} {f(ev, 'alloc')} "
+              f"{f(ev, 'realised')} {f(ev, 'pred_to_tol')} {f(ev, 'res')} "
+              f"{f(ev, 'slope')} {f(ev, 'pool')}")
 
 
 def main(argv=None):
