@@ -1,0 +1,128 @@
+"""Benchmark history: append-only per-module JSONL under the bench dir.
+
+Every ``benchmarks.run`` invocation appends one flattened snapshot of each
+module's ``BENCH_<module>.json`` to ``<out_dir>/history/<module>.jsonl`` —
+the raw material of the regression observatory (``tools/bench_history.py``).
+A history line is ``{"ts": ..., "metrics": {dotted.key: number}}``: only
+numeric scalars survive flattening, so every line is directly comparable
+against any other regardless of which extra fields a module wrote.
+
+Stdlib only, no repro imports — usable from CI without jax installed.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+HISTORY_DIRNAME = "history"
+
+# Flattening guards: benchmark reports are shallow; anything deeper is a
+# mistake we refuse to mirror into history.
+_MAX_DEPTH = 4
+
+# Report keys that are bookkeeping, not metrics.
+_SKIP_KEYS = {"module", "failed", "ts", "schema_version"}
+
+
+def flatten_metrics(report: dict) -> Dict[str, float]:
+    """Flatten a BENCH report into ``{dotted.key: number}``.
+
+    Numeric scalars keep their (dotted) key path; the ``rows`` list —
+    the ``name,us_per_call,derived`` CSV protocol — becomes
+    ``<row_name>.us_per_call`` entries; booleans and other lists are
+    skipped (histories hold comparable numbers only).
+    """
+    out: Dict[str, float] = {}
+
+    def visit(prefix: str, value, depth: int) -> None:
+        if depth > _MAX_DEPTH:
+            return
+        if isinstance(value, bool):
+            return
+        if isinstance(value, (int, float)):
+            out[prefix] = float(value)
+            return
+        if isinstance(value, dict):
+            for k, v in value.items():
+                if depth == 0 and k in _SKIP_KEYS:
+                    continue
+                visit(f"{prefix}.{k}" if prefix else str(k), v, depth + 1)
+
+    for k, v in report.items():
+        if k in _SKIP_KEYS:
+            continue
+        if k == "rows" and isinstance(v, list):
+            for row in v:
+                if isinstance(row, dict) and "name" in row \
+                        and isinstance(row.get("us_per_call"), (int, float)):
+                    out[f"{row['name']}.us_per_call"] = float(
+                        row["us_per_call"])
+            continue
+        visit(str(k), v, 1)
+    return out
+
+
+def history_path(out_dir: str, module: str) -> str:
+    """``<out_dir>/history/<module>.jsonl``."""
+    return os.path.join(out_dir, HISTORY_DIRNAME, f"{module}.jsonl")
+
+
+def append_history(out_dir: str, module: str, report: dict,
+                   ts: Optional[float] = None) -> Optional[str]:
+    """Append one flattened snapshot of ``report`` to the module's history.
+
+    Failed runs are NOT appended — a crash must not poison the rolling
+    baseline. Returns the history path (None when nothing was written).
+    """
+    if report.get("failed"):
+        return None
+    metrics = flatten_metrics(report)
+    if not metrics:
+        return None
+    path = history_path(out_dir, module)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    line = json.dumps(
+        {"ts": time.time() if ts is None else ts, "metrics": metrics},
+        separators=(",", ":"), sort_keys=True)
+    with open(path, "a", encoding="utf-8") as f:
+        f.write(line + "\n")
+    return path
+
+
+def load_history(out_dir: str, module: str) -> List[dict]:
+    """All parseable history entries for ``module``, oldest first.
+
+    Tolerant of truncated tail lines (a concurrent run may be mid-append).
+    """
+    path = history_path(out_dir, module)
+    entries: List[dict] = []
+    try:
+        with open(path, encoding="utf-8") as f:
+            lines = f.readlines()
+    except OSError:
+        return entries
+    for line in lines:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            entry = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if isinstance(entry, dict) and isinstance(entry.get("metrics"), dict):
+            entries.append(entry)
+    entries.sort(key=lambda e: e.get("ts", 0.0))
+    return entries
+
+
+def list_modules(out_dir: str) -> List[str]:
+    """Module names that have a history file under ``out_dir``."""
+    hist_dir = os.path.join(out_dir, HISTORY_DIRNAME)
+    try:
+        names = os.listdir(hist_dir)
+    except OSError:
+        return []
+    return sorted(
+        os.path.splitext(n)[0] for n in names if n.endswith(".jsonl"))

@@ -75,7 +75,12 @@ def parse_csv_rows(lines: list[str]) -> list[dict]:
 
 def write_bench_json(out_dir: str, module: str, wall_s: float,
                      rows: list[dict], failed: bool):
-    """BENCH_<module>.json; preserves any fields the module wrote itself."""
+    """BENCH_<module>.json; preserves any fields the module wrote itself.
+
+    Each successful report is also appended (flattened) to the per-module
+    rolling history under ``<out_dir>/history/`` — the baseline feed of
+    ``tools/bench_history.py``.
+    """
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{module}.json")
     report = {}
@@ -96,6 +101,12 @@ def write_bench_json(out_dir: str, module: str, wall_s: float,
     })
     with open(path, "w") as f:
         json.dump(report, f, indent=2)
+    try:
+        from benchmarks import history
+
+        history.append_history(out_dir, module, report)
+    except Exception as e:  # history is advisory; never fail the bench run
+        print(f"# history append failed for {module}: {e}", file=sys.stderr)
 
 
 def main(argv=None):

@@ -139,6 +139,152 @@ def _metrics_smoke_probe(endpoints, xq):
               f"({len(text.splitlines())} lines)")
 
 
+def _fleet_smoke_probe(sup, monitor, monitor_ep, endpoints, xq):
+    """The fleet-observability CI smoke against a live cluster + monitor.
+
+    Sequence: every replica must show up on ``/fleet/health``; after a
+    burst of traffic the aggregated ``/fleet/metrics`` ``/predict``
+    counters must EQUAL the per-replica ``/metrics`` totals (exact — the
+    scraper re-exports samples verbatim); ``/fleet/health`` EWMA/shed-rate
+    must match each replica's own ``/stats``; then one replica is
+    hard-killed and ``gp_fleet_replica_up`` must flip to 0 within a couple
+    of scrape intervals, with the availability burn-rate rule escalating
+    to PAGE. Raises SystemExit on any violation.
+    """
+    import urllib.request
+
+    import numpy as np
+
+    from repro.obs.scrape import parse_prometheus
+    from repro.serve.cluster.replica import _http_json
+
+    interval = monitor.interval_s
+
+    def wait_for(pred, timeout_s, what):
+        deadline = time.monotonic() + timeout_s
+        t0 = time.monotonic()
+        while time.monotonic() < deadline:
+            try:
+                if pred():
+                    return time.monotonic() - t0
+            except OSError:
+                pass
+            time.sleep(max(0.05, interval / 4))
+        raise SystemExit(f"[fleet-smoke] timed out waiting for {what}")
+
+    names = [f"replica_{i}" for i in range(len(endpoints))]
+
+    # 1. Every replica reports up on /fleet/health.
+    def all_up():
+        status, h = _http_json(monitor_ep + "/fleet/health")
+        return status == 200 and h["num_up"] == len(endpoints)
+
+    wait_for(all_up, 30 * interval + 30, "all replicas up on /fleet/health")
+    print(f"[fleet-smoke] {len(endpoints)} replicas up on /fleet/health")
+
+    # 2. Traffic: a burst of predicts against every replica, then stop —
+    # quiescent counters are what makes the exactness check exact.
+    probe = {"x": np.asarray(xq).tolist()}
+    for _ in range(5):
+        for ep in endpoints:
+            status, body = _http_json(ep + "/predict", probe)
+            if status not in (200, 429):
+                raise SystemExit(
+                    f"[fleet-smoke] {ep}/predict -> {status}: {body}")
+
+    def parse_url(url):
+        with urllib.request.urlopen(url, timeout=10) as resp:
+            return parse_prometheus(resp.read().decode("utf-8"))
+
+    def predict_total(fams, where=None):
+        fam = fams.get("gp_http_requests_total")
+        total = 0.0
+        for s in (fam.samples if fam else ()):
+            if s.labels.get("path") != "/predict":
+                continue
+            if where is None or where(s.labels):
+                total += s.value
+        return total
+
+    direct = {
+        name: predict_total(parse_url(ep + "/metrics"))
+        for name, ep in zip(names, endpoints)
+    }
+
+    # 3. /fleet/metrics totals must EQUAL the per-replica counters once the
+    # scraper's cache catches up (a couple of intervals at most).
+    def fleet_matches():
+        fams = parse_url(monitor_ep + "/fleet/metrics")
+        got = {
+            name: predict_total(
+                fams, where=lambda lbl, n=name: lbl.get("replica") == n)
+            for name in names
+        }
+        return got == direct
+
+    wait_for(fleet_matches, 10 * interval + 30,
+             f"/fleet/metrics to equal per-replica totals {direct}")
+    print(f"[fleet-smoke] /fleet/metrics == per-replica /metrics: {direct}")
+
+    # 4. /fleet/health load signals must match each replica's own /stats.
+    def health_matches():
+        _, h = _http_json(monitor_ep + "/fleet/health")
+        for name, ep in zip(names, endpoints):
+            entry = h["replicas"].get(name)
+            if entry is None:
+                return False
+            _, stats = _http_json(ep + "/stats")
+            adm = stats["admission"]
+            admitted, shed = adm.get("admitted", 0), adm.get("shed", 0)
+            want_shed = shed / (admitted + shed) if (admitted + shed) else 0.0
+            got_ewma = entry["service_ewma_ms"]
+            if got_ewma is None or \
+                    abs(got_ewma - adm["service_ewma_ms"]) > 1e-9:
+                return False
+            if abs((entry["shed_rate"] or 0.0) - want_shed) > 1e-9:
+                return False
+        return True
+
+    wait_for(health_matches, 10 * interval + 30,
+             "/fleet/health EWMA/shed-rate to match replica /stats")
+    print("[fleet-smoke] /fleet/health EWMA + shed-rate match /stats")
+
+    # 5. Availability must settle at OK before the chaos step.
+    def avail_ok():
+        _, s = _http_json(monitor_ep + "/fleet/slo")
+        return s["slos"].get("availability", {}).get("state") == "OK"
+
+    wait_for(avail_ok, 60 * interval + 30, "availability SLO to settle OK")
+
+    # 6. Chaos: hard-kill the last replica. Up must flip within ~2 scrape
+    # intervals; the availability burn rate must escalate OK -> PAGE.
+    victim = len(endpoints) - 1
+    sup.kill(victim)
+    t_kill = time.monotonic()
+
+    def victim_down():
+        _, h = _http_json(monitor_ep + "/fleet/health")
+        entry = h["replicas"].get(names[victim])
+        return entry is not None and not entry["up"]
+
+    took = wait_for(victim_down, 4 * interval + 15,
+                    f"gp_fleet_replica_up 0 for {names[victim]}")
+    print(f"[fleet-smoke] {names[victim]} marked down "
+          f"{took:.1f}s after kill (interval {interval}s)")
+
+    def paged():
+        _, s = _http_json(monitor_ep + "/fleet/slo")
+        return s["slos"].get("availability", {}).get("state") == "PAGE"
+
+    slow = max(r.slow_window_s
+               for slo in monitor.slo_engine._states.values()
+               for r in slo.slo.rules)
+    wait_for(paged, slow + 60 * interval + 30,
+             "availability burn-rate PAGE after replica kill")
+    print(f"[fleet-smoke] availability PAGE "
+          f"{time.monotonic() - t_kill:.1f}s after kill — OK")
+
+
 def _http_smoke_probe(endpoints, xq, metrics=False):
     """The CI smoke sequence against live endpoints: /healthz and /predict
     must 200 with finite predictions; a flood past the admission cap must
@@ -224,6 +370,9 @@ def serve_gp_http(args, ds, cfg, state):
     if args.replicas > 1 and not args.artifact_store:
         raise SystemExit("--replicas > 1 needs --artifact-store (the store "
                          "is how worker processes receive the model)")
+    if args.fleet_smoke and not (args.artifact_store and args.monitor):
+        raise SystemExit("--fleet-smoke needs --artifact-store (supervised "
+                         "replicas) and --monitor HOST:PORT")
 
     if args.artifact_store:
         version = publish_servable(args.artifact_store, model)
@@ -237,8 +386,47 @@ def serve_gp_http(args, ds, cfg, state):
         )
         endpoints = sup.start()
         print(f"[serve-http] {args.replicas} replica(s): {endpoints}")
+
+        monitor = monitor_server = None
+        if args.monitor:
+            import os
+
+            from repro.obs.trace import EventLog
+            from repro.serve.cluster.monitor import (
+                FleetMonitor,
+                default_slos,
+                start_monitor_server,
+            )
+
+            mhost, mport = args.monitor.rsplit(":", 1)
+            interval = args.monitor_interval
+            slos = None
+            if args.fleet_smoke:
+                # Short windows so the burn-rate PAGE fires within the
+                # smoke's patience rather than the production 5min/1h.
+                interval = min(interval, 0.5)
+                slos = default_slos(fast_window_s=6 * interval,
+                                    slow_window_s=18 * interval)
+            mlog = None
+            if args.request_log:
+                os.makedirs(args.request_log, exist_ok=True)
+                mlog = EventLog(
+                    path=os.path.join(args.request_log, "monitor.jsonl"))
+            monitor = FleetMonitor(
+                supervisor=sup, interval_s=interval, slos=slos,
+                event_log=mlog)
+            monitor_server, _ = start_monitor_server(
+                monitor, host=mhost, port=int(mport))
+            monitor_ep = f"http://{mhost}:{monitor_server.port}"
+            print(f"[serve-http] fleet monitor: {monitor_ep}/fleet/"
+                  f"{{metrics,slo,health}} (interval {interval}s)")
+
         try:
-            if args.http_smoke:
+            if args.fleet_smoke:
+                if monitor is None:
+                    raise SystemExit("--fleet-smoke needs --monitor HOST:PORT")
+                _fleet_smoke_probe(sup, monitor, monitor_ep, endpoints, xq)
+            elif args.http_smoke:
                 _http_smoke_probe(endpoints, xq, metrics=args.metrics)
             elif args.serve_seconds:
                 time.sleep(args.serve_seconds)
@@ -248,6 +436,9 @@ def serve_gp_http(args, ds, cfg, state):
         except KeyboardInterrupt:
             pass
         finally:
+            if monitor_server is not None:
+                monitor_server.shutdown()
+                monitor.stop()
             sup.stop()
         return
 
@@ -396,6 +587,16 @@ def main(argv=None):
     ap.add_argument("--request-log", default=None, metavar="DIR",
                     help="write per-replica structured JSONL request logs "
                          "(request/admission/engine span events) under DIR")
+    ap.add_argument("--monitor", default=None, metavar="HOST:PORT",
+                    help="run the fleet monitor alongside the supervisor "
+                         "(scrapes every replica, serves /fleet/metrics, "
+                         "/fleet/slo, /fleet/health; port 0 = ephemeral)")
+    ap.add_argument("--monitor-interval", type=float, default=1.0,
+                    help="monitor scrape/evaluate period in seconds")
+    ap.add_argument("--fleet-smoke", action="store_true",
+                    help="probe the fleet plane (aggregate==per-replica "
+                         "counters, health contract, kill-one-replica "
+                         "staleness + burn-rate PAGE), then exit (CI smoke)")
     args = ap.parse_args(argv)
     if args.arch == "gp-iterative":
         serve_gp(args)

@@ -16,6 +16,15 @@ offline ``tools/trace_report.py`` reader can use it without an accelerator
 runtime. Solver-side telemetry (per-iteration residual ring buffers) lives
 with the solvers (`repro.solvers.base`) because it runs inside jit; this
 package is where those recordings become events and metrics on the host.
+
+Fleet-level sensing sits on top of the per-process primitives:
+
+  * :mod:`repro.obs.scrape` — the Prometheus text-format parser (exact
+    inverse of the renderer) and the :class:`FleetScraper` that polls N
+    replicas and aggregates their families under a ``replica`` label;
+  * :mod:`repro.obs.slo`    — SLO objects, multi-window error-budget
+    burn-rate rules, and the OK/WARN/PAGE alert state machine feeding
+    JSONL alert events and ``gp_slo_*`` gauges.
 """
 from repro.obs.metrics import (
     NULL_REGISTRY,
@@ -23,8 +32,23 @@ from repro.obs.metrics import (
     Gauge,
     Histogram,
     MetricsRegistry,
+    bucket_fraction_le,
     default_registry,
+    quantile_from_buckets,
     render_prometheus,
+)
+from repro.obs.scrape import (
+    Family,
+    FleetScraper,
+    Sample,
+    parse_prometheus,
+)
+from repro.obs.slo import (
+    AvailabilitySLO,
+    BurnRateRule,
+    LatencySLO,
+    SLOEngine,
+    default_rules,
 )
 from repro.obs.trace import (
     TRACE_HEADER,
@@ -45,8 +69,19 @@ __all__ = [
     "Histogram",
     "MetricsRegistry",
     "NULL_REGISTRY",
+    "bucket_fraction_le",
     "default_registry",
+    "quantile_from_buckets",
     "render_prometheus",
+    "Family",
+    "FleetScraper",
+    "Sample",
+    "parse_prometheus",
+    "AvailabilitySLO",
+    "BurnRateRule",
+    "LatencySLO",
+    "SLOEngine",
+    "default_rules",
     "TRACE_HEADER",
     "EventLog",
     "configure",

@@ -65,6 +65,70 @@ def _fmt(value: float) -> str:
     return repr(float(value))
 
 
+def quantile_from_buckets(bounds: Sequence[float],
+                          cum_counts: Sequence[float],
+                          q: float) -> float:
+    """Estimate the ``q``-quantile from cumulative histogram buckets.
+
+    ``bounds`` are the finite upper bucket boundaries (ascending);
+    ``cum_counts`` are the cumulative counts per boundary plus one final
+    entry for the implicit ``+Inf`` bucket (``len(bounds) + 1`` entries).
+    Standard Prometheus ``histogram_quantile`` semantics: linear
+    interpolation within the landing bucket (from its lower boundary, 0.0
+    below the first), and a quantile that lands in the ``+Inf`` bucket
+    clamps to the highest finite boundary. Returns NaN for an empty
+    histogram or an out-of-range ``q``.
+    """
+    if not 0.0 <= q <= 1.0:
+        return math.nan
+    if len(cum_counts) != len(bounds) + 1:
+        raise ValueError("cum_counts must have len(bounds) + 1 entries")
+    total = cum_counts[-1]
+    if total <= 0:
+        return math.nan
+    target = q * total
+    for i, bound in enumerate(bounds):
+        if cum_counts[i] >= target:
+            lo = bounds[i - 1] if i > 0 else 0.0
+            below = cum_counts[i - 1] if i > 0 else 0.0
+            in_bucket = cum_counts[i] - below
+            if in_bucket <= 0:
+                return bound
+            return lo + (bound - lo) * (target - below) / in_bucket
+    # Landed in +Inf: the best defensible point estimate is the largest
+    # finite boundary (histogram_quantile does the same).
+    return bounds[-1] if bounds else math.nan
+
+
+def bucket_fraction_le(bounds: Sequence[float],
+                       cum_counts: Sequence[float],
+                       threshold: float) -> float:
+    """Fraction of observations ``<= threshold`` from cumulative buckets.
+
+    Same layout contract as :func:`quantile_from_buckets`. Interpolates
+    linearly inside the bucket containing ``threshold``; 1.0 above the
+    last finite boundary, NaN for an empty histogram. The latency-SLO
+    engine uses this to count "good" (fast-enough) events.
+    """
+    if len(cum_counts) != len(bounds) + 1:
+        raise ValueError("cum_counts must have len(bounds) + 1 entries")
+    total = cum_counts[-1]
+    if total <= 0:
+        return math.nan
+    prev_bound, prev_cum = 0.0, 0.0
+    for i, bound in enumerate(bounds):
+        if threshold <= bound:
+            if threshold == bound:
+                return cum_counts[i] / total
+            width = bound - prev_bound
+            if width <= 0:
+                return cum_counts[i] / total
+            frac = max(0.0, (threshold - prev_bound)) / width
+            return (prev_cum + (cum_counts[i] - prev_cum) * frac) / total
+        prev_bound, prev_cum = bound, cum_counts[i]
+    return 1.0
+
+
 class _Instrument:
     """Shared label bookkeeping for all instrument kinds."""
 

@@ -87,13 +87,28 @@ class EventLog:
       path: file path; ``{pid}`` expands to the process ID so several
         processes given the same template never share a file.
       stream: an open text stream instead of a path (tests, stdout).
-    Exactly one of ``path`` / ``stream`` must be given.
+      max_bytes: when > 0 and ``path``-backed, rotate once the file would
+        exceed this size: the live file moves to ``<path>.1`` (existing
+        rotations shift to ``.2`` … ``.backups``, the oldest dropped) and a
+        fresh file is opened. Rotation happens between lines, under the
+        writer lock, so no event is ever split across files.
+      backups: how many rotated files to keep (>= 1 when rotating).
+    Exactly one of ``path`` / ``stream`` must be given; rotation requires
+    ``path``.
     """
 
-    def __init__(self, path: Optional[str] = None, stream=None):
+    def __init__(self, path: Optional[str] = None, stream=None,
+                 max_bytes: int = 0, backups: int = 3):
         if (path is None) == (stream is None):
             raise ValueError("pass exactly one of path= or stream=")
+        if max_bytes and path is None:
+            raise ValueError("rotation (max_bytes) requires path=")
+        if max_bytes and backups < 1:
+            raise ValueError("backups must be >= 1 when rotating")
         self.path = None
+        self.max_bytes = int(max_bytes)
+        self.backups = int(backups)
+        self.rotations = 0
         if path is not None:
             path = path.replace("{pid}", str(os.getpid()))
             parent = os.path.dirname(path)
@@ -108,6 +123,23 @@ class EventLog:
         self._lock = threading.Lock()
         self.events_written = 0
 
+    def _rotate_locked(self, incoming: int) -> None:
+        """Rotate if writing ``incoming`` more bytes would exceed the cap."""
+        try:
+            size = self._fh.tell()
+        except (OSError, ValueError):
+            return
+        if size == 0 or size + incoming <= self.max_bytes:
+            return
+        self._fh.close()
+        for i in range(self.backups, 1, -1):
+            src = f"{self.path}.{i - 1}"
+            if os.path.exists(src):
+                os.replace(src, f"{self.path}.{i}")
+        os.replace(self.path, f"{self.path}.1")
+        self._fh = open(self.path, "a", encoding="utf-8")
+        self.rotations += 1
+
     def emit(self, kind: str, trace_id: Optional[str] = None, **fields) -> dict:
         """Write one event line; returns the event dict.
 
@@ -121,6 +153,8 @@ class EventLog:
         event.update(fields)
         line = json.dumps(event, separators=(",", ":"))
         with self._lock:
+            if self.max_bytes and self._owns:
+                self._rotate_locked(len(line) + 1)
             self._fh.write(line + "\n")
             self._fh.flush()
             self.events_written += 1
@@ -138,10 +172,12 @@ _LOG: Optional[EventLog] = None
 _env_checked = False
 
 
-def configure(path: Optional[str] = None, stream=None) -> Optional[EventLog]:
+def configure(path: Optional[str] = None, stream=None,
+              max_bytes: int = 0, backups: int = 3) -> Optional[EventLog]:
     """Install (or clear) the process-wide event log.
 
-    ``configure(path=...)`` or ``configure(stream=...)`` installs a writer;
+    ``configure(path=...)`` or ``configure(stream=...)`` installs a writer
+    (``max_bytes``/``backups`` forward to :class:`EventLog` rotation);
     ``configure()`` with neither closes and clears it (events become
     no-ops again). Returns the installed log (or None).
     """
@@ -150,7 +186,8 @@ def configure(path: Optional[str] = None, stream=None) -> Optional[EventLog]:
         if _LOG is not None and _LOG._owns:
             _LOG.close()
         _LOG = (
-            EventLog(path=path, stream=stream)
+            EventLog(path=path, stream=stream, max_bytes=max_bytes,
+                     backups=backups)
             if (path is not None or stream is not None) else None
         )
         _env_checked = True  # explicit configure wins over the env var

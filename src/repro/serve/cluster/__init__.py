@@ -11,7 +11,10 @@ The step from "a library you can call" to "a service you can run":
   * :mod:`repro.serve.cluster.store` — versioned artifact distribution
     with content-hash manifests and an atomic ``LATEST`` pointer;
   * :mod:`repro.serve.cluster.replica` — worker processes + a supervisor
-    that spawns, monitors and drains them.
+    that spawns, monitors and drains them;
+  * :mod:`repro.serve.cluster.monitor` — the fleet monitor: scrapes every
+    replica's ``/metrics`` + ``/stats``, evaluates SLO burn rates, and
+    serves the aggregated ``/fleet/*`` endpoints the autoscaler consumes.
 """
 from repro.serve.cluster.admission import (
     AdmissionController,
@@ -20,6 +23,11 @@ from repro.serve.cluster.admission import (
     Priority,
     TokenBucket,
     parse_priority,
+)
+from repro.serve.cluster.monitor import (
+    FleetMonitor,
+    MonitorHTTPServer,
+    start_monitor_server,
 )
 from repro.serve.cluster.replica import ReplicaSupervisor, run_worker
 from repro.serve.cluster.store import (
@@ -40,6 +48,7 @@ from repro.serve.cluster.transport import (
 __all__ = [
     "AdmissionController", "AdmissionStats", "Decision", "Priority",
     "TokenBucket", "parse_priority",
+    "FleetMonitor", "MonitorHTTPServer", "start_monitor_server",
     "ReplicaSupervisor", "run_worker",
     "ArtifactPoller", "fetch_servable", "latest_version", "list_versions",
     "publish_servable", "read_manifest",

@@ -241,6 +241,37 @@ class ReplicaSupervisor:
         """Base URLs of all replicas, in index order."""
         return [self.endpoint(i) for i in range(self.num_replicas)]
 
+    def targets(self) -> dict:
+        """Scrape-target map ``{replica_name: base_url}`` for the monitor.
+
+        Every replica with a known port is listed — including dead ones,
+        deliberately: a crashed replica stays a fleet member until the
+        supervisor decides otherwise, and keeping its target is what lets
+        the scraper observe the miss and flip ``gp_fleet_replica_up`` to 0
+        instead of silently shrinking the fleet.
+        """
+        out = {}
+        for i in range(self.num_replicas):
+            if self.ports[i] is None:
+                # A respawned worker reports its port via the port file;
+                # pick it up opportunistically so the target set heals.
+                try:
+                    with open(self._port_file(i)) as f:
+                        self.ports[i] = int(f.read().strip())
+                except (FileNotFoundError, ValueError):
+                    continue
+            out[f"replica_{i}"] = f"http://{self.host}:{self.ports[i]}"
+        return out
+
+    def kill(self, i: int) -> None:
+        """Hard-kill replica ``i`` without draining or respawning (chaos
+        hook for staleness/alerting tests — :meth:`check` still respawns
+        it if called afterwards)."""
+        proc = self._procs[i]
+        if proc is not None and proc.is_alive():
+            proc.kill()
+            proc.join(timeout=10.0)
+
     def check(self) -> int:
         """Respawn any dead replica; returns how many were restarted."""
         restarted = 0

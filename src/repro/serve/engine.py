@@ -19,6 +19,7 @@ to the exact request rows before they leave the engine.
 """
 from __future__ import annotations
 
+import math
 import queue
 import threading
 import time
@@ -38,7 +39,13 @@ DEFAULT_BUCKETS = (16, 64, 256)
 
 # Version of the stats wire format (`EngineStats.as_dict` / GET /stats).
 # Bump on any key rename/removal so pollers can detect format drift.
-STATS_SCHEMA_VERSION = 2
+# v3: added latency_p50 / latency_p99 (seconds, None until first dispatch).
+STATS_SCHEMA_VERSION = 3
+
+# Batch-latency buckets for the in-process p50/p99 estimate — the same
+# boundaries the Prometheus histogram uses, so /stats and scrape-side
+# quantiles agree.
+_LATENCY_BOUNDS = obs_metrics.DEFAULT_BUCKETS
 
 
 def pad_to_bucket(xq: jax.Array, bucket: int) -> jax.Array:
@@ -73,12 +80,19 @@ class EngineStats:
     padded_rows: int = 0  # phantom rows added by bucketing
     coalesced: int = 0  # requests that shared a batch with another
     per_bucket: dict = field(default_factory=dict)
+    # Per-boundary (non-cumulative) dispatch-latency counts over
+    # ``_LATENCY_BOUNDS`` plus a final +Inf slot; feeds latency_p50/p99.
+    latency_counts: list = field(
+        default_factory=lambda: [0] * (len(_LATENCY_BOUNDS) + 1)
+    )
     _lock: threading.Lock = field(
         default_factory=threading.Lock, repr=False, compare=False
     )
 
-    def record(self, bucket: int, batch_rows: int, num_requests: int) -> None:
-        """Count one engine dispatch (bucket rows, real rows, requests)."""
+    def record(self, bucket: int, batch_rows: int, num_requests: int,
+               dur_s: Optional[float] = None) -> None:
+        """Count one engine dispatch (bucket rows, real rows, requests,
+        and — when given — its wall duration for the latency quantiles)."""
         with self._lock:
             self.requests += num_requests
             self.batches += 1
@@ -87,6 +101,13 @@ class EngineStats:
             if num_requests > 1:
                 self.coalesced += num_requests
             self.per_bucket[bucket] = self.per_bucket.get(bucket, 0) + 1
+            if dur_s is not None:
+                for i, bound in enumerate(_LATENCY_BOUNDS):
+                    if dur_s <= bound:
+                        self.latency_counts[i] += 1
+                        break
+                else:
+                    self.latency_counts[-1] += 1
 
     def as_dict(self, num_compiles: Optional[int] = None) -> dict:
         """JSON-serialisable snapshot — THE stats wire format.
@@ -95,12 +116,21 @@ class EngineStats:
         and ``benchmarks/serve_cluster``; ``padding_waste`` is the fraction
         of executed rows that were bucketing phantoms, ``num_compiles`` the
         engine's executable count (None = introspection unavailable, which
-        consumers must NOT read as zero). ``ts`` (epoch seconds) and
+        consumers must NOT read as zero). ``latency_p50``/``latency_p99``
+        are per-dispatch wall-time quantiles in seconds, interpolated from
+        the same bucket boundaries as the Prometheus histogram (None until
+        the first timed dispatch). ``ts`` (epoch seconds) and
         ``schema_version`` let pollers detect stale snapshots and format
         drift.
         """
         with self._lock:
             executed = self.rows + self.padded_rows
+            cum, running = [], 0
+            for c in self.latency_counts:
+                running += c
+                cum.append(float(running))
+            p50 = obs_metrics.quantile_from_buckets(_LATENCY_BOUNDS, cum, 0.5)
+            p99 = obs_metrics.quantile_from_buckets(_LATENCY_BOUNDS, cum, 0.99)
             return {
                 "ts": time.time(),
                 "schema_version": STATS_SCHEMA_VERSION,
@@ -112,6 +142,8 @@ class EngineStats:
                 "coalesced": self.coalesced,
                 "per_bucket": {str(b): c for b, c in sorted(self.per_bucket.items())},
                 "num_compiles": num_compiles,
+                "latency_p50": None if math.isnan(p50) else p50,
+                "latency_p99": None if math.isnan(p99) else p99,
             }
 
 
@@ -227,7 +259,7 @@ class BucketedEngine:
     def _observe(self, bucket: int, batch_rows: int, num_requests: int,
                  dur_s: float) -> None:
         """Fold one dispatch into stats + metrics (both paths share this)."""
-        self.stats.record(bucket, batch_rows, num_requests)
+        self.stats.record(bucket, batch_rows, num_requests, dur_s=dur_s)
         self._m_requests.inc(num_requests)
         self._m_batches.inc(bucket=str(bucket))
         self._m_rows.inc(batch_rows, kind="real")

@@ -1,0 +1,746 @@
+"""Fleet observability plane: Prometheus parse/render round-trip, the
+fleet scraper's staleness/TTL machinery, SLO burn-rate rules + the alert
+state machine, EventLog rotation, bucket-quantile helpers, the bench
+regression observatory, and the end-to-end 2-replica fleet test."""
+import json
+import math
+import os
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import (
+    MetricsRegistry,
+    bucket_fraction_le,
+    quantile_from_buckets,
+)
+from repro.obs.scrape import (
+    Family,
+    FleetScraper,
+    parse_prometheus,
+    render_families,
+    unescape_label_value,
+)
+from repro.obs.slo import (
+    OK,
+    PAGE,
+    WARN,
+    AvailabilitySLO,
+    BurnRateRule,
+    LatencySLO,
+    SLOEngine,
+)
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+
+# -- Prometheus round-trip ----------------------------------------------------
+
+ADVERSARIAL_LABELS = [
+    'plain',
+    'with"quote',
+    "back\\slash",
+    "new\nline",
+    'all\\three" \n mixed',
+    '\\n literal-backslash-n',
+    'trailing\\',
+]
+
+
+def _families_equal(a, b):
+    assert sorted(a) == sorted(b)
+    for name in a:
+        fa, fb = a[name], b[name]
+        assert fa.kind == fb.kind, name
+        assert fa.help == fb.help, name
+        sa = sorted((s.name, tuple(sorted(s.labels.items())), s.value)
+                    for s in fa.samples if not math.isnan(s.value))
+        sb = sorted((s.name, tuple(sorted(s.labels.items())), s.value)
+                    for s in fb.samples if not math.isnan(s.value))
+        assert sa == sb, name
+
+
+def test_parse_render_round_trip_all_kinds():
+    """parse(render(registry)) recovers every family, sample and label for
+    counters, gauges and histograms — including adversarial escapes."""
+    reg = MetricsRegistry()
+    c = reg.counter("gp_rt_total", 'help with "quotes" and \\slash\nline',
+                    ["path"])
+    for i, lbl in enumerate(ADVERSARIAL_LABELS):
+        c.inc(i + 0.5, path=lbl)
+    g = reg.gauge("gp_rt_gauge", "gauge help", ["k"])
+    g.set(math.inf, k="inf")
+    g.set(-math.inf, k="-inf")
+    g.set(-12.75, k="neg")
+    g.set(3, k="int")
+    h = reg.histogram("gp_rt_seconds", "hist help", ["op"],
+                      buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v, op='o"p\\s\n')
+
+    text = reg.render()
+    parsed = parse_prometheus(text)
+    # Re-render the parse and parse again: a true inverse is idempotent.
+    re_text = "\n".join(render_families(parsed)) + "\n"
+    _families_equal(parsed, parse_prometheus(re_text))
+
+    fam = parsed["gp_rt_total"]
+    assert fam.kind == "counter"
+    assert fam.help == 'help with "quotes" and \\slash\nline'
+    got = {s.labels["path"]: s.value for s in fam.samples}
+    assert got == {lbl: i + 0.5 for i, lbl in enumerate(ADVERSARIAL_LABELS)}
+
+    gauge = {s.labels["k"]: s.value for s in parsed["gp_rt_gauge"].samples}
+    assert gauge["inf"] == math.inf and gauge["-inf"] == -math.inf
+    assert gauge["neg"] == -12.75 and gauge["int"] == 3.0
+
+    hist = parsed["gp_rt_seconds"]
+    assert hist.kind == "histogram"
+    buckets = {s.labels["le"]: s.value for s in hist.samples
+               if s.name.endswith("_bucket")}
+    assert buckets == {"0.1": 1.0, "1": 2.0, "+Inf": 3.0}
+    count = [s for s in hist.samples if s.name.endswith("_count")]
+    total = [s for s in hist.samples if s.name.endswith("_sum")]
+    assert count[0].value == 3.0
+    assert total[0].value == pytest.approx(5.55)
+
+
+def test_unescape_is_exact_inverse():
+    for raw in ADVERSARIAL_LABELS:
+        assert unescape_label_value(
+            obs_metrics.escape_label_value(raw)) == raw
+
+
+def test_parse_value_specials_and_malformed():
+    from repro.obs.scrape import parse_value
+
+    assert parse_value("+Inf") == math.inf
+    assert parse_value("-Inf") == -math.inf
+    assert math.isnan(parse_value("NaN"))
+    with pytest.raises(ValueError):
+        parse_prometheus("gp_x{bad} 1\n")
+    with pytest.raises(ValueError):
+        parse_prometheus("gp_x\n")
+
+
+def test_render_families_appends_extra_label():
+    fams = parse_prometheus('# TYPE gp_a counter\ngp_a{x="1"} 2\ngp_a 3\n')
+    lines = render_families(fams, extra_label=("replica", 'r"0'))
+    assert 'gp_a{x="1",replica="r\\"0"} 2' in lines
+    assert 'gp_a{replica="r\\"0"} 3' in lines
+
+
+# -- bucket quantiles ---------------------------------------------------------
+
+def test_quantile_from_buckets_interpolation():
+    bounds = (0.1, 1.0)
+    # 5 obs <= 0.1, 5 more in (0.1, 1.0], none above.
+    cum = [5.0, 10.0, 10.0]
+    assert quantile_from_buckets(bounds, cum, 0.5) == pytest.approx(0.1)
+    assert quantile_from_buckets(bounds, cum, 0.75) == pytest.approx(0.55)
+    assert quantile_from_buckets(bounds, cum, 0.25) == pytest.approx(0.05)
+    # Everything in +Inf clamps to the last finite bound.
+    assert quantile_from_buckets(bounds, [0.0, 0.0, 7.0], 0.9) == 1.0
+    assert math.isnan(quantile_from_buckets(bounds, [0.0, 0.0, 0.0], 0.5))
+    assert math.isnan(quantile_from_buckets(bounds, cum, 1.5))
+    with pytest.raises(ValueError):
+        quantile_from_buckets(bounds, [1.0], 0.5)
+
+
+def test_bucket_fraction_le():
+    bounds = (0.1, 1.0)
+    cum = [5.0, 10.0, 10.0]
+    assert bucket_fraction_le(bounds, cum, 0.1) == pytest.approx(0.5)
+    assert bucket_fraction_le(bounds, cum, 1.0) == pytest.approx(1.0)
+    assert bucket_fraction_le(bounds, cum, 2.0) == 1.0
+    assert bucket_fraction_le(bounds, cum, 0.55) == pytest.approx(0.75)
+    assert math.isnan(bucket_fraction_le(bounds, [0.0, 0.0, 0.0], 0.1))
+
+
+# -- FleetScraper -------------------------------------------------------------
+
+class FakeFleetHTTP:
+    """In-memory stand-in for N replica HTTP endpoints."""
+
+    def __init__(self):
+        self.registries = {}
+        self.stats = {}
+        self.dead = set()
+
+    def add(self, name):
+        reg = MetricsRegistry()
+        self.registries[name] = reg
+        self.stats[name] = {
+            "admission": {"admitted": 0, "shed": 0, "service_ewma_ms": 1.5,
+                          "inflight": 0},
+            "engine": {"requests": 0},
+            "draining": False,
+            "version": "v1",
+        }
+        return reg
+
+    def fetch(self, url, timeout):
+        name, _, route = url.partition("://")[2].partition("/")
+        if name in self.dead:
+            raise OSError("connection refused")
+        if route == "metrics":
+            return self.registries[name].render().encode()
+        if route == "stats":
+            return json.dumps(self.stats[name]).encode()
+        raise OSError(f"404 {route}")
+
+
+def _make_scraper(http, names, **kw):
+    clock = {"t": 0.0}
+    kw.setdefault("stale_after_misses", 2)
+    kw.setdefault("ttl_s", 10.0)
+    scraper = FleetScraper(
+        targets={n: f"fake://{n}" for n in names},
+        clock=lambda: clock["t"], fetch=http.fetch, **kw)
+    return scraper, clock
+
+
+def test_scraper_aggregates_with_replica_label_exactly():
+    http = FakeFleetHTTP()
+    for name, inc in (("r0", 3), ("r1", 5)):
+        reg = http.add(name)
+        reg.counter("gp_http_requests_total", "reqs",
+                    ["path", "status"]).inc(inc, path="/predict", status="200")
+    scraper, _ = _make_scraper(http, ["r0", "r1"])
+    assert scraper.scrape_once() == {"r0": True, "r1": True}
+
+    total = scraper.counter_total(
+        "gp_http_requests_total",
+        where=lambda lbl: lbl.get("path") == "/predict")
+    assert total == 8.0
+
+    fams = parse_prometheus(scraper.render())
+    per_replica = {
+        s.labels["replica"]: s.value
+        for s in fams["gp_http_requests_total"].samples
+    }
+    assert per_replica == {"r0": 3.0, "r1": 5.0}
+    up = {s.labels["replica"]: s.value
+          for s in fams["gp_fleet_replica_up"].samples}
+    assert up == {"r0": 1.0, "r1": 1.0}
+
+
+def test_scraper_staleness_and_ttl():
+    http = FakeFleetHTTP()
+    reg = http.add("r0")
+    reg.counter("gp_x_total", "x").inc(7)
+    http.add("r1")
+    scraper, clock = _make_scraper(http, ["r0", "r1"],
+                                   stale_after_misses=2, ttl_s=5.0)
+    scraper.scrape_once()
+    assert scraper.health()["r0"]["up"]
+
+    http.dead.add("r0")
+    clock["t"] = 1.0
+    scraper.scrape_once()
+    h = scraper.health()["r0"]
+    assert h["up"] and h["consecutive_misses"] == 1  # one miss: still up
+    clock["t"] = 2.0
+    scraper.scrape_once()
+    h = scraper.health()["r0"]
+    assert not h["up"] and h["consecutive_misses"] == 2  # second miss: down
+    # Series survive until the TTL expires...
+    assert scraper.counter_total("gp_x_total") == 7.0
+    fams = parse_prometheus(scraper.render())
+    assert fams["gp_fleet_replica_up"].samples[0].value == 0.0
+    # ...then are dropped.
+    clock["t"] = 6.0
+    scraper.scrape_once()
+    assert scraper.counter_total("gp_x_total") == 0.0
+    fams = parse_prometheus(scraper.render())
+    assert "gp_x_total" not in fams
+    # The up series itself survives the drop: the fleet must keep seeing
+    # the dead member.
+    up = {s.labels["replica"]: s.value
+          for s in fams["gp_fleet_replica_up"].samples}
+    assert up == {"r0": 0.0, "r1": 1.0}
+    # Recovery resets the machinery.
+    http.dead.discard("r0")
+    clock["t"] = 7.0
+    scraper.scrape_once()
+    assert scraper.health()["r0"]["up"]
+    assert scraper.counter_total("gp_x_total") == 7.0
+
+
+def test_scraper_target_removal_drops_series():
+    http = FakeFleetHTTP()
+    http.add("r0").counter("gp_x_total", "x").inc(1)
+    http.add("r1").counter("gp_x_total", "x").inc(2)
+    scraper, _ = _make_scraper(http, ["r0", "r1"])
+    scraper.scrape_once()
+    scraper.set_targets({"r1": "fake://r1"})  # r0 scaled down
+    assert scraper.counter_total("gp_x_total") == 2.0
+    fams = parse_prometheus(scraper.render())
+    names = {s.labels["replica"]
+             for s in fams["gp_fleet_replica_up"].samples}
+    assert names == {"r1"}
+
+
+def test_scraper_health_lifts_stats_signals():
+    http = FakeFleetHTTP()
+    http.add("r0")
+    http.stats["r0"]["admission"].update(
+        admitted=30, shed=10, service_ewma_ms=4.25, inflight=2)
+    reg = http.registries["r0"]
+    reg.gauge("gp_engine_queue_depth", "depth").set(3)
+    scraper, _ = _make_scraper(http, ["r0"])
+    scraper.scrape_once()
+    h = scraper.health()["r0"]
+    assert h["service_ewma_ms"] == 4.25
+    assert h["shed_rate"] == pytest.approx(0.25)
+    assert h["inflight"] == 2
+    assert h["queue_depth"] == 3.0
+    assert h["version"] == "v1"
+
+
+def test_scraper_histogram_cumulative_merges_across_replicas():
+    http = FakeFleetHTTP()
+    for name, vals in (("r0", (0.05, 0.5)), ("r1", (0.05,))):
+        reg = http.add(name)
+        hist = reg.histogram("gp_http_request_seconds", "lat", ["path"],
+                             buckets=(0.1, 1.0))
+        for v in vals:
+            hist.observe(v, path="/predict")
+    scraper, _ = _make_scraper(http, ["r0", "r1"])
+    scraper.scrape_once()
+    bounds, cum = scraper.histogram_cumulative("gp_http_request_seconds")
+    assert bounds == (0.1, 1.0)
+    assert cum == [2.0, 3.0, 3.0]
+
+
+# -- SLO engine ---------------------------------------------------------------
+
+class FakeFleet:
+    """Direct control over the accessor surface the SLO engine reads."""
+
+    def __init__(self):
+        self.good = 0.0
+        self.bad = 0.0
+        self.hist = ((0.1, 1.0), [0.0, 0.0, 0.0])
+
+    def counter_total(self, family, where=None):
+        if where is not None and where({"status": "500"}):
+            return self.bad
+        return self.good
+
+    def scrape_totals(self):
+        return 0.0, 0.0
+
+    def histogram_cumulative(self, family, where=None):
+        return self.hist
+
+
+def _engine(fleet, objective=0.9, fast=10.0, slow=30.0, stream=None):
+    rules = [
+        BurnRateRule(PAGE, 10.0, fast, slow),
+        BurnRateRule(WARN, 2.0, fast, slow),
+    ]
+    log = obs_trace.EventLog(stream=stream) if stream is not None else None
+    clock = {"t": 0.0}
+    eng = SLOEngine(
+        fleet, [AvailabilitySLO(objective=objective, rules=rules,
+                                count_scrapes=False)],
+        event_log=log, clock=lambda: clock["t"])
+    return eng, clock
+
+
+def test_slo_burn_escalates_and_pages():
+    import io
+
+    fleet = FakeFleet()
+    stream = io.StringIO()
+    eng, clock = _engine(fleet, stream=stream)
+    fleet.good = 100.0
+    status = eng.evaluate()
+    assert status["availability"]["state"] == OK
+
+    # 100% errors: burn = 1.0 / (1 - 0.9) = 10 >= PAGE threshold in both
+    # windows once the window holds only bad deltas.
+    for step in range(1, 4):
+        clock["t"] = step * 1.0
+        fleet.bad += 50.0
+        status = eng.evaluate()
+    assert status["availability"]["state"] == PAGE
+    events = [json.loads(line) for line in
+              stream.getvalue().splitlines()]
+    transitions = [(e["from_state"], e["to_state"]) for e in events
+                   if e["kind"] == "slo_alert"]
+    assert transitions[-1][1] == PAGE
+    assert all(e["slo"] == "availability" for e in events)
+
+
+def test_slo_warn_then_hysteresis_deescalation():
+    fleet = FakeFleet()
+    eng, clock = _engine(fleet, fast=5.0, slow=5.0)
+    fleet.good = 100.0
+    eng.evaluate()
+    # ~30% errors -> burn 3: above WARN(2), below PAGE(10).
+    clock["t"] = 1.0
+    fleet.bad += 30.0
+    fleet.good += 70.0
+    status = eng.evaluate()
+    assert status["availability"]["state"] == WARN
+    # Burn just below the raw threshold but above threshold*hysteresis
+    # (2 * 0.8 = 1.6): must HOLD the WARN state.
+    clock["t"] = 2.0
+    fleet.bad += 18.0
+    fleet.good += 82.0
+    status = eng.evaluate()
+    assert status["availability"]["state"] == WARN
+    # Clean traffic only; once the window slides past the bad spell the
+    # burn collapses and the state returns to OK.
+    for step in range(3, 10):
+        clock["t"] = float(step)
+        fleet.good += 100.0
+        status = eng.evaluate()
+    assert status["availability"]["state"] == OK
+
+
+def test_slo_gauges_and_budget_exported():
+    fleet = FakeFleet()
+    eng, clock = _engine(fleet)
+    fleet.good, fleet.bad = 95.0, 5.0
+    eng.evaluate()
+    text = eng.registry.render()
+    fams = parse_prometheus(text)
+    state = {s.labels["slo"]: s.value for s in fams["gp_slo_state"].samples}
+    assert state == {"availability": 0.0}
+    budget = fams["gp_slo_error_budget_remaining"].samples[0].value
+    # 5 bad of allowed 10 (10% of 100) -> half the budget left.
+    assert budget == pytest.approx(0.5)
+
+
+def test_latency_slo_splits_histogram():
+    fleet = FakeFleet()
+    fleet.hist = ((0.1, 1.0), [8.0, 10.0, 10.0])
+    slo = LatencySLO(objective=0.5, threshold_s=0.1)
+    good, bad = slo.totals(fleet)
+    assert good == pytest.approx(8.0)
+    assert bad == pytest.approx(2.0)
+    qs = slo.quantiles(fleet, qs=(0.5,))
+    assert qs[0.5] == pytest.approx(0.0625)
+
+
+# -- EventLog rotation --------------------------------------------------------
+
+def test_event_log_rotation_mid_stream(tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    log = obs_trace.EventLog(path=path, max_bytes=400, backups=2)
+    for i in range(50):
+        log.emit("tick", i=i)
+    log.close()
+    assert log.rotations > 0
+    files = [path, path + ".1", path + ".2"]
+    for f in files[:2]:
+        assert os.path.exists(f), f
+    assert not os.path.exists(path + ".3")
+    # Every surviving line is intact JSON (rotation never splits a line)
+    # and the newest file holds the newest events.
+    seen = []
+    for f in files:
+        if not os.path.exists(f):
+            continue
+        for line in open(f):
+            seen.append(json.loads(line)["i"])
+        assert os.path.getsize(f) <= 400 + 100  # one line of slack
+    assert max(seen) == 49
+    assert sorted(seen) == list(range(min(seen), 50))
+
+
+def test_event_log_rotation_requires_path():
+    import io
+
+    with pytest.raises(ValueError):
+        obs_trace.EventLog(stream=io.StringIO(), max_bytes=100)
+
+
+# -- EngineStats latency quantiles (schema v3) --------------------------------
+
+def test_engine_stats_latency_quantiles_schema_v3():
+    from repro.serve.engine import STATS_SCHEMA_VERSION, EngineStats
+
+    assert STATS_SCHEMA_VERSION == 3
+    stats = EngineStats()
+    d = stats.as_dict()
+    assert d["schema_version"] == 3
+    assert d["latency_p50"] is None and d["latency_p99"] is None
+    for _ in range(90):
+        stats.record(16, 16, 1, dur_s=0.002)
+    for _ in range(10):
+        stats.record(16, 16, 1, dur_s=4.0)
+    d = stats.as_dict()
+    assert 0.001 < d["latency_p50"] <= 0.0025
+    assert d["latency_p99"] > 1.0
+
+
+# -- bench history observatory ------------------------------------------------
+
+def _seed_history(bench_dir, module, metric_rows):
+    from benchmarks import history
+
+    for ts, metrics in enumerate(metric_rows):
+        path = history.history_path(str(bench_dir), module)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "a") as f:
+            f.write(json.dumps({"ts": float(ts), "metrics": metrics}) + "\n")
+
+
+def test_bench_history_flatten_and_append(tmp_path):
+    from benchmarks import history
+
+    report = {
+        "module": "m", "wall_s": 2.0, "failed": False,
+        "rows": [{"name": "k/dense", "us_per_call": 10.0, "derived": ""}],
+        "nested": {"qps": 100.0, "note": "text", "deep": {"x": 1.0}},
+        "flags": [1, 2, 3],
+    }
+    flat = history.flatten_metrics(report)
+    assert flat == {"wall_s": 2.0, "k/dense.us_per_call": 10.0,
+                    "nested.qps": 100.0, "nested.deep.x": 1.0}
+    assert history.append_history(str(tmp_path), "m", report) is not None
+    assert history.append_history(
+        str(tmp_path), "m", {"failed": True, "wall_s": 1.0}) is None
+    entries = history.load_history(str(tmp_path), "m")
+    assert len(entries) == 1 and entries[0]["metrics"] == flat
+    assert history.list_modules(str(tmp_path)) == ["m"]
+
+
+def test_bench_history_check_flags_2x_throughput_regression(tmp_path):
+    import bench_history
+
+    base = [{"bo.rounds_per_sec": 20.0, "wall_s": 3.0} for _ in range(3)]
+    _seed_history(tmp_path, "online_bo", base + [
+        {"bo.rounds_per_sec": 9.5, "wall_s": 3.1}])  # > 2x slower
+    rc = bench_history.main(
+        ["--bench-dir", str(tmp_path), "--check", "--max-ratio", "2.0"])
+    assert rc == 1
+
+    # Same shape within threshold passes.
+    clean = tmp_path / "clean"
+    _seed_history(clean, "online_bo", base + [
+        {"bo.rounds_per_sec": 15.0, "wall_s": 3.2}])
+    rc = bench_history.main(
+        ["--bench-dir", str(clean), "--check", "--max-ratio", "2.0"])
+    assert rc == 0
+
+
+def test_bench_history_lower_better_and_baseline_dir(tmp_path):
+    import bench_history
+
+    # Latency doubled vs the rolling median: regression.
+    _seed_history(tmp_path, "kernel", [
+        {"k.us_per_call": 100.0}, {"k.us_per_call": 102.0},
+        {"k.us_per_call": 98.0}, {"k.us_per_call": 260.0}])
+    rc = bench_history.main(
+        ["--bench-dir", str(tmp_path), "--check", "--max-ratio", "1.5"])
+    assert rc == 1
+
+    # Single entry + committed BENCH baseline: gated against the file.
+    solo = tmp_path / "solo"
+    _seed_history(solo, "kernel", [{"k.us_per_call": 300.0}])
+    (solo).mkdir(exist_ok=True)
+    baseline = tmp_path / "baseline"
+    baseline.mkdir()
+    (baseline / "BENCH_kernel.json").write_text(json.dumps({
+        "module": "kernel", "failed": False, "wall_s": 1.0,
+        "rows": [{"name": "k", "us_per_call": 100.0, "derived": ""}]}))
+    rc = bench_history.main(
+        ["--bench-dir", str(solo), "--baseline", str(baseline),
+         "--check", "--max-ratio", "1.5"])
+    assert rc == 1
+    # Without any baseline the module is recorded but not gated.
+    rc = bench_history.main(
+        ["--bench-dir", str(solo), "--check", "--max-ratio", "1.5"])
+    assert rc == 0
+
+
+def test_bench_history_real_artifacts_pass():
+    """The committed artifacts/bench state must be regression-free."""
+    import bench_history
+
+    bench_dir = REPO / "artifacts" / "bench"
+    if not (bench_dir / "history").is_dir():
+        pytest.skip("no committed bench history")
+    rc = bench_history.main(
+        ["--bench-dir", str(bench_dir), "--baseline", str(bench_dir),
+         "--check", "--max-ratio", "5.0"])
+    assert rc == 0
+
+
+# -- trace_report --fleet -----------------------------------------------------
+
+def test_trace_report_fleet_merges_alerts_and_requests(tmp_path, capsys):
+    import trace_report
+
+    fleet = tmp_path / "fleet-logs"
+    fleet.mkdir()
+    t0 = time.time()
+    with open(fleet / "replica_0.jsonl", "w") as f:
+        f.write(json.dumps({"ts": t0, "kind": "request", "trace_id": "tr-1",
+                            "path": "/predict", "status": 200}) + "\n")
+        f.write("{\"ts\": truncated-mid-write")
+    with open(fleet / "monitor.jsonl", "w") as f:
+        f.write(json.dumps({
+            "ts": t0 + 1.0, "kind": "slo_alert", "slo": "availability",
+            "from_state": "OK", "to_state": "PAGE",
+            "burn_rates": {"fast_page": 50.0}}) + "\n")
+
+    rc = trace_report.main(["--fleet", str(fleet)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "fleet timeline" in out
+    assert "OK -> PAGE" in out
+    assert "tr-1" in out  # traced request still renders in the waterfall
+
+
+# -- end-to-end fleet ---------------------------------------------------------
+
+@pytest.mark.slow
+def test_fleet_monitor_end_to_end(tmp_path):
+    """Supervisor replicas under live traffic -> monitor scrapes both ->
+    aggregate equals the per-replica counters EXACTLY, health matches
+    /stats, and killing a replica flips up to 0 within ~2 scrape
+    intervals and pages the availability burn-rate rule."""
+    import urllib.request
+
+    import jax
+
+    from repro.core import OuterConfig, init_outer_state, outer_step
+    from repro.data.synthetic import make_gp_regression
+    from repro.obs.slo import default_rules
+    from repro.serve import export_servable
+    from repro.serve.cluster import ReplicaSupervisor, publish_servable
+    from repro.serve.cluster.monitor import (
+        FleetMonitor,
+        start_monitor_server,
+    )
+    from repro.serve.cluster.replica import _http_json
+    from repro.solvers import SolverConfig
+
+    x, y = make_gp_regression(jax.random.PRNGKey(0), 160, 2, noise=0.2)
+    xq = x[128:132]
+    x, y = x[:128], y[:128]
+    cfg = OuterConfig(
+        estimator="pathwise", warm_start=True, num_probes=8, num_rff_pairs=64,
+        solver=SolverConfig(name="cg", max_epochs=200, precond_rank=0),
+        num_steps=2, bm=64, bn=64,
+    )
+    state = init_outer_state(jax.random.PRNGKey(1), cfg, x)
+    for _ in range(cfg.num_steps):
+        state, _ = outer_step(state, x, y, cfg)
+    model = export_servable(state, x)
+
+    store = str(tmp_path / "store")
+    publish_servable(store, model)
+    sup = ReplicaSupervisor(store, num_replicas=2, buckets=(8, 32),
+                            bm=64, bn=64, poll_interval_s=0.5)
+    interval = 0.3
+    alert_log = str(tmp_path / "monitor.jsonl")
+    monitor = FleetMonitor(
+        supervisor=sup, interval_s=interval,
+        slos=[AvailabilitySLO(
+            objective=0.99,
+            rules=default_rules(fast_window_s=6 * interval,
+                                slow_window_s=18 * interval))],
+        event_log=obs_trace.EventLog(path=alert_log),
+    )
+
+    def wait_for(pred, timeout_s, what):
+        deadline = time.monotonic() + timeout_s
+        while time.monotonic() < deadline:
+            if pred():
+                return
+            time.sleep(0.05)
+        pytest.fail(f"timed out waiting for {what}")
+
+    server = None
+    try:
+        sup.start(timeout_s=240)
+        server, _ = start_monitor_server(monitor)
+        ep = f"http://127.0.0.1:{server.port}"
+
+        wait_for(lambda: _http_json(ep + "/fleet/health")[1]["num_up"] == 2,
+                 60, "both replicas up")
+
+        payload = {"x": np.asarray(xq).tolist()}
+        for _ in range(3):
+            for url in sup.endpoints():
+                status, _ = _http_json(url + "/predict", payload)
+                assert status == 200
+
+        # Exactness: /fleet/metrics /predict totals == per-replica totals.
+        def predict_total(fams, where=None):
+            fam = fams.get("gp_http_requests_total")
+            return sum(s.value for s in (fam.samples if fam else ())
+                       if s.labels.get("path") == "/predict"
+                       and (where is None or where(s.labels)))
+
+        def parse_url(url):
+            with urllib.request.urlopen(url, timeout=10) as resp:
+                return parse_prometheus(resp.read().decode())
+
+        direct = {
+            f"replica_{i}": predict_total(parse_url(url + "/metrics"))
+            for i, url in enumerate(sup.endpoints())
+        }
+        assert sum(direct.values()) >= 6.0
+
+        def aggregate_matches():
+            fams = parse_url(ep + "/fleet/metrics")
+            got = {
+                name: predict_total(
+                    fams, where=lambda lbl, n=name: lbl.get("replica") == n)
+                for name in direct
+            }
+            return got == direct
+
+        wait_for(aggregate_matches, 20, f"aggregate == {direct}")
+
+        # Health signals match each replica's own /stats exactly.
+        _, health = _http_json(ep + "/fleet/health")
+        for i, url in enumerate(sup.endpoints()):
+            entry = health["replicas"][f"replica_{i}"]
+            _, stats = _http_json(url + "/stats")
+            adm = stats["admission"]
+            assert entry["service_ewma_ms"] == pytest.approx(
+                adm["service_ewma_ms"], abs=1e-9)
+            denom = adm["admitted"] + adm["shed"]
+            want = adm["shed"] / denom if denom else 0.0
+            assert entry["shed_rate"] == pytest.approx(want, abs=1e-9)
+
+        wait_for(lambda: _http_json(ep + "/fleet/slo")[1]["slos"]
+                 ["availability"]["state"] == "OK", 30,
+                 "availability to settle OK")
+
+        # Chaos: kill replica 1; up must flip within ~2 scrape intervals.
+        sup.kill(1)
+        t_kill = time.monotonic()
+        wait_for(lambda: not _http_json(ep + "/fleet/health")[1]
+                 ["replicas"]["replica_1"]["up"],
+                 4 * interval + 10, "replica_1 marked down")
+        assert time.monotonic() - t_kill < 4 * interval + 10
+
+        wait_for(lambda: _http_json(ep + "/fleet/slo")[1]["slos"]
+                 ["availability"]["state"] == "PAGE",
+                 18 * interval + 30, "availability PAGE")
+
+        # The alert trail recorded the escalation to PAGE.
+        alerts = [json.loads(line) for line in open(alert_log)]
+        assert any(e["kind"] == "slo_alert" and e["to_state"] == "PAGE"
+                   for e in alerts)
+    finally:
+        if server is not None:
+            server.shutdown()
+        monitor.stop()
+        sup.stop()

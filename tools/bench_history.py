@@ -1,0 +1,219 @@
+"""Benchmark-regression observatory over the per-module bench histories.
+
+Reads the rolling JSONL histories that ``benchmarks/run.py`` appends under
+``<bench-dir>/history/`` (see ``benchmarks/history.py`` for the layout) and
+compares each module's NEWEST entry against a rolling baseline — the
+per-metric median of up to ``--window`` preceding entries (falling back to
+a ``--baseline`` directory of committed ``BENCH_*.json`` snapshots when a
+history has no past yet).
+
+Each metric is classified by the direction table below: for lower-is-better
+metrics (latencies, wall time, epochs) a regression is
+``new > median * max-ratio``; for higher-is-better metrics (qps, speedups)
+it is ``new < median / max-ratio``. Unclassified metrics render in the
+trend report but never gate. ``--check`` exits nonzero on any regression,
+so CI can gate on it.
+
+Usage:
+    python tools/bench_history.py [--bench-dir artifacts/bench]
+        [--check] [--max-ratio 1.5] [--window 5]
+        [--baseline DIR] [--modules a,b]
+
+Stdlib only (imports ``benchmarks.history`` for the file layout — no jax).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import statistics
+import sys
+
+# Make `benchmarks.history` importable when run as `python tools/...` from
+# the repo root (benchmarks/ is a namespace package next to tools/).
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import history  # noqa: E402
+
+_SPARK = "▁▂▃▄▅▆▇█"
+
+# Direction rules, first match wins (matched against the full dotted key).
+#   "lower"  — smaller is better (time, epochs, latency)
+#   "higher" — bigger is better (throughput, speedups)
+# Metrics matching no rule are informational only: rendered, never gating.
+RULES = [
+    (re.compile(r"(^|\.)us_per_(call|step)$"), "lower"),
+    (re.compile(r"(^|\.)wall_s$"), "lower"),
+    (re.compile(r"(^|\.)(p50|p99|latency_p\d+)(_ms|_s)?$"), "lower"),
+    (re.compile(r"(^|\.)cum_epochs$"), "lower"),
+    (re.compile(r"(^|\.)epoch_ratio_warm_over_cold$"), "lower"),
+    (re.compile(r"(^|\.)(qps|rounds_per_sec|throughput)$"), "higher"),
+    (re.compile(r"(^|\.)speedup"), "higher"),
+    (re.compile(r"(^|\.)epoch_ratio_best_fixed_over_adaptive$"), "higher"),
+]
+
+# Below this magnitude a ratio is numerical noise, not a signal.
+_EPS = 1e-12
+
+
+def direction_for(key: str):
+    """'lower' / 'higher' for gated metrics, None for informational ones."""
+    for pattern, direction in RULES:
+        if pattern.search(key):
+            return direction
+    return None
+
+
+def sparkline(values) -> str:
+    """Linear-scale sparkline of a metric's history (empty for < 2 pts)."""
+    finite = [v for v in values if isinstance(v, (int, float))]
+    if len(finite) < 2:
+        return ""
+    lo, hi = min(finite), max(finite)
+    span = (hi - lo) or 1.0
+    return "".join(
+        _SPARK[int((v - lo) / span * (len(_SPARK) - 1))] for v in finite)
+
+
+def load_baseline_dir(baseline_dir: str, module: str):
+    """Committed ``BENCH_<module>.json`` flattened, or None."""
+    path = os.path.join(baseline_dir, f"BENCH_{module}.json")
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+    metrics = history.flatten_metrics(report)
+    return metrics or None
+
+
+def check_module(entries, window: int, max_ratio: float,
+                 baseline_metrics=None):
+    """Compare the newest entry against the rolling baseline.
+
+    Returns (findings, note). Each finding is a dict with key, direction,
+    baseline, new, ratio, regressed. ``note`` explains a skipped module
+    (no entries / no baseline).
+    """
+    if not entries:
+        return [], "no history entries"
+    newest = entries[-1]["metrics"]
+    prior = entries[:-1][-window:]
+    baselines = {}
+    if prior:
+        keys = set()
+        for e in prior:
+            keys.update(e["metrics"])
+        for key in keys:
+            vals = [e["metrics"][key] for e in prior if key in e["metrics"]]
+            if vals:
+                baselines[key] = statistics.median(vals)
+    elif baseline_metrics:
+        baselines = dict(baseline_metrics)
+    else:
+        return [], "no baseline yet (first run) — recorded, not gated"
+
+    findings = []
+    for key in sorted(newest):
+        direction = direction_for(key)
+        base = baselines.get(key)
+        new = newest[key]
+        if base is None or not isinstance(new, (int, float)):
+            continue
+        if max(abs(base), abs(new)) < _EPS:
+            continue
+        if direction == "lower":
+            ratio = new / base if abs(base) > _EPS else float("inf")
+            regressed = ratio > max_ratio
+        elif direction == "higher":
+            ratio = base / new if abs(new) > _EPS else float("inf")
+            regressed = ratio > max_ratio
+        else:
+            ratio = new / base if abs(base) > _EPS else float("nan")
+            regressed = False
+        findings.append({
+            "key": key, "direction": direction, "baseline": base,
+            "new": new, "ratio": ratio, "regressed": regressed,
+        })
+    return findings, None
+
+
+def render_module(module, entries, findings, note, verbose=False) -> int:
+    """Print the trend block for one module; returns its regression count."""
+    print(f"== {module} ({len(entries)} run(s))")
+    if note:
+        print(f"   {note}")
+        return 0
+    regressions = 0
+    for f in findings:
+        if f["regressed"]:
+            regressions += 1
+        gate = f["direction"] or "info"
+        if not verbose and f["direction"] is None and not f["regressed"]:
+            continue
+        series = [e["metrics"].get(f["key"]) for e in entries]
+        trend = sparkline([v for v in series if v is not None])
+        flag = "REGRESSION" if f["regressed"] else "ok"
+        print(f"   {flag:>10}  {f['key']:<48} {gate:<6} "
+              f"base={f['baseline']:<12.6g} new={f['new']:<12.6g} "
+              f"ratio={f['ratio']:<8.3g} {trend}")
+    if regressions == 0 and not any(f["direction"] for f in findings):
+        print("   (no gated metrics — informational only; --verbose to list)")
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--bench-dir", default="artifacts/bench",
+                    help="bench output dir holding history/ (and BENCH_*.json)")
+    ap.add_argument("--baseline", default=None, metavar="DIR",
+                    help="directory of committed BENCH_*.json used as the "
+                         "baseline when a module's history has no past")
+    ap.add_argument("--modules", default=None,
+                    help="comma-separated module subset (default: all with "
+                         "history)")
+    ap.add_argument("--window", type=int, default=5,
+                    help="rolling-baseline size: median of up to K preceding "
+                         "entries")
+    ap.add_argument("--max-ratio", type=float, default=1.5,
+                    help="regression threshold: worse than baseline by this "
+                         "factor fails (use ~5 for cross-machine CI noise)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if any gated metric regressed")
+    ap.add_argument("--verbose", action="store_true",
+                    help="also list informational (ungated) metrics")
+    args = ap.parse_args(argv)
+
+    modules = (args.modules.split(",") if args.modules
+               else history.list_modules(args.bench_dir))
+    if not modules:
+        print(f"no bench histories under {args.bench_dir}/history — "
+              f"run `python -m benchmarks.run` first")
+        return 1 if args.check else 0
+
+    total_regressions = 0
+    checked = 0
+    for module in modules:
+        entries = history.load_history(args.bench_dir, module)
+        baseline_metrics = (load_baseline_dir(args.baseline, module)
+                            if args.baseline else None)
+        findings, note = check_module(
+            entries, args.window, args.max_ratio, baseline_metrics)
+        if note is None:
+            checked += 1
+        total_regressions += render_module(
+            module, entries, findings, note, verbose=args.verbose)
+
+    print(f"-- {checked}/{len(modules)} module(s) gated, "
+          f"{total_regressions} regression(s), "
+          f"max-ratio {args.max_ratio}, window {args.window}")
+    if args.check and total_regressions:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,14 +20,22 @@ Consumes the files written by ``repro.obs.trace`` (replica request logs,
 Stdlib only, read-only, tolerant of truncated tail lines (a live log can be
 mid-write).
 
+``--fleet DIR`` merges every ``*.jsonl`` under DIR — per-replica request
+logs AND the fleet monitor's alert log — into one time-ordered stream: the
+waterfall keys on trace IDs where present, and a **fleet timeline** section
+renders the monitor's ``slo_alert`` transitions (OK/WARN/PAGE, burn rates)
+against the surrounding request activity.
+
 Usage:
-    python tools/trace_report.py LOG.jsonl [MORE.jsonl ...]
+    python tools/trace_report.py [LOG.jsonl ...] [--fleet DIR]
         [--trace ID] [--kind KIND] [--limit N]
 """
 from __future__ import annotations
 
 import argparse
+import glob
 import json
+import os
 import sys
 
 # Fields already rendered in an event's fixed columns — everything else is
@@ -142,6 +150,50 @@ def print_residual_summary(events):
                   f"solver_time={ev.get('solver_time_s'):.2f}s")
 
 
+def fleet_logs(fleet_dir):
+    """Every ``*.jsonl`` under ``fleet_dir`` (one level), sorted.
+
+    The layout ``--request-log`` + ``--monitor`` produce: per-replica
+    ``replica_*.jsonl`` request logs next to the monitor's
+    ``monitor.jsonl`` alert log.
+    """
+    return sorted(glob.glob(os.path.join(fleet_dir, "*.jsonl")))
+
+
+def print_fleet_timeline(events, limit=0):
+    """The fleet view: ``slo_alert`` transitions in request context.
+
+    Renders every monitor alert (state change, burn rates) in one
+    time-ordered table, each annotated with how many requests landed in
+    the preceding inter-alert gap — enough to read "traffic stopped, then
+    availability paged" straight off the report. Traced request detail
+    stays in the per-trace waterfall above.
+    """
+    alerts = [e for e in events if e["kind"] == "slo_alert"]
+    if not alerts:
+        return
+    requests = [e["ts"] for e in events if e["kind"] == "request"]
+    t0 = events[0]["ts"]
+    print(f"fleet timeline ({len(alerts)} alert(s), "
+          f"{len(requests)} request(s)):")
+    prev = t0
+    shown = 0
+    for ev in alerts:
+        if limit and shown >= limit:
+            print(f"  ... {len(alerts) - shown} more alerts (raise --limit)")
+            break
+        shown += 1
+        n_req = sum(1 for ts in requests if prev <= ts < ev["ts"])
+        burns = ev.get("burn_rates") or {}
+        burn_s = " ".join(f"{k}={v:.3g}" for k, v in sorted(burns.items()))
+        print(f"  +{(ev['ts'] - t0) * 1e3:9.1f}ms  "
+              f"{ev.get('slo', '?'):<14} "
+              f"{ev.get('from_state', '?'):>4} -> {ev.get('to_state', '?'):<4} "
+              f"({n_req} requests since last alert) {burn_s}")
+        prev = ev["ts"]
+    print()
+
+
 def print_budget_summary(events):
     """Adaptive-controller table from ``budget_decision`` events.
 
@@ -175,7 +227,11 @@ def main(argv=None):
     ap = argparse.ArgumentParser(
         description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter)
-    ap.add_argument("logs", nargs="+", help="JSONL event logs")
+    ap.add_argument("logs", nargs="*", help="JSONL event logs")
+    ap.add_argument("--fleet", default=None, metavar="DIR",
+                    help="merge every *.jsonl under DIR (replica request "
+                         "logs + the monitor's alert log) and render the "
+                         "fleet timeline")
     ap.add_argument("--trace", default=None,
                     help="show only this trace ID's waterfall")
     ap.add_argument("--kind", default=None,
@@ -184,7 +240,16 @@ def main(argv=None):
                     help="max traces in the waterfall (0 = all)")
     args = ap.parse_args(argv)
 
-    events = load_events(args.logs)
+    paths = list(args.logs)
+    if args.fleet:
+        found = fleet_logs(args.fleet)
+        if not found:
+            print(f"no *.jsonl logs under {args.fleet}", file=sys.stderr)
+        paths.extend(found)
+    if not paths:
+        ap.error("no logs given (pass LOG.jsonl files and/or --fleet DIR)")
+
+    events = load_events(paths)
     if args.kind:
         events = [e for e in events if e["kind"] == args.kind]
     if not events:
@@ -193,9 +258,11 @@ def main(argv=None):
     kinds: dict = {}
     for e in events:
         kinds[e["kind"]] = kinds.get(e["kind"], 0) + 1
-    print(f"{len(events)} events from {len(args.logs)} log(s): "
+    print(f"{len(events)} events from {len(paths)} log(s): "
           + ", ".join(f"{k}={n}" for k, n in sorted(kinds.items())))
     print()
+    if args.fleet:
+        print_fleet_timeline(events, limit=args.limit)
     print_waterfall(events, trace=args.trace, limit=args.limit)
     print_residual_summary(events)
     return 0
