@@ -1,9 +1,6 @@
 """Shared benchmark utilities: datasets, fit wrapper, timing, CSV output."""
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass
-
 import jax
 import numpy as np
 

@@ -13,7 +13,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import csv_line
 from repro.gp.hyperparams import HyperParams

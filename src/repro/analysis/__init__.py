@@ -1,0 +1,24 @@
+"""repro-lint: stdlib-``ast`` static analysis for this repo's invariants.
+
+Five checkers, each encoding a contract the codebase depends on but
+Python cannot express:
+
+* :mod:`repro.analysis.trace_safety` — no host round-trips, Python
+  branches on traced values, or wall-clock/entropy reads inside code
+  reachable from jit/scan/while_loop/vmap.
+* :mod:`repro.analysis.config_discipline` — the static
+  ``SolverConfig`` / traced ``SolverNumerics`` split stays intact.
+* :mod:`repro.analysis.freeze_mask` — solver while-loop state updates
+  stay behind the per-lane ``freeze`` mask.
+* :mod:`repro.analysis.lock_discipline` — annotated shared attributes of
+  the threaded serve/obs classes are only touched under their lock.
+* :mod:`repro.analysis.telemetry` — bounded metric label sets and
+  documented ``emit()`` event schemas.
+
+Run via ``python tools/repro_lint.py`` (CI job ``static-lint``); the
+suppression / baseline contract lives in :mod:`repro.analysis.runner`.
+The whole package imports without jax so it runs in bare CI jobs.
+"""
+from repro.analysis.common import ALL_RULES, Finding
+
+__all__ = ["ALL_RULES", "Finding"]

@@ -1,0 +1,236 @@
+"""Static/traced config discipline checker.
+
+PR 5 split solver configuration in two: ``SolverConfig`` is a frozen,
+hashable dataclass that participates in jit cache keys (one executable
+per static group), while ``SolverNumerics`` is a traced NamedTuple pytree
+whose fields (tolerance, max_epochs, learning rate, ...) can vary across
+vmap lanes *without* recompiling. The split only works if the two never
+mix:
+
+* ``config-static-traced`` — a ``SolverNumerics`` value (or one of its
+  fields) must never flow into a hashable static position: a dict key, a
+  set element, an argument to ``hash()``, or a ``static_argnums`` /
+  ``static_argnames`` entry of a jit wrapper. Doing so either crashes
+  (tracers are unhashable) or, worse, silently retraces per value and
+  destroys the one-executable-per-group property.
+* ``config-static-array`` — a frozen (hashable) config dataclass must not
+  declare array-valued fields (``jax.Array``/``jnp.ndarray``/
+  ``np.ndarray``): arrays don't hash stably, so such a config poisons
+  every cache keyed on it.
+
+Numerics-typed names are recognised from annotations
+(``x: SolverNumerics``, ``Optional[SolverNumerics]``) and from
+assignments off the canonical constructors (``numerics_of``,
+``stack_numerics``, ``broadcast_numerics``).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import List, Sequence, Set
+
+from repro.analysis.common import Finding, call_name, parse_file, rel
+
+_NUMERICS_TYPE = "SolverNumerics"
+_NUMERICS_CTORS = {"numerics_of", "stack_numerics", "broadcast_numerics"}
+_ARRAY_TYPES = ("jax.Array", "jnp.ndarray", "np.ndarray", "numpy.ndarray",
+                "Array", "ndarray", "ArrayLike")
+
+
+def _annotation_mentions(node: ast.AST, needle: str) -> bool:
+    try:
+        text = ast.unparse(node)
+    except Exception:
+        return False
+    return needle in text
+
+
+def _numerics_names(fn: ast.AST) -> Set[str]:
+    """Names bound to SolverNumerics values inside ``fn``."""
+    names: Set[str] = set()
+    args = getattr(fn, "args", None)
+    if args is not None:
+        for a in (list(args.posonlyargs) + list(args.args) +
+                  list(args.kwonlyargs)):
+            if a.annotation is not None and \
+                    _annotation_mentions(a.annotation, _NUMERICS_TYPE):
+                names.add(a.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.AnnAssign) and \
+                isinstance(node.target, ast.Name) and \
+                _annotation_mentions(node.annotation, _NUMERICS_TYPE):
+            names.add(node.target.id)
+        elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            ctor = call_name(node.value).split(".")[-1]
+            if ctor in _NUMERICS_CTORS or ctor == _NUMERICS_TYPE:
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        names.add(tgt.id)
+    return names
+
+
+def _refers_to_numerics(expr: ast.AST, names: Set[str]) -> bool:
+    """``expr`` is a numerics name or an attribute chain rooted at one."""
+    node = expr
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return isinstance(node, ast.Name) and node.id in names
+
+
+def _static_argname_strings(call: ast.Call) -> List[ast.Constant]:
+    """String literals inside a jit call's ``static_argnames=``."""
+    out: List[ast.Constant] = []
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    out.append(n)
+    return out
+
+
+def _is_jit_call(call: ast.Call) -> bool:
+    name = call_name(call)
+    if name in ("jax.jit", "jit"):
+        return True
+    if name in ("partial", "functools.partial") and call.args:
+        first = call.args[0]
+        return ast.unparse(first) in ("jax.jit", "jit") \
+            if hasattr(ast, "unparse") else False
+    return False
+
+
+def _check_function(fn: ast.AST, path: str,
+                    findings: List[Finding]) -> None:
+    names = _numerics_names(fn)
+    if not names:
+        return
+
+    def flag(node: ast.AST, what: str) -> None:
+        findings.append(Finding(
+            rule="config-static-traced", path=path, line=node.lineno,
+            message=f"SolverNumerics value flows into {what}",
+            hint="numerics are traced pytree leaves; key caches on the "
+                 "static SolverConfig instead (strip_numerics)",
+        ))
+
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for node in ast.walk(ast.Module(body=body, type_ignores=[])):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)) and node is not fn:
+            continue  # nested defs get their own pass
+        if isinstance(node, ast.Dict):
+            for key in node.keys:
+                if key is not None and _refers_to_numerics(key, names):
+                    flag(key, "a dict key (hashable static position)")
+        elif isinstance(node, ast.Set):
+            for elt in node.elts:
+                if _refers_to_numerics(elt, names):
+                    flag(elt, "a set element (hashable static position)")
+        elif isinstance(node, ast.Call):
+            if call_name(node) == "hash" and node.args and \
+                    _refers_to_numerics(node.args[0], names):
+                flag(node, "hash() (static cache key)")
+
+
+def _jit_static_params(tree: ast.AST, path: str,
+                       findings: List[Finding]) -> None:
+    """Flag SolverNumerics-annotated params named in static_argnames."""
+    # Annotated params per function name, for resolving jit(f) wrappers.
+    ann: dict = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            params = set()
+            for a in (list(node.args.posonlyargs) + list(node.args.args) +
+                      list(node.args.kwonlyargs)):
+                if a.annotation is not None and \
+                        _annotation_mentions(a.annotation, _NUMERICS_TYPE):
+                    params.add(a.arg)
+            ann[node.name] = params
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call) and _is_jit_call(dec):
+                    for const in _static_argname_strings(dec):
+                        if const.value in params:
+                            findings.append(Finding(
+                                rule="config-static-traced", path=path,
+                                line=const.lineno,
+                                message=f"static_argnames marks traced "
+                                        f"SolverNumerics param "
+                                        f"`{const.value}` static",
+                                hint="static args are hashed into the jit "
+                                     "cache key; pass numerics as a traced "
+                                     "pytree argument",
+                            ))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and _is_jit_call(node):
+            targets: Set[str] = set()
+            for arg in node.args[1:] if call_name(node).endswith("partial") \
+                    else node.args:
+                if isinstance(arg, ast.Name):
+                    targets.add(arg.id)
+            for const in _static_argname_strings(node):
+                for t in targets:
+                    if const.value in ann.get(t, set()):
+                        findings.append(Finding(
+                            rule="config-static-traced", path=path,
+                            line=const.lineno,
+                            message=f"static_argnames marks traced "
+                                    f"SolverNumerics param `{const.value}` "
+                                    f"of `{t}` static",
+                            hint="static args are hashed into the jit cache "
+                                 "key; pass numerics as a traced pytree "
+                                 "argument",
+                        ))
+
+
+def _frozen_dataclass_arrays(tree: ast.AST, path: str,
+                             findings: List[Finding]) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        frozen = False
+        for dec in node.decorator_list:
+            if isinstance(dec, ast.Call) and \
+                    call_name(dec).split(".")[-1] == "dataclass":
+                for kw in dec.keywords:
+                    if kw.arg == "frozen" and \
+                            isinstance(kw.value, ast.Constant) and \
+                            kw.value.value is True:
+                        frozen = True
+        if not frozen:
+            continue
+        for stmt in node.body:
+            if isinstance(stmt, ast.AnnAssign) and \
+                    isinstance(stmt.target, ast.Name):
+                try:
+                    text = ast.unparse(stmt.annotation)
+                except Exception:
+                    continue
+                if any(t in text for t in _ARRAY_TYPES):
+                    findings.append(Finding(
+                        rule="config-static-array", path=path,
+                        line=stmt.lineno,
+                        message=f"frozen config `{node.name}` declares "
+                                f"array-valued field `{stmt.target.id}`",
+                        hint="static configs are jit cache keys and must "
+                             "hash stably; carry arrays in a traced pytree "
+                             "(e.g. SolverNumerics) instead",
+                    ))
+
+
+def run(paths: Sequence[Path], root: Path) -> List[Finding]:
+    """Run the config-discipline checker over ``paths``."""
+    findings: List[Finding] = []
+    for path in paths:
+        try:
+            tree, _ = parse_file(path)
+        except SyntaxError:
+            continue
+        p = rel(path, root)
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                _check_function(node, p, findings)
+        _jit_static_params(tree, p, findings)
+        _frozen_dataclass_arrays(tree, p, findings)
+    # Nested defs are visited by both their own pass and the enclosing
+    # function's walk — dedupe identical findings.
+    return sorted(set(findings), key=lambda f: (f.path, f.line))

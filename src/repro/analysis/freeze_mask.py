@@ -1,0 +1,132 @@
+"""Freeze-mask checker: converged lanes must stay frozen.
+
+The lane-batched solvers (PR 3) run all vmap lanes for the same number of
+``lax.while_loop`` trips and rely on the per-lane ``active`` mask to make
+iteration counts honest: every loop-carried state field must be written
+through ``freeze(active, new, old)`` (or ``history_record``, which applies
+the mask internally), or advance by an ``active``-gated expression such as
+``t + active.astype(int32)``. An unguarded assignment lets a converged
+lane keep mutating — residuals drift, ``iters`` lies, and the vmap result
+no longer matches the single-lane solve bit-for-bit.
+
+Rule ``freeze-mask``: inside any function passed as the *body* of
+``lax.while_loop`` in a solver module, every field of the returned
+``_*State(...)`` constructor must be one of
+
+* a ``freeze(...)`` / ``history_record(...)`` call,
+* a carry-through of the incoming state (``s.field`` or ``s`` itself),
+* an expression that references the ``active`` mask.
+
+Anything else is flagged with the field name. Intentional exceptions
+(e.g. SGD advancing its PRNG key on frozen lanes so lane draws stay
+decorrelated) carry an inline suppression plus a baseline entry.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from repro.analysis.common import Finding, call_name, parse_file, rel
+
+_STATE_CTOR = re.compile(r"^_\w*State$")
+_MASK_WRAPPERS = {"freeze", "history_record"}
+
+
+def _first_param(fn: ast.AST) -> Optional[str]:
+    args = getattr(fn, "args", None)
+    if args is None:
+        return None
+    pos = list(args.posonlyargs) + list(args.args)
+    return pos[0].arg if pos else None
+
+
+def _mentions_active(expr: ast.AST) -> bool:
+    return any(isinstance(n, ast.Name) and n.id == "active"
+               for n in ast.walk(expr))
+
+
+def _is_carry_through(expr: ast.AST, carry: Optional[str]) -> bool:
+    """``s.field`` (possibly nested attributes) or ``s`` itself."""
+    node = expr
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return isinstance(node, ast.Name) and node.id == carry
+
+
+def _field_ok(expr: ast.AST, carry: Optional[str]) -> bool:
+    if isinstance(expr, ast.Call):
+        name = call_name(expr).split(".")[-1]
+        if name in _MASK_WRAPPERS:
+            return True
+    if _is_carry_through(expr, carry):
+        return True
+    return _mentions_active(expr)
+
+
+def _body_functions(tree: ast.AST) -> List[ast.AST]:
+    """Function defs / lambdas passed as the body arg of lax.while_loop."""
+    by_name = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name.setdefault(node.name, node)
+    bodies: List[ast.AST] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and call_name(node) in (
+                "lax.while_loop", "jax.lax.while_loop", "while_loop"):
+            if len(node.args) >= 2:
+                body = node.args[1]
+                if isinstance(body, ast.Lambda):
+                    bodies.append(body)
+                elif isinstance(body, ast.Name) and body.id in by_name:
+                    bodies.append(by_name[body.id])
+    return bodies
+
+
+def _check_body(fn: ast.AST, path: str) -> List[Finding]:
+    carry = _first_param(fn)
+    findings: List[Finding] = []
+    returns = ([fn.body] if isinstance(fn, ast.Lambda) else
+               [n.value for n in ast.walk(fn)
+                if isinstance(n, ast.Return) and n.value is not None])
+    for ret in returns:
+        if not (isinstance(ret, ast.Call) and
+                _STATE_CTOR.match(call_name(ret).split(".")[-1] or "")):
+            continue
+        ctor = call_name(ret).split(".")[-1]
+        for kw in ret.keywords:
+            if kw.arg is None:  # **splat: can't see the fields — skip
+                continue
+            if not _field_ok(kw.value, carry):
+                findings.append(Finding(
+                    rule="freeze-mask", path=path, line=kw.value.lineno,
+                    message=f"loop-carried field `{ctor}.{kw.arg}` is not "
+                            "frozen for converged lanes",
+                    hint="wrap in freeze(active, new, old) / history_record, "
+                         "or gate the update on `active`",
+                ))
+        for i, arg in enumerate(ret.args):
+            if not _field_ok(arg, carry):
+                findings.append(Finding(
+                    rule="freeze-mask", path=path, line=arg.lineno,
+                    message=f"loop-carried positional field #{i} of "
+                            f"`{ctor}` is not frozen for converged lanes",
+                    hint="wrap in freeze(active, new, old) / history_record, "
+                         "or gate the update on `active`",
+                ))
+    return findings
+
+
+def run(paths: Sequence[Path], root: Path) -> List[Finding]:
+    """Run the freeze-mask checker over ``paths``; returns findings."""
+    findings: List[Finding] = []
+    for path in paths:
+        try:
+            tree, _ = parse_file(path)
+        except SyntaxError:
+            continue
+        for body in _body_functions(tree):
+            findings.extend(_check_body(body, rel(path, root)))
+    findings.sort(key=lambda f: (f.path, f.line))
+    return findings

@@ -1,0 +1,322 @@
+"""Trace-safety checker: no host round-trips inside traced code.
+
+Functions reachable from a ``jax.jit`` / ``lax.while_loop`` / ``lax.scan``
+/ ``jax.vmap`` entry point run under a tracer: a ``float()`` on a traced
+array forces a device sync (and a `ConcretizationTypeError` under jit), a
+Python ``if`` on a traced value silently bakes one branch into the
+compiled program, and a wall-clock or entropy read is frozen at trace
+time — all three poison the retrace-free paths PR 5/8 depend on.
+
+The checker walks every module it is given, seeds a call graph from
+
+* decorators / wrappers: ``@jax.jit``, ``@partial(jax.jit, ...)``,
+  ``f2 = jax.jit(f)``, ``jax.vmap(f)``,
+* loop primitives: the ``cond``/``body`` of ``lax.while_loop`` and the
+  body of ``lax.scan`` (their carry parameters are *known traced*),
+
+propagates reachability through same-module and ``from repro.x import f``
+call edges, and then scans each reachable function with a deliberately
+conservative taint analysis: parameters are only tainted for loop
+bodies/conds (where the carry is traced by construction); otherwise taint
+enters through ``jnp.*`` / ``jax.*`` / ``lax.*`` expressions and spreads
+through assignment. Rules:
+
+* ``trace-host-sync`` — ``float()/int()/bool()`` on a tainted value,
+  ``.item()``/``.tolist()`` on a tainted receiver, any ``np.asarray`` /
+  ``np.array`` call.
+* ``trace-python-branch`` — ``if``/``while`` whose test is tainted
+  (``is None`` structure checks and ``isinstance`` are exempt: they are
+  resolved at trace time by design).
+* ``trace-impure-call`` — ``time.time/perf_counter/monotonic/time_ns``,
+  ``datetime.now/utcnow``, ``secrets.*``, ``os.urandom``, ``uuid.uuid4``.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.common import Finding, call_name, dotted, parse_file, rel
+
+#: Dotted call targets that read wall clocks or entropy sources.
+_IMPURE_CALLS = {
+    "time.time", "time.perf_counter", "time.monotonic", "time.time_ns",
+    "time.perf_counter_ns", "datetime.now", "datetime.datetime.now",
+    "datetime.utcnow", "datetime.datetime.utcnow", "os.urandom",
+    "uuid.uuid4",
+}
+_IMPURE_PREFIXES = ("secrets.",)
+
+#: Roots whose call results are treated as traced values.
+_TRACED_ROOTS = ("jnp", "jax", "lax")
+
+_HOST_CASTS = {"float", "int", "bool", "complex"}
+_HOST_METHODS = {"item", "tolist"}
+_NUMPY_CALLS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array",
+                "onp.asarray", "onp.array"}
+
+
+class _Fn:
+    """A function definition plus where it lives and how it was seeded."""
+
+    def __init__(self, node: ast.AST, path: Path, module: str):
+        self.node = node
+        self.path = path
+        self.module = module
+        self.loop_role: Optional[str] = None  # "body"/"cond" of scan/while
+
+    @property
+    def name(self) -> str:
+        return getattr(self.node, "name", "<lambda>")
+
+
+def _module_name(path: Path, root: Path) -> str:
+    """Dotted module path of ``path`` relative to ``root`` (src-aware)."""
+    r = rel(path, root)
+    r = r[:-3] if r.endswith(".py") else r
+    parts = [p for p in r.split("/") if p]
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _index_functions(tree: ast.AST, path: Path,
+                     module: str) -> Dict[str, List[_Fn]]:
+    """All (async) function defs in ``tree`` keyed by bare name."""
+    out: Dict[str, List[_Fn]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out.setdefault(node.name, []).append(_Fn(node, path, module))
+    return out
+
+
+def _import_map(tree: ast.AST) -> Dict[str, Tuple[str, str]]:
+    """``from repro.x import f [as g]`` -> ``{g: ("repro.x", "f")}``."""
+    out: Dict[str, Tuple[str, str]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module:
+            for alias in node.names:
+                out[alias.asname or alias.name] = (node.module, alias.name)
+    return out
+
+
+def _is_jit_like(expr: ast.AST) -> bool:
+    """True for ``jax.jit`` / ``jit`` / ``jax.vmap`` / ``vmap`` /
+    ``partial(jax.jit, ...)`` expressions."""
+    name = dotted(expr)
+    if name in ("jax.jit", "jit", "jax.vmap", "vmap", "jax.pmap", "pmap"):
+        return True
+    if isinstance(expr, ast.Call) and call_name(expr) in ("partial",
+                                                          "functools.partial"):
+        return bool(expr.args) and _is_jit_like(expr.args[0])
+    return False
+
+
+class _Graph:
+    """Seeded call graph over a set of modules."""
+
+    def __init__(self) -> None:
+        self.functions: Dict[str, Dict[str, List[_Fn]]] = {}  # module -> name
+        self.imports: Dict[str, Dict[str, Tuple[str, str]]] = {}
+        self.trees: Dict[str, ast.AST] = {}
+        self.sources: Dict[str, str] = {}
+        self.paths: Dict[str, Path] = {}
+        self.seeds: List[_Fn] = []
+        self.lambdas: List[_Fn] = []  # lambdas passed to traced primitives
+
+    def resolve(self, module: str, name: str) -> List[_Fn]:
+        """Function defs a bare call name refers to, following imports."""
+        fns = self.functions.get(module, {}).get(name)
+        if fns:
+            return fns
+        imp = self.imports.get(module, {}).get(name)
+        if imp and imp[0] in self.functions:
+            return self.functions[imp[0]].get(imp[1], [])
+        return []
+
+
+def _collect_seeds(graph: _Graph, module: str, tree: ast.AST) -> None:
+    """Find traced entry points in one module and add them to the graph."""
+
+    def seed_ref(expr: ast.AST, role: Optional[str] = None) -> None:
+        if isinstance(expr, ast.Lambda):
+            fn = _Fn(expr, graph.paths[module], module)
+            fn.loop_role = role
+            graph.lambdas.append(fn)
+            graph.seeds.append(fn)
+        elif isinstance(expr, ast.Name):
+            for fn in graph.resolve(module, expr.id):
+                if role and fn.loop_role is None:
+                    fn.loop_role = role
+                graph.seeds.append(fn)
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if _is_jit_like(dec):
+                    for fn in graph.functions[module].get(node.name, []):
+                        if fn.node is node:
+                            graph.seeds.append(fn)
+        elif isinstance(node, ast.Call):
+            name = call_name(node)
+            if name in ("lax.while_loop", "jax.lax.while_loop", "while_loop"):
+                if len(node.args) >= 2:
+                    seed_ref(node.args[0], role="cond")
+                    seed_ref(node.args[1], role="body")
+            elif name in ("lax.scan", "jax.lax.scan", "scan"):
+                if node.args:
+                    seed_ref(node.args[0], role="body")
+            elif name in ("jax.jit", "jit", "jax.vmap", "vmap"):
+                if node.args:
+                    seed_ref(node.args[0])
+            elif _is_jit_like(node.func):
+                # partial(jax.jit, ...)(f)
+                if node.args:
+                    seed_ref(node.args[0])
+
+
+def _propagate(graph: _Graph) -> List[_Fn]:
+    """BFS the call graph from the seeds; returns reachable functions."""
+    seen: Set[int] = set()
+    work = list(graph.seeds)
+    reachable: List[_Fn] = []
+    while work:
+        fn = work.pop()
+        if id(fn.node) in seen:
+            continue
+        seen.add(id(fn.node))
+        reachable.append(fn)
+        for node in ast.walk(fn.node):
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+                for callee in graph.resolve(fn.module, node.func.id):
+                    if id(callee.node) not in seen:
+                        work.append(callee)
+    return reachable
+
+
+# ---------------------------------------------------------------------------
+# per-function scan
+
+
+def _expr_tainted(expr: ast.AST, tainted: Set[str]) -> bool:
+    """True if ``expr`` references a tainted name or a jnp/jax/lax call."""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name) and node.id in tainted:
+            return True
+        if isinstance(node, ast.Call):
+            root = call_name(node).split(".", 1)[0]
+            if root in _TRACED_ROOTS:
+                return True
+    return False
+
+
+def _collect_taint(fn: _Fn) -> Set[str]:
+    """Names holding (potentially) traced values inside ``fn``."""
+    tainted: Set[str] = set()
+    node = fn.node
+    if fn.loop_role is not None:
+        args = node.args
+        for a in list(args.args) + list(args.posonlyargs) + list(args.kwonlyargs):
+            tainted.add(a.arg)
+    # Two passes so taint assigned below a use-before-def still lands.
+    for _ in range(2):
+        for stmt in ast.walk(node):
+            if isinstance(stmt, ast.Assign) and _expr_tainted(stmt.value, tainted):
+                for tgt in stmt.targets:
+                    for n in ast.walk(tgt):
+                        if isinstance(n, ast.Name):
+                            tainted.add(n.id)
+            elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                if stmt.value is not None and _expr_tainted(stmt.value, tainted):
+                    if isinstance(stmt.target, ast.Name):
+                        tainted.add(stmt.target.id)
+    return tainted
+
+
+def _branch_exempt(test: ast.AST) -> bool:
+    """Structure checks resolved at trace time: ``is None``, isinstance."""
+    if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+        return _branch_exempt(test.operand)
+    if isinstance(test, ast.Compare):
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+            return True
+    if isinstance(test, ast.Call) and call_name(test) in ("isinstance",
+                                                          "hasattr", "len"):
+        return True
+    if isinstance(test, ast.BoolOp):
+        return all(_branch_exempt(v) for v in test.values)
+    return False
+
+
+def _scan_function(fn: _Fn, root: Path) -> List[Finding]:
+    path = rel(fn.path, root)
+    tainted = _collect_taint(fn)
+    findings: List[Finding] = []
+
+    def add(rule: str, node: ast.AST, message: str, hint: str) -> None:
+        findings.append(Finding(rule=rule, path=path, line=node.lineno,
+                                message=f"{message} (in traced "
+                                        f"`{fn.name}`)", hint=hint))
+
+    for node in ast.walk(fn.node):
+        if isinstance(node, ast.Call):
+            name = call_name(node)
+            if name in _HOST_CASTS and node.args and \
+                    _expr_tainted(node.args[0], tainted):
+                add("trace-host-sync", node,
+                    f"`{name}()` on a traced value forces a host sync",
+                    "keep the value as an array (jnp ops) or move the "
+                    "conversion outside the jitted region")
+            elif name in _NUMPY_CALLS:
+                add("trace-host-sync", node,
+                    f"`{name}` materialises a traced value on the host",
+                    "use jnp.asarray inside traced code; np conversions "
+                    "belong in host-side driver code")
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _HOST_METHODS and \
+                    _expr_tainted(node.func.value, tainted):
+                add("trace-host-sync", node,
+                    f"`.{node.func.attr}()` on a traced value forces a "
+                    "host sync",
+                    "return the array and convert in the host-side caller")
+            elif name in _IMPURE_CALLS or \
+                    any(name.startswith(p) for p in _IMPURE_PREFIXES):
+                add("trace-impure-call", node,
+                    f"`{name}()` is frozen at trace time inside jit",
+                    "pass clocks/randomness in as arguments (jax.random "
+                    "keys for entropy); measure time in the caller")
+        elif isinstance(node, (ast.If, ast.While)):
+            if not _branch_exempt(node.test) and \
+                    _expr_tainted(node.test, tainted):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                add("trace-python-branch", node,
+                    f"Python `{kind}` on a traced value bakes one branch "
+                    "into the compiled program",
+                    "use lax.cond/lax.select/jnp.where (or lax.while_loop "
+                    "for loops) so both branches trace")
+    return findings
+
+
+def run(paths: Sequence[Path], root: Path) -> List[Finding]:
+    """Run the trace-safety checker over ``paths``; returns findings."""
+    graph = _Graph()
+    for path in paths:
+        try:
+            tree, source = parse_file(path)
+        except SyntaxError:
+            continue
+        module = _module_name(path, root)
+        graph.trees[module] = tree
+        graph.sources[module] = source
+        graph.paths[module] = path
+        graph.functions[module] = _index_functions(tree, path, module)
+        graph.imports[module] = _import_map(tree)
+    for module, tree in graph.trees.items():
+        _collect_seeds(graph, module, tree)
+    findings: List[Finding] = []
+    for fn in _propagate(graph):
+        findings.extend(_scan_function(fn, root))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings

@@ -25,7 +25,6 @@ from repro.core.outer import (
     init_outer_state_lanes,
     num_lanes,
     outer_scan,
-    outer_step,
     unstack_state,
 )
 from repro.core.predict import pathwise_predict, predictive_metrics
@@ -37,13 +36,11 @@ from repro.distributed.checkpoint import (
 from repro.gp.hyperparams import HyperParams
 from repro.solvers import (
     HOperator,
-    SolverConfig,
     SolverNumerics,
     broadcast_numerics,
     solve,
 )
 from repro.solvers.adaptive import (
-    MIN_RECORD_HISTORY,
     BudgetPolicy,
     broadcast_policy,
     resolve_horizon,

@@ -25,9 +25,6 @@ toward ``P`` to recover per-shard step sizes; epoch accounting
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import NamedTuple
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P

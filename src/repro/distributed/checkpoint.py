@@ -25,7 +25,6 @@ import hashlib
 import json
 import os
 import re
-import shutil
 from typing import Any, Optional
 
 import jax

@@ -16,14 +16,13 @@ paper's amortisation; it is also the checkpoint payload (DESIGN.md §6).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.distributed.ring import ROW_AXES, _present_axes, ring_h_mvm
+from repro.distributed.ring import _present_axes, ring_h_mvm
 from repro.gp.hyperparams import HyperParams
 from repro.gp.rff import RFFState, rff_features
 from repro.train.adam import AdamConfig, AdamState, adam_init, adam_update

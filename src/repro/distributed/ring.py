@@ -14,13 +14,9 @@ communication; K is never materialised.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import Sequence
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.gp.hyperparams import HyperParams

@@ -26,7 +26,6 @@ import math
 from typing import Optional, Sequence, Union
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _GLOBAL_MESH: Optional[Mesh] = None

@@ -4,7 +4,6 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.gp.hyperparams import HyperParams, resolve_kind
 

@@ -21,7 +21,6 @@ from the production compile (scan does not change peak-memory truth).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -224,7 +223,6 @@ def analysis_lm_cell(arch: str, shape_name: str, mesh, opts=None) -> tuple[Cost,
 
     # decode
     from repro.models import make_serve_step
-    from repro.models.transformer import init_cache
 
     specs = input_specs(cfg, shape)
     c_sh = cache_shardings(cfg, mesh, specs["cache"])

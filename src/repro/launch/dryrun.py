@@ -31,7 +31,6 @@ from repro.configs import (
     GP_SHAPES,
     LM_SHAPES,
     get_config,
-    runnable_cells,
 )
 from repro.launch.hlo_analysis import (
     RooflineReport,
@@ -69,8 +68,6 @@ def _model_flop_tokens(cfg, shape, n_active) -> float:
 
 
 def _num_microbatches(shape, mesh) -> int:
-    import math
-
     dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
     per_dev = max(1, shape.global_batch // dp)
     m = max(1, per_dev // shape.microbatch_rows)

@@ -20,10 +20,8 @@ Terms (seconds, per spec §ROOFLINE):
 from __future__ import annotations
 
 import json
-import math
 import re
 from dataclasses import asdict, dataclass, field
-from typing import Optional
 
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_BF16_FLOPS
 

@@ -17,7 +17,6 @@ import json
 import os
 
 import jax
-import jax.numpy as jnp
 
 
 def run_gp(args):

@@ -30,9 +30,7 @@ from repro.distributed.sharding import (
 from repro.models.config import (
     ATTN_BIDIR,
     ATTN_CHUNKED,
-    ATTN_FULL,
     ATTN_SWA,
-    MAMBA,
     LayerSpec,
     ModelConfig,
 )

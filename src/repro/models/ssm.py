@@ -167,7 +167,6 @@ def mamba_decode(
 
     # Rolling conv state: window = [cache | current]
     wt = params["conv_w"].astype(xc.dtype)  # (W, conv_dim)
-    width = wt.shape[0]
     window = jnp.concatenate(
         [cache["conv"].astype(xc.dtype), xbc[:, None, :]], axis=1
     )  # (B, W, conv_dim)

@@ -7,8 +7,6 @@ never require a gather over a sharded dimension.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import Optional
 
 import jax
@@ -23,16 +21,14 @@ from repro.distributed.sharding import (
     axis_size,
     valid_spec,
 )
-from repro.models.config import MAMBA, ModelConfig
+from repro.models.config import ModelConfig
 from repro.models.transformer import (
-    abstract_params,
     decode_step,
     forward_encdec,
     forward_lm,
     init_cache,
-    init_params,
 )
-from repro.train.adam import AdamConfig, AdamState, adam_init, adam_update
+from repro.train.adam import AdamConfig, AdamState, adam_update
 
 
 # --------------------------------------------------------------------------

@@ -14,7 +14,6 @@ Three entry points:
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax
@@ -398,7 +397,6 @@ def decode_step(
         jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
     )
     if not cfg.use_rope:
-        pe = sinusoidal_positions(1, cfg.d_model, x.dtype)  # placeholder row
         freq_row = _sinusoidal_at(pos, cfg.d_model, x.dtype)
         x = x + freq_row[None, None, :]
     x = constrain(x, DP, None, None)

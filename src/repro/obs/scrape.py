@@ -334,8 +334,8 @@ class FleetScraper:
         self._clock = clock
         self._fetch = fetch
         self._lock = threading.Lock()
-        self._replicas: Dict[str, ReplicaState] = {}
-        self.scrape_rounds = 0
+        self._replicas: Dict[str, ReplicaState] = {}  #: guarded by self._lock
+        self.scrape_rounds = 0  #: guarded by self._lock
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         if targets:
@@ -412,13 +412,18 @@ class FleetScraper:
                             or not state.ever_up:
                         state.up = False
                 results[name] = err is None
-        self._expire_locked()
+        self._expire_stale()
         with self._lock:
             self.scrape_rounds += 1
         return results
 
-    def _expire_locked(self) -> None:
-        """Drop series of replicas past TTL (called after each round)."""
+    def _expire_stale(self) -> None:
+        """Drop series of replicas past TTL (called after each round).
+
+        Takes ``self._lock`` itself — deliberately *not* named
+        ``*_locked``, which in this repo means the caller must already
+        hold the lock.
+        """
         now = self._clock()
         with self._lock:
             for state in self._replicas.values():

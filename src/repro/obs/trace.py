@@ -108,20 +108,20 @@ class EventLog:
         self.path = None
         self.max_bytes = int(max_bytes)
         self.backups = int(backups)
-        self.rotations = 0
+        self.rotations = 0  #: guarded by self._lock
         if path is not None:
             path = path.replace("{pid}", str(os.getpid()))
             parent = os.path.dirname(path)
             if parent:
                 os.makedirs(parent, exist_ok=True)
             self.path = path
-            self._fh = open(path, "a", encoding="utf-8")
+            self._fh = open(path, "a", encoding="utf-8")  #: guarded by self._lock
             self._owns = True
         else:
-            self._fh = stream
+            self._fh = stream  #: guarded by self._lock
             self._owns = False
         self._lock = threading.Lock()
-        self.events_written = 0
+        self.events_written = 0  #: guarded by self._lock
 
     def _rotate_locked(self, incoming: int) -> None:
         """Rotate if writing ``incoming`` more bytes would exceed the cap."""

@@ -57,8 +57,17 @@ class Decision:
     """Admission verdict; ``retry_after_s`` is meaningful when shed."""
 
     admitted: bool
-    reason: str = "ok"  # ok | rate | inflight | deadline
+    reason: str = "ok"  # ok | rate | inflight | deadline | bypass
     retry_after_s: float = 0.0
+
+
+# Closed label vocabulary for the decisions counter: a new shed reason
+# cannot silently mint a new metric series without touching this table.
+_SHED_LABELS = {
+    "rate": "shed_rate",
+    "inflight": "shed_inflight",
+    "deadline": "shed_deadline",
+}
 
 
 class TokenBucket:
@@ -156,9 +165,9 @@ class AdmissionController:
             keys = self.buckets if self.buckets else (0,)
             self._limiters = {k: TokenBucket(rate_qps, b) for k in keys}
         self._lock = threading.Lock()
-        self._inflight = 0
-        self._service_ewma_s = 0.0
-        self.stats = AdmissionStats()
+        self._inflight = 0  #: guarded by self._lock
+        self._service_ewma_s = 0.0  #: guarded by self._lock
+        self.stats = AdmissionStats()  #: guarded by self._lock
         # Observability: None => process default registry; pass
         # obs_metrics.NULL_REGISTRY to disable. Every admit() outcome becomes
         # a labelled counter tick and a structured "admission" event carrying
@@ -216,9 +225,12 @@ class AdmissionController:
         # Instrumentation outside the admission lock (the event log does
         # file IO): one labelled counter tick + one structured event that
         # carries the handler thread's current trace ID.
-        outcome = (decision.reason if decision.reason in ("bypass",)
-                   else "admitted" if decision.admitted
-                   else f"shed_{decision.reason}")
+        if decision.reason == "bypass":
+            outcome = "bypass"
+        elif decision.admitted:
+            outcome = "admitted"
+        else:
+            outcome = _SHED_LABELS.get(decision.reason, "shed_other")
         self._m_decisions.inc(outcome=outcome)
         self._m_inflight.set(inflight)
         obs_trace.emit(

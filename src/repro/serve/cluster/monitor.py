@@ -89,11 +89,11 @@ class FleetMonitor:
         self.slo_engine = SLOEngine(
             self.scraper, slos, event_log=log,
             clock=scraper_kwargs.get("clock", time.monotonic))
-        self._slo_status: Dict[str, dict] = {}
+        self._slo_status: Dict[str, dict] = {}  #: guarded by self._status_lock
         self._status_lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
-        self.ticks = 0
+        self.ticks = 0  #: guarded by self._status_lock
 
     # -- the tick -------------------------------------------------------------
     def tick(self) -> Dict[str, dict]:
@@ -135,6 +135,11 @@ class FleetMonitor:
         self._stop.set()
         self._thread.join(timeout=self.interval_s + 30.0)
         self._thread = None
+
+    def tick_count(self) -> int:
+        """Completed monitor cycles (thread-safe read for handlers)."""
+        with self._status_lock:
+            return self.ticks
 
     # -- endpoint payloads ----------------------------------------------------
     def fleet_metrics(self) -> str:
@@ -194,7 +199,7 @@ class _MonitorHandler(BaseHTTPRequestHandler):
             elif self.path == "/fleet/health":
                 payload = self.monitor.fleet_health()
             elif self.path == "/healthz":
-                payload = {"ok": True, "ticks": self.monitor.ticks}
+                payload = {"ok": True, "ticks": self.monitor.tick_count()}
             else:
                 self._send(404, json.dumps(
                     {"error": f"no route {self.path}"}).encode(),

@@ -106,7 +106,7 @@ def run_worker(cfg: dict) -> None:
         time.sleep(0.2)
     if not poller.poll_once():
         raise RuntimeError(
-            f"initial artifact fetch failed: {poller.last_error}"
+            f"initial artifact fetch failed: {poller.status()['last_error']}"
         )
 
     httpd, _ = start_http_server(

@@ -185,9 +185,13 @@ class ArtifactPoller:
         self.interval_s = float(interval_s)
         self.warmup = warmup
         self.on_swap = on_swap
-        self.version: Optional[str] = None
-        self.last_error: Optional[str] = None
-        self.swaps = 0
+        # Poll state is written by the daemon thread and read by the
+        # replica main thread (/stats, startup error reporting) — all
+        # access goes through self._lock; external readers use status().
+        self._lock = threading.Lock()
+        self.version: Optional[str] = None  #: guarded by self._lock
+        self.last_error: Optional[str] = None  #: guarded by self._lock
+        self.swaps = 0  #: guarded by self._lock
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
@@ -206,22 +210,39 @@ class ArtifactPoller:
                 self.target.warmup(model)
             self.target.swap_model(model)
 
+    def status(self) -> dict:
+        """Consistent snapshot of the poll state (thread-safe)."""
+        with self._lock:
+            return {"version": self.version, "swaps": self.swaps,
+                    "last_error": self.last_error}
+
     def poll_once(self) -> bool:
-        """Check LATEST; fetch + swap if it moved. Returns True on a swap."""
+        """Check LATEST; fetch + swap if it moved. Returns True on a swap.
+
+        The fetch + warmup + swap runs outside the lock (it does file IO
+        and possibly a compile); only the published poll state is guarded.
+        Called from the daemon thread and, for the initial fetch, from the
+        replica main thread before the thread starts — never concurrently
+        with itself.
+        """
         try:
             version = latest_version(self.store_dir)
-            if version is None or version == self.version:
+            with self._lock:
+                current = self.version
+            if version is None or version == current:
                 return False
             model, version, manifest = fetch_servable(self.store_dir, version)
             self._swap_into_target(model, manifest.get("name", "default"))
-            self.version = version
-            self.swaps += 1
-            self.last_error = None
+            with self._lock:
+                self.version = version
+                self.swaps += 1
+                self.last_error = None
             if self.on_swap is not None:
                 self.on_swap(version, manifest)
             return True
         except Exception as e:  # keep serving the old version
-            self.last_error = f"{type(e).__name__}: {e}"
+            with self._lock:
+                self.last_error = f"{type(e).__name__}: {e}"
             return False
 
     def start(self) -> None:

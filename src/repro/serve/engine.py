@@ -74,14 +74,16 @@ class EngineStats:
     so increments go through an internal lock.
     """
 
-    requests: int = 0
-    batches: int = 0  # jitted executions (microbatching => <= requests)
-    rows: int = 0  # real query rows served
-    padded_rows: int = 0  # phantom rows added by bucketing
-    coalesced: int = 0  # requests that shared a batch with another
+    requests: int = 0  #: guarded by self._lock
+    batches: int = 0  #: guarded by self._lock (jitted executions)
+    rows: int = 0  #: guarded by self._lock (real query rows served)
+    padded_rows: int = 0  #: guarded by self._lock (bucketing phantoms)
+    coalesced: int = 0  #: guarded by self._lock (requests sharing a batch)
+    #: guarded by self._lock
     per_bucket: dict = field(default_factory=dict)
     # Per-boundary (non-cumulative) dispatch-latency counts over
     # ``_LATENCY_BOUNDS`` plus a final +Inf slot; feeds latency_p50/p99.
+    #: guarded by self._lock
     latency_counts: list = field(
         default_factory=lambda: [0] * (len(_LATENCY_BOUNDS) + 1)
     )
@@ -168,7 +170,7 @@ class BucketedEngine:
         self.buckets = tuple(sorted({int(b) for b in buckets}))
         self.bm = int(bm)
         self.bn = int(bn)
-        self._model = model
+        self._model = model  #: guarded by self._model_lock
         self._model_lock = threading.Lock()
 
         # Observability: None => the process default registry (scraped by

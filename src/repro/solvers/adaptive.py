@@ -52,7 +52,7 @@ configured behaviour. See ``docs/adaptive.md`` for the full contract.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

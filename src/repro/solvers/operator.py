@@ -18,8 +18,7 @@ far-away pseudo-points whose kernel row is exactly zero, see
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from functools import partial
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import jax
@@ -84,6 +83,7 @@ def kernel_mvm_tiled(
 class HOperator:
     """H_theta = K(x, x; theta) + sigma^2 I as a linear operator."""
 
+    # repro-lint: disable=config-static-array -- closure-captured operator, frozen for immutability; never hashed into a jit cache key
     x: jax.Array  # (n, d) training inputs
     params: HyperParams
     kind: Optional[str] = None  # None => params.kernel

@@ -150,6 +150,7 @@ def solve_sgd(
             v=freeze(active, v, s.v),
             m=freeze(active, m, s.m),
             r=freeze(active, r, s.r),
+            # repro-lint: disable=freeze-mask -- key advances on frozen lanes by design: draws stay decorrelated and masked v/m/r never see it
             key=key,
             t=s.t + active.astype(jnp.int32),
             res_y=freeze(active, res_y, s.res_y),

@@ -1,8 +1,5 @@
-import os
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 # Smoke tests and benches must see 1 device (the dry-run sets its own flag

@@ -1,0 +1,23 @@
+"""Seeded config-discipline violations (exact lines asserted in tests)."""
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+
+from repro.solvers.base import SolverNumerics
+
+
+@dataclass(frozen=True)
+class FrozenCfg:
+    rank: int
+    weights: jax.Array  # LINE 13: config-static-array
+
+
+def cache_key(numerics: SolverNumerics):
+    table = {numerics.tolerance: 1}  # LINE 17: config-static-traced
+    return table, hash(numerics)  # LINE 18: config-static-traced
+
+
+@partial(jax.jit, static_argnames=("numerics",))  # LINE 21: config-static-traced
+def step(x, numerics: SolverNumerics):
+    return x * numerics.learning_rate

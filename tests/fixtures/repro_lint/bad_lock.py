@@ -1,0 +1,29 @@
+"""Seeded lock-discipline violations (exact lines asserted in tests)."""
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0  #: guarded by self._lock
+
+    def tick(self):
+        self.count += 1  # LINE 11: lock-discipline (no lock held)
+
+    def _drain_locked(self):
+        self.count = 0
+
+    def reset(self):
+        self._drain_locked()  # LINE 17: lock-discipline (_locked outside lock)
+
+    def snapshot(self):
+        with self._lock:
+            return self.count
+
+
+class Handler:
+    def __init__(self, worker):
+        self.worker = worker
+
+    def healthz(self):
+        return {"count": self.worker.count}  # LINE 29: lock-discipline

@@ -1,0 +1,16 @@
+"""Seeded telemetry-hygiene violations (exact lines asserted in tests)."""
+
+
+class Frontend:
+    def __init__(self, registry, log):
+        self._m_requests = registry.counter(
+            "x_requests_total", "Requests", labelnames=("path",))
+        self.log = log
+
+    def observe(self, path, user_id, dur_ms):
+        self._m_requests.inc(path=f"/q/{user_id}")  # LINE 11: telemetry-label
+        label = "p_" + path
+        self._m_requests.inc(path=label)  # LINE 13: telemetry-label (local)
+        self.log.emit("requst", path=path)  # LINE 14: unknown event kind
+        self.log.emit("request", method="GET",
+                      pathname=path)  # LINE 15-16: off-schema key

@@ -1,0 +1,18 @@
+"""Seeded trace-safety violations (exact lines asserted in tests)."""
+import time
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def body(state):
+    val = jnp.sin(state)
+    if val > 0:  # LINE 10: trace-python-branch
+        val = val + 1.0
+    t0 = time.time()  # LINE 12: trace-impure-call
+    x = float(val)  # LINE 13: trace-host-sync
+    return state + x + t0
+
+
+def run(n):
+    return lax.while_loop(lambda s: s < n, body, 0.0)

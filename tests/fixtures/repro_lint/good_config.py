@@ -1,0 +1,23 @@
+"""Config-disciplined twin of bad_config.py: numerics stay traced."""
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+
+from repro.solvers.base import SolverNumerics
+
+
+@dataclass(frozen=True)
+class FrozenCfg:
+    rank: int
+    tol_exponent: int  # scalars only: hashes stably into jit cache keys
+
+
+def cache_key(cfg: FrozenCfg):
+    return {cfg: 1}, hash(cfg)  # static config IS the cache key
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def step(x, numerics: SolverNumerics, cfg: FrozenCfg):
+    del cfg
+    return x * numerics.learning_rate  # numerics ride as a traced pytree

@@ -1,0 +1,26 @@
+"""Freeze-clean twin of bad_freeze.py: every update masked or gated."""
+from typing import NamedTuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.solvers.base import freeze
+
+
+class _ToyState(NamedTuple):
+    v: jnp.ndarray
+    t: jnp.ndarray
+    res: jnp.ndarray
+
+
+def solve(active, s0):
+    def body(s):
+        v = s.v * 0.5
+        res = jnp.abs(v).sum()
+        return _ToyState(
+            v=freeze(active, v, s.v),
+            t=s.t + active.astype(jnp.int32),
+            res=freeze(active, res, s.res),
+        )
+
+    return lax.while_loop(lambda s: jnp.any(s.t < 3), body, s0)

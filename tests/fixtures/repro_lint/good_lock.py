@@ -1,0 +1,31 @@
+"""Lock-clean twin of bad_lock.py: guarded state behind its lock."""
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0  #: guarded by self._lock
+
+    def tick(self):
+        with self._lock:
+            self.count += 1
+
+    def _drain_locked(self):
+        self.count = 0
+
+    def reset(self):
+        with self._lock:
+            self._drain_locked()
+
+    def snapshot(self):
+        with self._lock:
+            return self.count
+
+
+class Handler:
+    def __init__(self, worker):
+        self.worker = worker
+
+    def healthz(self):
+        return {"count": self.worker.snapshot()}  # locked accessor

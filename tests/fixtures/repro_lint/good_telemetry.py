@@ -1,0 +1,16 @@
+"""Telemetry-clean twin of bad_telemetry.py: bounded labels, schema'd events."""
+
+_ROUTES = ("/predict", "/stats", "/metrics")
+
+
+class Frontend:
+    def __init__(self, registry, log):
+        self._m_requests = registry.counter(
+            "x_requests_total", "Requests", labelnames=("path",))
+        self.log = log
+
+    def observe(self, path, status, dur_ms):
+        route = path if path in _ROUTES else "other"  # bounded vocabulary
+        self._m_requests.inc(path=route)
+        self.log.emit("request", method="GET", path=route, status=status,
+                      dur_ms=dur_ms)

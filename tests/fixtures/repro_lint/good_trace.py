@@ -1,0 +1,17 @@
+"""Trace-safe twin of bad_trace.py: masks, no host syncs, clocks outside."""
+import time
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def body(state):
+    val = jnp.sin(state)
+    val = jnp.where(val > 0, val + 1.0, val)
+    return state + val
+
+
+def run(n):
+    t0 = time.time()  # host side: not reachable from a traced entry point
+    out = lax.while_loop(lambda s: s < n, body, 0.0)
+    return out, time.time() - t0

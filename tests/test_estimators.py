@@ -2,7 +2,6 @@
 (App. A.1), and gradient-estimate accuracy for both estimators."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import (
@@ -14,8 +13,6 @@ from repro.core import (
     probe_targets,
 )
 from repro.core.gradients import exact_grad_reference
-from repro.gp.hyperparams import HyperParams
-from repro.gp.kernels_math import regularised_kernel_matrix
 
 
 def test_initial_distance_theory(gp_problem):

@@ -20,7 +20,6 @@ from repro.obs.metrics import (
     quantile_from_buckets,
 )
 from repro.obs.scrape import (
-    Family,
     FleetScraper,
     parse_prometheus,
     render_families,

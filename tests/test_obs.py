@@ -12,7 +12,6 @@ import numpy as np
 import pytest
 
 from repro.gp.hyperparams import HyperParams
-from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import MetricsRegistry, NullRegistry
 from repro.solvers import (
@@ -229,7 +228,6 @@ def test_trace_propagates_through_two_replica_cluster(tmp_path):
     from repro.data.synthetic import make_gp_regression
     from repro.serve import export_servable
     from repro.serve.cluster import ReplicaSupervisor, publish_servable
-    from repro.serve.cluster.replica import _http_json
 
     x, y = make_gp_regression(jax.random.PRNGKey(0), 160, 2, noise=0.2)
     xq = x[128:132]

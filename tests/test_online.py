@@ -17,7 +17,6 @@ from repro.serve import (
     GROWTH_GEOMETRIC,
     BucketedEngine,
     OnlineGP,
-    export_servable,
     servable_predict,
 )
 from repro.serve.cluster.admission import AdmissionController

@@ -18,7 +18,6 @@ from repro.core import (
     init_outer_state,
     outer_step,
     pathwise_predict,
-    predictive_metrics,
 )
 from repro.gp.hyperparams import HyperParams
 from repro.solvers import SolverConfig
@@ -118,9 +117,9 @@ def test_pathwise_predictions_match_exact_posterior(gp_problem):
     params_prev = st.params  # predictions use the params the carry solved
     # re-solve at the CURRENT params for a clean comparison
     st2, _ = outer_step(st, x, y, cfg)
-    pred = pathwise_predict(x, xs, st2.carry_v, st2.probes, st.params,
+    pred = pathwise_predict(x, xs, st2.carry_v, st2.probes, params_prev,
                             bm=64, bn=64)
-    ex = exact_posterior(x, y, xs, st.params)
+    ex = exact_posterior(x, y, xs, params_prev)
     err_mean = float(jnp.max(jnp.abs(pred.mean - ex.mean)))
     assert err_mean < 0.1
     # variance within sampling error of the exact latent variance

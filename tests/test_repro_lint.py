@@ -1,0 +1,162 @@
+"""repro-lint gates: seeded fixtures hit exact rules/lines, the
+suppression/baseline round-trip holds, and the live tree stays clean
+(tools/repro_lint.py is also a standalone static-lint CI job)."""
+import shutil
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+from repro.analysis import (config_discipline, freeze_mask,  # noqa: E402
+                            lock_discipline, runner, telemetry, trace_safety)
+
+FIXTURES = REPO / "tests" / "fixtures" / "repro_lint"
+
+
+def _findings(checker, name):
+    return checker.run([FIXTURES / name], REPO)
+
+
+def _pairs(findings):
+    return [(f.rule, f.line) for f in findings]
+
+
+# -- each checker: bad fixture yields exact (rule, line), good is clean ------
+
+def test_trace_safety_fixture():
+    assert _pairs(_findings(trace_safety, "bad_trace.py")) == [
+        ("trace-python-branch", 10),
+        ("trace-impure-call", 12),
+        ("trace-host-sync", 13),
+    ]
+    assert _findings(trace_safety, "good_trace.py") == []
+
+
+def test_config_discipline_fixture():
+    assert _pairs(_findings(config_discipline, "bad_config.py")) == [
+        ("config-static-array", 13),
+        ("config-static-traced", 17),
+        ("config-static-traced", 18),
+        ("config-static-traced", 21),
+    ]
+    assert _findings(config_discipline, "good_config.py") == []
+
+
+def test_freeze_mask_fixture():
+    assert _pairs(_findings(freeze_mask, "bad_freeze.py")) == [
+        ("freeze-mask", 23),
+    ]
+    assert _findings(freeze_mask, "good_freeze.py") == []
+
+
+def test_lock_discipline_fixture():
+    assert _pairs(_findings(lock_discipline, "bad_lock.py")) == [
+        ("lock-discipline", 11),   # guarded attr touched without the lock
+        ("lock-discipline", 17),   # *_locked helper called outside a lock
+        ("lock-discipline", 29),   # foreign class reaches into guarded attr
+    ]
+    assert _findings(lock_discipline, "good_lock.py") == []
+
+
+def test_telemetry_fixture():
+    assert _pairs(_findings(telemetry, "bad_telemetry.py")) == [
+        ("telemetry-label", 11),
+        ("telemetry-label", 13),
+        ("telemetry-event-schema", 14),
+        ("telemetry-event-schema", 15),
+    ]
+    assert _findings(telemetry, "good_telemetry.py") == []
+
+
+def test_findings_carry_hints():
+    for f in _findings(freeze_mask, "bad_freeze.py"):
+        assert f.hint  # every finding ships a fix hint
+        assert "freeze(" in f.hint
+
+
+# -- CLI: nonzero exit + rule/line in output per seeded fixture --------------
+
+@pytest.mark.parametrize("fixture,subdir,expect", [
+    ("bad_trace.py", "src/repro/solvers", "[trace-python-branch]"),
+    ("bad_config.py", "src/repro/core", "[config-static-traced]"),
+    ("bad_freeze.py", "src/repro/solvers", "[freeze-mask]"),
+    ("bad_lock.py", "src/repro/serve", "[lock-discipline]"),
+    ("bad_telemetry.py", "src/repro/obs", "[telemetry-label]"),
+])
+def test_cli_fails_on_seeded_fixture(tmp_path, capsys, fixture, subdir,
+                                     expect):
+    dest = tmp_path / subdir
+    dest.mkdir(parents=True)
+    shutil.copy(FIXTURES / fixture, dest / fixture)
+    assert runner.main(["--root", str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert expect in out
+    assert f"{subdir}/{fixture}:" in out
+
+
+# -- suppression / baseline round-trip ---------------------------------------
+
+def _toy_repo(tmp_path, source):
+    sol = tmp_path / "src" / "repro" / "solvers"
+    sol.mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "analysis").mkdir()
+    (sol / "toy.py").write_text(source)
+    return sol / "toy.py"
+
+
+_BAD = (FIXTURES / "bad_freeze.py").read_text() if FIXTURES.exists() else ""
+_SUPPRESSED = _BAD.replace(
+    "            res=res,",
+    "            # repro-lint: disable=freeze-mask -- toy keeps res live\n"
+    "            res=res,")
+_NO_REASON = _BAD.replace(
+    "            res=res,",
+    "            # repro-lint: disable=freeze-mask\n"
+    "            res=res,")
+
+
+def test_suppression_baseline_round_trip(tmp_path, capsys):
+    toy = _toy_repo(tmp_path, _SUPPRESSED)
+    # Suppressed inline but not baselined: the ledger contract fails.
+    assert runner.main(["--root", str(tmp_path)]) == 1
+    assert "missing from" in capsys.readouterr().out
+    # --update-baseline records the reviewed entry; the tree goes clean.
+    assert runner.main(["--root", str(tmp_path), "--update-baseline"]) == 0
+    assert runner.main(["--root", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "1 baselined suppression" in out
+    # Dropping the inline comment revives the finding AND stales the entry.
+    toy.write_text(_BAD)
+    assert runner.main(["--root", str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "[freeze-mask]" in out and "stale entry" in out
+
+
+def test_suppression_requires_reason(tmp_path, capsys):
+    _toy_repo(tmp_path, _NO_REASON)
+    assert runner.main(["--root", str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "has no reason" in out
+
+
+def test_baseline_entries_have_inline_comments():
+    """Acceptance: every baseline entry maps to a live inline suppression."""
+    findings = runner.collect_findings(REPO)
+    _active, suppressed, errors = runner.partition(REPO, findings)
+    assert errors == []
+    assert runner.check_baseline(REPO, suppressed) == []
+    live = {(f.rule, f.path) for f, _ in suppressed}
+    from repro.analysis.common import load_baseline
+    for e in load_baseline(REPO / runner.BASELINE):
+        assert (e["rule"], e["path"]) in live
+        assert e["reason"].strip()
+
+
+# -- the live tree stays clean (tier-1 gate mirroring the CI job) ------------
+
+def test_live_tree_clean(capsys):
+    assert runner.main(["--root", str(REPO), "--check"]) == 0
+    assert "clean" in capsys.readouterr().out

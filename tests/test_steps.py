@@ -3,7 +3,6 @@ gradient compression error feedback, Adam reference behaviour."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.distributed.compression import compress, decompress, ef_init

@@ -1,0 +1,94 @@
+"""Regression tests for the lock-discipline findings repro-lint surfaced:
+the ArtifactPoller's unguarded poll state, the monitor handler's unlocked
+``ticks`` read, and the admission counter's unbounded f-string label."""
+import threading
+
+import pytest
+
+from repro.obs import metrics as obs_metrics
+from repro.serve.cluster.admission import AdmissionController, Priority
+from repro.serve.cluster.monitor import FleetMonitor
+from repro.serve.cluster.store import ArtifactPoller
+
+#: Closed outcome-label vocabulary of gp_admission_decisions_total.
+_OUTCOMES = {"admitted", "bypass", "shed_rate", "shed_inflight",
+             "shed_deadline", "shed_other"}
+
+
+def test_poller_status_is_locked_snapshot(tmp_path):
+    """status() reads the poll state under the poller's lock — including
+    concurrently with a poll_once() that is writing it."""
+    store = str(tmp_path)
+    # A LATEST pointer to a version directory that does not exist makes
+    # every poll fail after the version check: poll_once then writes
+    # last_error while the readers hammer status().
+    (tmp_path / "LATEST").write_text("v000001_feedface\n")
+    poller = ArtifactPoller(store, target=None, interval_s=60.0)
+
+    errors = []
+
+    def hammer():
+        for _ in range(200):
+            snap = poller.status()
+            if set(snap) != {"version", "swaps", "last_error"}:
+                errors.append(snap)
+
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for _ in range(50):
+        assert not poller.poll_once()
+    for t in threads:
+        t.join()
+    assert errors == []
+    snap = poller.status()
+    assert snap["swaps"] == 0 and snap["version"] is None
+    assert snap["last_error"]  # the failed fetch is visible to readers
+
+
+def test_poller_expire_never_blocks_on_missing_store(tmp_path):
+    """An empty store (no LATEST) polls clean: no swap, no error."""
+    poller = ArtifactPoller(str(tmp_path), target=None, interval_s=60.0)
+    assert not poller.poll_once()
+    assert poller.status() == {"version": None, "swaps": 0,
+                               "last_error": None}
+
+
+def test_monitor_tick_count_accessor():
+    """tick_count() (the /healthz read) agrees with fleet_slo()['ticks']
+    and goes through the status lock rather than the raw attribute."""
+    monitor = FleetMonitor(targets={}, interval_s=60.0)
+    assert monitor.tick_count() == 0
+    monitor.tick()
+    monitor.tick()
+    assert monitor.tick_count() == 2
+    assert monitor.fleet_slo()["ticks"] == 2
+
+
+@pytest.mark.parametrize("setup,expected", [
+    (dict(max_inflight=64), "admitted"),
+    (dict(max_inflight=0), "shed_inflight"),
+    (dict(rate_qps=1e-9, burst=1e-9, max_inflight=64), "shed_rate"),
+])
+def test_admission_outcome_labels_are_bounded(setup, expected):
+    """Every admit() outcome maps into the closed label vocabulary (the
+    old f-string spelling could mint a series per novel reason)."""
+    reg = obs_metrics.MetricsRegistry()
+    adm = AdmissionController(registry=reg, **setup)
+    adm.admit(rows=1)
+    fam = reg.counter("gp_admission_decisions_total", "Admission outcomes",
+                      labelnames=("outcome",))
+    series = fam.render()
+    assert len(series) == 1 and f'outcome="{expected}"' in series[0]
+    assert fam.value(outcome=expected) == 1.0
+
+
+def test_admission_bypass_label():
+    reg = obs_metrics.MetricsRegistry()
+    adm = AdmissionController(registry=reg, max_inflight=0)
+    decision = adm.admit(rows=1, priority=Priority.REFRESH)
+    assert decision.admitted and decision.reason == "bypass"
+    fam = reg.counter("gp_admission_decisions_total", "Admission outcomes",
+                      labelnames=("outcome",))
+    series = fam.render()
+    assert len(series) == 1 and 'outcome="bypass"' in series[0]

@@ -29,6 +29,7 @@ LINT_PACKAGES = (
     "src/repro/serve",
     "src/repro/online",
     "src/repro/obs",
+    "src/repro/analysis",
 )
 
 # Markdown files whose links must resolve (docs/*.md globbed separately).

@@ -1,0 +1,26 @@
+"""repro-lint CLI: project-invariant static analysis.
+
+Thin wrapper so the suite runs from a checkout without installing the
+package (mirrors ``tools/docs_lint.py``): puts ``src`` on ``sys.path``
+and delegates to :mod:`repro.analysis.runner`. Stdlib-only — no jax
+import — so it works in the bare ``static-lint`` CI job.
+
+Usage::
+
+    python tools/repro_lint.py --check            # exit 1 on findings
+    python tools/repro_lint.py --update-baseline  # refresh the ledger
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+_REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_REPO / "src"))
+
+from repro.analysis.runner import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:] + ([] if any(
+        a.startswith("--root") for a in sys.argv[1:])
+        else ["--root", str(_REPO)])))
